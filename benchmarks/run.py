@@ -1,0 +1,53 @@
+"""Benchmark orchestrator: one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, then a
+human-readable block per figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4] [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks import ablations, paper_figures, roofline_report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (30 traces x 2000 tasks)")
+    args = ap.parse_args()
+
+    benches = dict(paper_figures.ALL)
+    benches.update(ablations.ALL)
+    benches["roofline_table"] = roofline_report.main
+
+    print("name,us_per_call,derived")
+    blocks = []
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        rows, derived = fn(full=args.full)
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},{json.dumps(derived, default=float)}", flush=True)
+        blocks.append((name, rows, derived))
+
+    for name, rows, derived in blocks:
+        print(f"\n=== {name} ===")
+        if rows:
+            cols = list(rows[0].keys())
+            print(" | ".join(f"{c:>12s}" for c in cols))
+            for r in rows:
+                print(" | ".join(f"{str(r.get(c, '')):>12s}" for c in cols))
+        print(f"derived: {json.dumps(derived, default=float)}")
+
+    n_fail = sum(1 for _, _, d in blocks if d.get("pass") is False)
+    print(f"\n{len(blocks)} benchmarks; {n_fail} failed claims")
+
+
+if __name__ == "__main__":
+    main()

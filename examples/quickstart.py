@@ -1,0 +1,52 @@
+"""Quickstart: reproduce the paper's headline result in ~a minute on CPU.
+
+Simulates the Sec. VI synthetic HEC system (Table I EET, 4 machines x 4 task
+types, Poisson arrivals) under MM / MSD / MMU / ELARE / FELARE and prints the
+energy-latency trade-off plus the fairness picture — Figs. 3, 4, 6, 7 in
+miniature.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--tasks 1000] [--traces 8]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import api
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=800)
+    ap.add_argument("--traces", type=int, default=8)
+    ap.add_argument("--rates", type=float, nargs="+",
+                    default=[2.0, 4.0, 8.0])
+    args = ap.parse_args()
+
+    spec = api.paper_system()
+    heuristics = ["MM", "MSD", "MMU", "ELARE", "FELARE"]
+
+    print(f"{'heuristic':9s} {'rate':>5s} {'ontime%':>8s} {'waste%':>7s} "
+          f"{'cancel':>7s} {'miss':>6s}  per-type completion")
+    for h in heuristics:
+        results = api.run_study(h, args.rates, spec, n_traces=args.traces,
+                                n_tasks=args.tasks)
+        for r in results:
+            m = r.metrics
+            per_type = " ".join(
+                f"{x:.2f}" for x in r.completion_rate_by_type)
+            print(f"{h:9s} {r.arrival_rate:5.1f} "
+                  f"{100*r.completion_rate:8.1f} "
+                  f"{r.wasted_energy_pct:7.2f} "
+                  f"{int(np.sum(m.cancelled_by_type)):7d} "
+                  f"{int(np.sum(m.missed_by_type)):6d}  [{per_type}]")
+        print()
+
+    print("Expected pattern (the paper's claims):")
+    print("  * ELARE/FELARE: far lower waste% at low/moderate rates "
+          "(proactive cancellation instead of deadline misses)")
+    print("  * FELARE: per-type completion rates pulled together "
+          "(fairness) at ~unchanged collective rate")
+
+
+if __name__ == "__main__":
+    main()

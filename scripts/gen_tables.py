@@ -1,0 +1,49 @@
+"""Generate markdown tables for EXPERIMENTS.md from dry-run JSONL artifacts."""
+import json, sys, pathlib
+
+def load(path):
+    by = {}
+    p = pathlib.Path(path)
+    if not p.exists(): return by
+    for line in p.read_text().splitlines():
+        try: r = json.loads(line)
+        except json.JSONDecodeError: continue
+        by[(r["arch"], r["shape"], r["mesh"])] = r
+    return by
+
+def roofline_md(by, mesh):
+    out = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | dominant | useful | MFU@roofline |",
+           "|---|---|---:|---:|---:|---|---:|---:|"]
+    for (a, s, m), r in sorted(by.items()):
+        if m != mesh: continue
+        if r["status"] == "skip":
+            out.append(f"| {a} | {s} | — | — | — | SKIP(full-attn) | — | — |"); continue
+        if r["status"] != "ok":
+            out.append(f"| {a} | {s} | FAIL | | | | | |"); continue
+        ro = r["roofline"]
+        out.append(f"| {a} | {s} | {ro['t_comp_s']*1e3:.2f} | {ro['t_mem_s']*1e3:.2f} | "
+                   f"{ro['t_coll_s']*1e3:.2f} | {ro['dominant']} | {ro['useful_frac']:.3f} | {ro['mfu']:.4f} |")
+    return "\n".join(out)
+
+def dryrun_md(by):
+    out = ["| arch | shape | pod | multipod | compile (s) | HLO lines | temp bytes/dev |",
+           "|---|---|---|---|---:|---:|---:|"]
+    archs = sorted(set(k[0] for k in by))
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for a in archs:
+        for s in shapes:
+            p = by.get((a, s, "pod")); m = by.get((a, s, "multipod"))
+            if p is None: continue
+            st = lambda r: {"ok": "✓", "skip": "skip", "fail": "✗"}.get(r["status"], "?") if r else "—"
+            comp = p.get("compile_s", "")
+            hlo = p.get("hlo_lines", "")
+            mem = p.get("memory") or {}
+            tmp = mem.get("temp_size_in_bytes", "")
+            tmp = f"{tmp/2**30:.2f} GiB" if tmp != "" else ""
+            out.append(f"| {a} | {s} | {st(p)} | {st(m)} | {comp} | {hlo} | {tmp} |")
+    return "\n".join(out)
+
+if __name__ == "__main__":
+    kind, path, mesh = sys.argv[1], sys.argv[2], (sys.argv[3] if len(sys.argv) > 3 else "pod")
+    by = load(path)
+    print(roofline_md(by, mesh) if kind == "roofline" else dryrun_md(by))

@@ -1,0 +1,202 @@
+"""FELARE as the first-class request router of the serving runtime.
+
+The router owns: per-machine bounded local queues, the EET matrix (roofline-
+seeded, refined online by an EMA of observed latencies — which doubles as
+STRAGGLER MITIGATION: a slow group's EET row grows, its c_ij estimates grow,
+and FELARE organically routes around it while suffered-type boosting prevents
+starvation), per-type completion-rate tracking, and the energy ledger.
+
+``Router.on_request`` / ``on_completion`` mirror the paper's mapping events;
+the mapping decision itself is the same jitted heuristic the simulator uses
+(repro.core.heuristics) — one code path from the paper's Algorithm 1 to the
+production router.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import equations, fairness, heuristics
+from repro.core.heuristics import MachineView
+from repro.core.types import SystemArrays
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    task_type: int
+    arrival: float
+    deadline: float
+    payload: object = None
+    # lifecycle
+    machine: int | None = None
+    start: float | None = None
+    finish: float | None = None
+    status: str = "pending"   # pending|queued|running|completed|missed|cancelled
+
+
+class Router:
+    def __init__(self, eet: np.ndarray, p_dyn, p_idle, *, queue_size=2,
+                 heuristic: str = "FELARE", fairness_factor: float = 1.0,
+                 eet_ema: float = 0.2, now_fn: Callable[[], float] = time.monotonic):
+        self.eet = np.asarray(eet, np.float32).copy()
+        self.p_dyn = np.asarray(p_dyn, np.float32)
+        self.p_idle = np.asarray(p_idle, np.float32)
+        self.S, self.M = self.eet.shape
+        self.Q = queue_size
+        self.heuristic = heuristics.get(heuristic)
+        self.f = fairness_factor
+        self.ema = eet_ema
+        self.now_fn = now_fn
+
+        self.pending: dict[int, Request] = {}
+        self.queues: list[deque[Request]] = [deque() for _ in range(self.M)]
+        self.running: list[Request | None] = [None] * self.M
+        self.run_end_exp = np.zeros(self.M, np.float64)
+        self.completed = np.zeros(self.S, np.int64)
+        self.missed = np.zeros(self.S, np.int64)
+        self.cancelled = np.zeros(self.S, np.int64)
+        self.arrived = np.zeros(self.S, np.int64)
+        self.energy = 0.0
+        self.energy_wasted = 0.0
+
+    # ------------------------------------------------------------------
+    def on_request(self, req: Request):
+        self.pending[req.rid] = req
+        self.arrived[req.task_type] += 1
+        return self._map_event()
+
+    def on_completion(self, machine: int, *, success: bool, latency: float):
+        req = self.running[machine]
+        assert req is not None
+        now = self.now_fn()
+        req.finish = now
+        req.status = "completed" if success else "missed"
+        dur = now - (req.start if req.start is not None else now)
+        e = self.p_dyn[machine] * dur
+        self.energy += e
+        if success:
+            self.completed[req.task_type] += 1
+        else:
+            self.missed[req.task_type] += 1
+            self.energy_wasted += e
+        # EET EMA refresh -> straggler adaptation
+        i, j = req.task_type, machine
+        self.eet[i, j] = ((1 - self.ema) * self.eet[i, j]
+                          + self.ema * latency)
+        self.running[machine] = None
+        started = self._start_tasks()
+        return self._map_event() + started
+
+    # ------------------------------------------------------------------
+    def _suffered(self):
+        return np.asarray(fairness.suffered_types(
+            jnp.asarray(self.completed.astype(np.float32)),
+            jnp.asarray(self.arrived.astype(np.float32)), self.f))
+
+    def _map_event(self):
+        """Run one mapping event over the live pending set. Returns newly
+        started requests (machine, Request) for the executor to launch."""
+        now = self.now_fn()
+        pend_list = list(self.pending.values())
+        queued_reqs = [r for q in self.queues for r in q]
+        allr = pend_list + queued_reqs
+        n = len(allr)
+        if n == 0:
+            return self._start_tasks()
+        ttype = jnp.asarray([r.task_type for r in allr], jnp.int32)
+        deadline = jnp.asarray([r.deadline for r in allr], jnp.float32)
+        pending_mask = jnp.asarray(
+            [r.status == "pending" for r in allr])
+        queue = np.full((self.M, self.Q), -1, np.int32)
+        for j, q in enumerate(self.queues):
+            for s, req in enumerate(q):
+                queue[j, s] = len(pend_list) + queued_reqs.index(req)
+        avail = np.where(
+            [r is not None for r in self.running],
+            np.maximum(self.run_end_exp, now), now).astype(np.float32)
+        view = MachineView(
+            avail_base=jnp.asarray(avail),
+            queue=jnp.asarray(queue),
+            qlen=jnp.asarray([len(q) for q in self.queues], jnp.int32),
+        )
+        sysarr = SystemArrays(
+            eet=jnp.asarray(self.eet), p_dyn=jnp.asarray(self.p_dyn),
+            p_idle=jnp.asarray(self.p_idle))
+        action = self.heuristic(
+            jnp.float32(now), pending_mask, ttype, deadline, view, sysarr,
+            jnp.asarray(self._suffered()))
+
+        # queue evictions
+        qd = np.asarray(action.queue_drop)
+        for j in range(self.M):
+            victims = [s for s in range(self.Q)
+                       if s < len(self.queues[j]) and qd[j, s]]
+            for s in reversed(victims):
+                victim = self.queues[j][s]
+                del self.queues[j][s]
+                victim.status = "cancelled"
+                self.cancelled[victim.task_type] += 1
+        # drops
+        drops = np.asarray(action.drop)
+        for k, r in enumerate(allr):
+            if k < len(pend_list) and drops[k] and r.status == "pending":
+                r.status = "cancelled"
+                self.cancelled[r.task_type] += 1
+                self.pending.pop(r.rid, None)
+        # assignments
+        assign = np.asarray(action.assign)
+        for j in range(self.M):
+            k = int(assign[j])
+            if k < 0 or k >= len(allr):
+                continue
+            r = allr[k]
+            if r.status == "pending" and len(self.queues[j]) < self.Q:
+                r.status = "queued"
+                r.machine = j
+                self.queues[j].append(r)
+                self.pending.pop(r.rid, None)
+        return self._start_tasks()
+
+    def _start_tasks(self):
+        """Pop queue heads onto idle machines; returns [(machine, Request)]."""
+        now = self.now_fn()
+        started = []
+        for j in range(self.M):
+            while self.running[j] is None and self.queues[j]:
+                req = self.queues[j].popleft()
+                if now >= req.deadline:
+                    req.status = "missed"
+                    self.missed[req.task_type] += 1
+                    continue
+                req.status = "running"
+                req.start = now
+                self.running[j] = req
+                self.run_end_exp[j] = float(equations.completion_time(
+                    now, self.eet[req.task_type, j], req.deadline))
+                started.append((j, req))
+        return started
+
+    # ------------------------------------------------------------------
+    def metrics(self):
+        cr = np.where(self.arrived > 0,
+                      self.completed / np.maximum(self.arrived, 1), 1.0)
+        return {
+            "completed": self.completed.copy(),
+            "missed": self.missed.copy(),
+            "cancelled": self.cancelled.copy(),
+            "arrived": self.arrived.copy(),
+            "completion_rate_by_type": cr,
+            "collective_completion_rate":
+                float(self.completed.sum() / max(self.arrived.sum(), 1)),
+            "jain_fairness": float(fairness.jain_index(jnp.asarray(
+                cr.astype(np.float32)))),
+            "energy": self.energy,
+            "energy_wasted": self.energy_wasted,
+            "eet": self.eet.copy(),
+        }

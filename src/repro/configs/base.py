@@ -1,0 +1,136 @@
+"""Unified model configuration for all assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    pad_vocab_to: int = 1       # pad embedding rows to a multiple (TP shard)
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    mlp: str = "swiglu"         # swiglu | gelu
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = True
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    moe_group: int = 4096       # tokens per dispatch group (linear dispatch)
+    # SSM (Mamba2) / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    attn_every: int = 0         # zamba2: shared attn block period (layers)
+    # xLSTM
+    slstm_every: int = 0        # sLSTM at every k-th layer (rest mLSTM)
+    # encoder-decoder (whisper backbone)
+    encoder_layers: int = 0
+    # vlm
+    n_patches: int = 0
+    # numerics
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    # kernel selection: xla | pallas | pallas_interpret
+    attn_impl: str = "xla"
+    ssm_impl: str = "xla"
+    # distribution
+    remat: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.pad_vocab_to
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def act_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def p_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """A reduced sibling config (smoke tests) — same family/topology."""
+        return dataclasses.replace(self, **kw)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (matches init; used for 6ND rooflines)."""
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        q = d * self.n_heads * hd
+        kv = 2 * d * self.n_kv_heads * hd
+        o = self.n_heads * hd * d
+        attn = q + kv + o
+        if self.mlp == "swiglu":
+            mlp = 3 * d * ff
+        else:
+            mlp = 2 * d * ff
+        per_layer = 0
+        if self.family in ("dense", "vlm"):
+            per_layer = attn + mlp + 2 * d
+            body = self.n_layers * per_layer
+        elif self.family == "moe":
+            router = d * self.n_experts
+            emlp = self.n_experts * (3 * d * ff)
+            body = self.n_layers * (attn + emlp + router + 2 * d)
+        elif self.family == "ssm":  # xLSTM
+            di = self.d_model  # mLSTM/sLSTM operate at model width here
+            per = 4 * d * di + di * d + 3 * d  # qkv+gates approx + out + norms
+            mlp_x = 2 * d * int(2.67 * d)
+            body = self.n_layers * (per + mlp_x)
+        elif self.family == "hybrid":  # zamba2
+            din, ds, nh = self.d_inner, self.ssm_state, self.ssm_heads
+            in_proj = d * (2 * din + 2 * ds + nh)
+            out_proj = din * d
+            mamba = in_proj + out_proj + self.ssm_conv * (din + 2 * ds) + 2 * nh
+            n_attn = self.n_layers // max(self.attn_every, 1)
+            shared = attn + mlp  # one shared block (counted once)
+            body = self.n_layers * (mamba + 2 * d) + shared + n_attn * 2 * d
+        elif self.family == "audio":
+            body = (self.n_layers + self.encoder_layers) * (attn + mlp + 2 * d)
+            body += self.n_layers * (attn + d)  # cross-attention
+        else:
+            raise ValueError(self.family)
+        emb = self.vocab_size * d
+        if not self.tie_embeddings:
+            emb *= 2
+        return body + emb
+
+    def active_params(self) -> int:
+        """Activated parameters per token (MoE: only routed experts)."""
+        if self.family != "moe":
+            return self.n_params()
+        d, ff = self.d_model, self.d_ff
+        full = self.n_params()
+        unused = self.n_layers * (
+            (self.n_experts - self.experts_per_token) * 3 * d * ff
+        )
+        return full - unused

@@ -1,0 +1,7 @@
+"""The paper's own workload: the 4x4 synthetic HEC system (Table I) plus the
+AWS scenario. Exposed as a 'config' so --arch paper-edge drives the simulator
+through the same launcher plumbing as the LM architectures."""
+from repro.core import api
+
+SYSTEM = api.paper_system()
+AWS = api.aws_system()

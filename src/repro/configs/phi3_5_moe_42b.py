@@ -1,0 +1,16 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 32L d4096 32H (GQA kv=8) expert ff=6400
+vocab=32064, MoE 16 experts top-2. [hf:microsoft/Phi-3.5-MoE-instruct; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=6400, vocab_size=32_064,
+    n_experts=16, experts_per_token=2,
+)
+
+SMOKE = CONFIG.scaled(
+    n_layers=2, d_model=128, n_heads=4, n_kv_heads=1, d_ff=192, vocab_size=256,
+    n_experts=4, experts_per_token=2,
+)

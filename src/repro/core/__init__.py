@@ -1,0 +1,20 @@
+"""FELARE core: the paper's scheduling contribution, in JAX.
+
+Public surface:
+  equations  — Eqs. 1-4 (completion time, energy, fairness limit, deadlines)
+  eet        — Table I, CVB synthesis, AWS scenario
+  workload   — Poisson trace generation
+  heuristics — ELARE / FELARE / MM / MSD / MMU
+  fairness   — completion rates, suffered task types (Alg. 4)
+  engine     — jittable/vmappable discrete-event simulator
+  pyengine   — independent pure-Python oracle
+  api        — experiment-level helpers (paper_system, run_study)
+"""
+from repro.core import api, eet, engine, equations, fairness, heuristics
+from repro.core import pyengine, workload
+from repro.core.types import Metrics, SystemSpec, Trace
+
+__all__ = [
+    "api", "eet", "engine", "equations", "fairness", "heuristics",
+    "pyengine", "workload", "Metrics", "SystemSpec", "Trace",
+]

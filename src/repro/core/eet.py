@@ -1,0 +1,76 @@
+"""Expected Execution Time (EET) matrices.
+
+Provides the paper's Table I verbatim, the Coefficient-of-Variation-Based
+(CVB) synthesis method [Ali et al. 2000] used to generate it, and the AWS
+scenario EET (t2.xlarge CPU vs g3s.xlarge GPU running FaceNet / DeepSpeech).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --- Table I of the paper (4 task types x 4 machine types, seconds) ---------
+TABLE_I = np.array(
+    [
+        [2.238, 1.696, 4.359, 0.736],
+        [2.256, 1.828, 4.377, 0.868],
+        [2.076, 1.531, 5.096, 0.865],
+        [2.092, 1.622, 4.388, 0.913],
+    ],
+    dtype=np.float32,
+)
+
+# Machine power profiles from Sec. VI-A, in units of the unit power ``p``.
+P_DYN = np.array([1.6, 3.0, 1.8, 1.5], dtype=np.float32)
+P_IDLE = np.full(4, 0.05, dtype=np.float32)
+
+# --- AWS scenario (Sec. VI-A, scenario i) ------------------------------------
+# Rows: face recognition (MTCNN+FaceNet+SVM), speech recognition (DeepSpeech).
+# Cols: t2.xlarge (Xeon CPU), g3s.xlarge (Tesla M60 GPU). Values are mean
+# end-to-end inference latencies (s) consistent with the published SmartSight /
+# E2C-Sim measurements; powers are the TDPs quoted in the paper (120 W, 300 W).
+AWS_EET = np.array(
+    [
+        [0.570, 0.270],   # face recognition: CPU vs GPU
+        [3.380, 0.980],   # speech recognition: CPU vs GPU
+    ],
+    dtype=np.float32,
+)
+AWS_P_DYN = np.array([120.0, 300.0], dtype=np.float32)
+AWS_P_IDLE = np.array([6.0, 15.0], dtype=np.float32)
+
+
+def cvb_eet(key, n_task_types, n_machines, mean_task=3.0, cv_task=0.6, cv_mach=0.6):
+    """Coefficient-of-Variation-Based EET synthesis [38].
+
+    Two nested Gamma draws: a per-task-type baseline q_i ~ Gamma with mean
+    ``mean_task`` and CV ``cv_task``; then row i is filled with draws from a
+    Gamma with mean q_i and CV ``cv_mach``. CVs control task/machine
+    heterogeneity (inconsistent heterogeneity emerges naturally).
+    """
+    k_task, k_mach = jax.random.split(key)
+    shape_t = 1.0 / cv_task**2
+    scale_t = mean_task * cv_task**2
+    q = jax.random.gamma(k_task, shape_t, (n_task_types,)) * scale_t  # (S,)
+
+    shape_m = 1.0 / cv_mach**2
+    scale_m = q[:, None] * cv_mach**2  # (S, 1)
+    eet = (
+        jax.random.gamma(k_mach, shape_m, (n_task_types, n_machines)) * scale_m
+    )
+    return eet.astype(jnp.float32)
+
+
+def sample_actual_exec(key, eet, task_type, cv_run=0.1):
+    """Sample per-task actual runtimes on every machine.
+
+    Actual execution time of task k (type i) on machine j ~ Gamma with mean
+    EET[i, j] and CV ``cv_run`` — the execution-time uncertainty the paper
+    models (Sec. VI-A).
+    """
+    eet = jnp.asarray(eet)
+    means = eet[task_type]  # (N, M)
+    shape = 1.0 / cv_run**2
+    draw = jax.random.gamma(key, shape, means.shape)
+    return (draw * (means * cv_run**2)).astype(jnp.float32)

@@ -1,0 +1,334 @@
+"""Discrete-event simulation engine for the HEC system, in pure JAX.
+
+The whole simulator is a ``lax.while_loop`` over events with fixed-shape
+state, so a full workload trace is one jittable computation and a batch of
+traces is one ``vmap``. Semantics follow Sec. III of the paper:
+
+  * mapping events fire on task arrival and task completion (plus a progress
+    event at the earliest pending deadline so stale tasks are always purged);
+  * machines serve their bounded local queues FCFS;
+  * a running task that passes its deadline is killed at the deadline (its
+    dynamic energy is wasted, Eq. 2 row 1);
+  * a queued task whose deadline passed before it starts is dropped with zero
+    energy (Eq. 2 row 3);
+  * per-type completion counters feed the fairness monitor continuously.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fairness
+from repro.core.heuristics import MachineView
+from repro.core.types import (
+    CANCELLED,
+    COMPLETED,
+    MISSED,
+    PENDING,
+    QUEUED,
+    RUNNING,
+    UNARRIVED,
+    Metrics,
+    SystemArrays,
+    Trace,
+)
+
+INF = jnp.float32(jnp.inf)
+
+
+class SimState(NamedTuple):
+    now: jnp.ndarray            # ()
+    status: jnp.ndarray         # (N,) int32
+    run_task: jnp.ndarray       # (M,) int32, -1 idle
+    run_start: jnp.ndarray      # (M,)
+    run_end_act: jnp.ndarray    # (M,) actual completion (inf if idle)
+    run_end_exp: jnp.ndarray    # (M,) expected completion (for the mapper)
+    run_success: jnp.ndarray    # (M,) bool
+    queue: jnp.ndarray          # (M, Q) int32, -1 empty
+    qlen: jnp.ndarray           # (M,) int32
+    busy_time: jnp.ndarray      # (M,)
+    e_dyn: jnp.ndarray          # ()
+    e_wasted: jnp.ndarray       # ()
+    completed: jnp.ndarray      # (S,) int32
+    missed: jnp.ndarray         # (S,) int32
+    cancelled: jnp.ndarray      # (S,) int32
+    arrived: jnp.ndarray        # (S,) int32
+    steps: jnp.ndarray          # () int32
+
+
+def _init_state(trace: Trace, n_machines: int, queue_size: int,
+                n_types: int) -> SimState:
+    n = trace.arrival.shape[0]
+    M, Q, S = n_machines, queue_size, n_types
+    f = jnp.float32
+    return SimState(
+        now=f(0.0),
+        status=jnp.full((n,), UNARRIVED, jnp.int32),
+        run_task=jnp.full((M,), -1, jnp.int32),
+        run_start=jnp.zeros((M,), f),
+        run_end_act=jnp.full((M,), jnp.inf, f),
+        run_end_exp=jnp.zeros((M,), f),
+        run_success=jnp.zeros((M,), bool),
+        queue=jnp.full((M, Q), -1, jnp.int32),
+        qlen=jnp.zeros((M,), jnp.int32),
+        busy_time=jnp.zeros((M,), f),
+        e_dyn=f(0.0),
+        e_wasted=f(0.0),
+        completed=jnp.zeros((S,), jnp.int32),
+        missed=jnp.zeros((S,), jnp.int32),
+        cancelled=jnp.zeros((S,), jnp.int32),
+        arrived=jnp.zeros((S,), jnp.int32),
+        steps=jnp.int32(0),
+    )
+
+
+def _next_event_time(st: SimState, trace: Trace) -> jnp.ndarray:
+    pending = st.status == PENDING
+    unarrived = st.status == UNARRIVED
+    t_arr = jnp.min(jnp.where(unarrived, trace.arrival, jnp.inf))
+    t_comp = jnp.min(st.run_end_act)
+    # progress guard: earliest pending deadline (so stale tasks get purged
+    # even when no machine is busy and no arrivals remain).
+    t_dead = jnp.min(jnp.where(pending, trace.deadline, jnp.inf))
+    return jnp.minimum(jnp.minimum(t_arr, t_comp), t_dead)
+
+
+def _finalize_completions(st: SimState, trace: Trace, sysarr: SystemArrays):
+    """Close out machines whose running task's actual end <= now."""
+    done = (st.run_task >= 0) & (st.run_end_act <= st.now)
+    idx = jnp.where(done, st.run_task, 0)
+    ttype = trace.task_type[idx]
+    dur = jnp.where(done, st.run_end_act - st.run_start, 0.0)
+    energy = sysarr.p_dyn * dur
+    ok = done & st.run_success
+    ko = done & ~st.run_success
+
+    completed = st.completed.at[ttype].add(ok.astype(jnp.int32))
+    missed = st.missed.at[ttype].add(ko.astype(jnp.int32))
+    e_dyn = st.e_dyn + energy.sum()
+    e_wasted = st.e_wasted + jnp.where(ko, energy, 0.0).sum()
+    busy = st.busy_time + dur
+    sidx = jnp.where(done, idx, st.status.shape[0])  # OOB sentinel -> dropped
+    status = st.status.at[sidx].set(
+        jnp.where(ok, COMPLETED, MISSED), mode="drop"
+    )
+    return st._replace(
+        status=status,
+        run_task=jnp.where(done, -1, st.run_task),
+        run_end_act=jnp.where(done, jnp.inf, st.run_end_act),
+        run_end_exp=jnp.where(done, st.now, st.run_end_exp),
+        run_success=jnp.where(done, False, st.run_success),
+        completed=completed,
+        missed=missed,
+        cancelled=st.cancelled,
+        e_dyn=e_dyn,
+        e_wasted=e_wasted,
+        busy_time=busy,
+    )
+
+
+def _admit_arrivals(st: SimState, trace: Trace):
+    newly = (st.status == UNARRIVED) & (trace.arrival <= st.now)
+    status = jnp.where(newly, PENDING, st.status)
+    arrived = st.arrived + jax.ops.segment_sum(
+        newly.astype(jnp.int32), trace.task_type, st.arrived.shape[0]
+    )
+    return st._replace(status=status, arrived=arrived)
+
+
+def _start_tasks(st: SimState, trace: Trace, sysarr: SystemArrays):
+    """Idle machines pop their queue head (one pop per machine per event).
+
+    A popped task whose deadline already passed "runs" for zero time with
+    success=False and zero energy — the next loop iteration (same timestamp)
+    finalizes it and pops again, which realizes Eq. 1/2's third row without
+    an inner loop.
+    """
+    M = st.run_task.shape[0]
+    can = (st.run_task < 0) & (st.qlen > 0)
+    head = jnp.where(can, st.queue[:, 0], 0)
+    ttype = trace.task_type[head]
+    dl = trace.deadline[head]
+    e_act = trace.exec_actual[head, jnp.arange(M)]
+    e_exp = sysarr.eet[ttype, jnp.arange(M)]
+    dead_on_arrival = st.now >= dl
+    end_act = jnp.where(
+        dead_on_arrival, st.now, jnp.minimum(st.now + e_act, dl)
+    )
+    success = ~dead_on_arrival & (st.now + e_act <= dl)
+    end_exp = jnp.where(
+        dead_on_arrival, st.now, jnp.minimum(st.now + e_exp, dl)
+    )
+
+    queue = jnp.where(
+        can[:, None],
+        jnp.concatenate(
+            [st.queue[:, 1:], jnp.full((M, 1), -1, jnp.int32)], axis=1
+        ),
+        st.queue,
+    )
+    status = st.status.at[jnp.where(can, head, st.status.shape[0])].set(
+        RUNNING, mode="drop"
+    )
+    return st._replace(
+        status=status,
+        run_task=jnp.where(can, head, st.run_task),
+        run_start=jnp.where(can, st.now, st.run_start),
+        run_end_act=jnp.where(can, end_act, st.run_end_act),
+        run_end_exp=jnp.where(can, end_exp, st.run_end_exp),
+        run_success=jnp.where(can, success, st.run_success),
+        queue=queue,
+        qlen=jnp.where(can, st.qlen - 1, st.qlen),
+    )
+
+
+def _apply_action(st: SimState, trace: Trace, action, n_types: int):
+    """Apply a MapAction: queue evictions, proactive drops, assignments."""
+    M, Q = st.queue.shape
+    # --- queue evictions (FELARE victims) -> CANCELLED ----------------------
+    victim = action.queue_drop & (st.queue >= 0)
+    vidx = jnp.where(victim, st.queue, st.status.shape[0])
+    status = st.status.at[vidx.reshape(-1)].set(CANCELLED, mode="drop")
+    cancelled = st.cancelled + jax.ops.segment_sum(
+        victim.reshape(-1).astype(jnp.int32),
+        trace.task_type[jnp.clip(vidx, 0, st.status.shape[0] - 1)].reshape(-1),
+        n_types,
+    )
+    # compact queues (stable: keep FCFS order of survivors)
+    keep = ~victim & (st.queue >= 0)
+    order = jnp.argsort(~keep, axis=1, stable=True)  # survivors first
+    queue = jnp.take_along_axis(jnp.where(keep, st.queue, -1), order, axis=1)
+    qlen = keep.sum(axis=1).astype(jnp.int32)
+
+    # --- proactive drops from the arriving queue ----------------------------
+    drop = action.drop & (status == PENDING)
+    status = jnp.where(drop, CANCELLED, status)
+    cancelled = cancelled + jax.ops.segment_sum(
+        drop.astype(jnp.int32), trace.task_type, n_types
+    )
+
+    # --- assignments: append to queue tails ---------------------------------
+    assign = action.assign  # (M,)
+    # guard: task must still be PENDING (not dropped above) and slot free
+    tstat = status[jnp.clip(assign, 0)]
+    ok = (assign >= 0) & (tstat == PENDING) & (qlen < Q)
+    slot = jnp.clip(qlen, 0, Q - 1)
+    queue = queue.at[jnp.arange(M), slot].set(
+        jnp.where(ok, assign, queue[jnp.arange(M), slot])
+    )
+    qlen = jnp.where(ok, qlen + 1, qlen)
+    status = status.at[jnp.where(ok, assign, st.status.shape[0])].set(
+        QUEUED, mode="drop"
+    )
+    return st._replace(status=status, queue=queue, qlen=qlen,
+                       cancelled=cancelled)
+
+
+def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
+                   queue_size: int, fairness_factor: float = 1.0,
+                   max_steps: int | None = None) -> Callable:
+    """Build ``simulate(trace) -> Metrics`` for one heuristic.
+
+    ``select_fn(now, pending, task_type, deadline, view, sysarr, suffered)``
+    is one of repro.core.heuristics.*; it is closed over statically so jit
+    specializes per heuristic.
+    """
+    S, M = sysarr.eet.shape
+
+    def simulate(trace: Trace) -> Metrics:
+        n = trace.arrival.shape[0]
+        steps_cap = max_steps if max_steps is not None else 8 * n + 64
+        st = _init_state(trace, M, queue_size, S)
+
+        def cond(st: SimState):
+            return (jnp.isfinite(_next_event_time(st, trace))
+                    & (st.steps < steps_cap))
+
+        def body(st: SimState):
+            t = _next_event_time(st, trace)
+            st = st._replace(now=jnp.maximum(t, st.now))
+            st = _finalize_completions(st, trace, sysarr)
+            st = _admit_arrivals(st, trace)
+
+            suffered = fairness.suffered_types(
+                st.completed, st.arrived, fairness_factor
+            )
+            view = MachineView(
+                avail_base=jnp.maximum(
+                    jnp.where(st.run_task >= 0, st.run_end_exp, st.now),
+                    st.now,
+                ),
+                queue=st.queue,
+                qlen=st.qlen,
+            )
+            action = select_fn(
+                st.now,
+                st.status == PENDING,
+                trace.task_type,
+                trace.deadline,
+                view,
+                sysarr,
+                suffered,
+            )
+            st = _apply_action(st, trace, action, S)
+            st = _start_tasks(st, trace, sysarr)
+            return st._replace(steps=st.steps + 1)
+
+        st = jax.lax.while_loop(cond, body, st)
+        makespan = st.now
+        e_idle = (sysarr.p_idle * (makespan - st.busy_time)).sum()
+        return Metrics(
+            completed_by_type=st.completed,
+            missed_by_type=st.missed,
+            cancelled_by_type=st.cancelled,
+            arrived_by_type=st.arrived,
+            energy_dynamic=st.e_dyn,
+            energy_wasted=st.e_wasted,
+            energy_idle=e_idle,
+            makespan=makespan,
+        )
+
+    return simulate
+
+
+@functools.partial(jax.jit, static_argnames=("select_name", "queue_size",
+                                             "fairness_factor", "max_steps"))
+def _simulate_jit(trace, eet, p_dyn, p_idle, select_name, queue_size,
+                  fairness_factor, max_steps):
+    from repro.core import heuristics
+
+    sysarr = SystemArrays(eet=eet, p_dyn=p_dyn, p_idle=p_idle)
+    sim = make_simulator(
+        heuristics.get(select_name), sysarr, queue_size=queue_size,
+        fairness_factor=fairness_factor, max_steps=max_steps,
+    )
+    return sim(trace)
+
+
+def simulate(trace: Trace, spec, heuristic: str, *, max_steps=None) -> Metrics:
+    """Convenience entry point: one trace, one SystemSpec, one heuristic."""
+    return _simulate_jit(
+        trace,
+        jnp.asarray(spec.eet, jnp.float32),
+        jnp.asarray(spec.p_dyn, jnp.float32),
+        jnp.asarray(spec.p_idle, jnp.float32),
+        heuristic.upper(),
+        spec.queue_size,
+        float(spec.fairness_factor),
+        max_steps,
+    )
+
+
+def simulate_batch(traces: Trace, spec, heuristic: str, *, max_steps=None):
+    """vmap over a stacked batch of traces (the paper's 30-trace studies)."""
+    sysarr = spec.as_jax()
+    from repro.core import heuristics
+
+    sim = make_simulator(
+        heuristics.get(heuristic), sysarr, queue_size=spec.queue_size,
+        fairness_factor=float(spec.fairness_factor), max_steps=max_steps,
+    )
+    return jax.jit(jax.vmap(sim))(traces)

@@ -1,0 +1,86 @@
+"""The paper's closed-form scheduling math (Eqs. 1-4), vectorized.
+
+All functions broadcast over arbitrary leading dims; the canonical use is
+(N_tasks, M_machines) grids at a mapping event.
+
+Feasibility note: Eq. 1 of the paper uses strict ``<`` in the first row and
+Algorithm 2 tests ``c_ij <= delta_i`` — under the middle row (``c = delta``)
+that test is vacuously true, which is a pseudo-code slip. We define a pair
+feasible iff ``s + e <= delta`` (the task can fully execute before its
+deadline), the only reading consistent with the prose.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def completion_time(start, exec_time, deadline):
+    """Eq. 1 — expected completion time of a task mapped at ``start``.
+
+    Three regimes: finishes on time (s+e <= d); killed at its deadline
+    mid-execution (s < d < s+e); dropped before starting (s >= d).
+    """
+    s, e, d = jnp.broadcast_arrays(
+        jnp.asarray(start, jnp.float32),
+        jnp.asarray(exec_time, jnp.float32),
+        jnp.asarray(deadline, jnp.float32),
+    )
+    on_time = s + e <= d
+    started = s < d
+    return jnp.where(on_time, s + e, jnp.where(started, d, s))
+
+
+def feasible(start, exec_time, deadline):
+    """A [task, machine] pair is feasible iff it completes by the deadline."""
+    return jnp.asarray(start, jnp.float32) + exec_time <= deadline
+
+
+def expected_energy(start, exec_time, deadline, p_dyn):
+    """Eq. 2 — expected dynamic energy of executing the pair.
+
+    Feasible: p_dyn * e.  Killed mid-run: p_dyn * (d - s) — pure waste.
+    Never started (s >= d): 0.
+    """
+    s, e, d, p = jnp.broadcast_arrays(
+        jnp.asarray(start, jnp.float32),
+        jnp.asarray(exec_time, jnp.float32),
+        jnp.asarray(deadline, jnp.float32),
+        jnp.asarray(p_dyn, jnp.float32),
+    )
+    on_time = s + e <= d
+    started = s < d
+    return jnp.where(on_time, p * e, jnp.where(started, p * (d - s), 0.0))
+
+
+def fairness_limit(completion_rates, fairness_factor):
+    """Eq. 3 — epsilon = mu - f * sigma over per-type completion rates.
+
+    ``f`` large => epsilon -> 0 => fairness disabled. Clamped at 0 so a huge
+    ``f`` never produces a negative (meaningless) limit.
+    """
+    cr = jnp.asarray(completion_rates, jnp.float32)
+    mu = cr.mean()
+    sigma = cr.std()
+    return jnp.maximum(mu - fairness_factor * sigma, 0.0)
+
+
+def deadlines(arrival, task_type, eet):
+    """Eq. 4 — delta_i(k) = arr_k + e_bar_i + e_bar.
+
+    e_bar_i = mean over machines of EET row i; e_bar = mean of e_bar_i.
+    """
+    eet = jnp.asarray(eet, jnp.float32)
+    e_bar_i = eet.mean(axis=1)          # (S,)
+    e_bar = e_bar_i.mean()              # ()
+    return jnp.asarray(arrival, jnp.float32) + e_bar_i[task_type] + e_bar
+
+
+def urgency(deadline, exec_time, now):
+    """MMU's urgency metric: 1 / (delta - e). Higher = more urgent.
+
+    Negative slack (cannot finish) yields a negative urgency => lowest
+    priority, matching the baseline's intent. ``now`` shifts slack to be
+    relative to the current mapping event.
+    """
+    slack = deadline - now - exec_time
+    return 1.0 / jnp.where(jnp.abs(slack) < 1e-9, 1e-9, slack)

@@ -1,0 +1,283 @@
+"""Independent pure-Python oracle simulator.
+
+Deliberately written with plain loops and numpy (no shared code with the JAX
+engine beyond the dataclasses) so hypothesis property tests can cross-check
+the vectorized `repro.core.engine` implementation event-by-event.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import (
+    CANCELLED,
+    COMPLETED,
+    MISSED,
+    PENDING,
+    QUEUED,
+    RUNNING,
+    UNARRIVED,
+)
+
+BIG = 1e30
+
+
+class _Machine:
+    def __init__(self, j):
+        self.j = j
+        self.run = -1
+        self.run_start = 0.0
+        self.run_end_act = np.inf
+        self.run_end_exp = 0.0
+        self.run_success = False
+        self.queue: list[int] = []
+        self.busy = 0.0
+
+
+def _completion(s, e, d):
+    if s + e <= d:
+        return s + e
+    if s < d:
+        return d
+    return s
+
+
+def _energy(s, e, d, p):
+    if s + e <= d:
+        return p * e
+    if s < d:
+        return p * (d - s)
+    return 0.0
+
+
+def simulate(trace, spec, heuristic: str):
+    """Run one trace; returns a dict mirroring Metrics."""
+    heuristic = heuristic.upper()
+    eet = np.asarray(spec.eet, np.float64)
+    p_dyn = np.asarray(spec.p_dyn, np.float64)
+    p_idle = np.asarray(spec.p_idle, np.float64)
+    S, M = eet.shape
+    Q = spec.queue_size
+    f = spec.fairness_factor
+
+    arr = np.asarray(trace.arrival, np.float64)
+    ttype = np.asarray(trace.task_type)
+    dl = np.asarray(trace.deadline, np.float64)
+    exec_act = np.asarray(trace.exec_actual, np.float64)
+    n = len(arr)
+
+    status = np.full(n, UNARRIVED)
+    machines = [_Machine(j) for j in range(M)]
+    completed = np.zeros(S, int)
+    missed = np.zeros(S, int)
+    cancelled = np.zeros(S, int)
+    arrived = np.zeros(S, int)
+    e_dyn = 0.0
+    e_wasted = 0.0
+    now = 0.0
+
+    def next_event():
+        ts = [arr[k] for k in range(n) if status[k] == UNARRIVED]
+        ts += [m.run_end_act for m in machines if m.run >= 0]
+        ts += [dl[k] for k in range(n) if status[k] == PENDING]
+        return min(ts) if ts else np.inf
+
+    def avail_base(m):
+        return max(now, m.run_end_exp if m.run >= 0 else now)
+
+    def avail(m):
+        return avail_base(m) + sum(eet[ttype[k], m.j] for k in m.queue)
+
+    def suffered_mask():
+        cr = np.where(arrived > 0, completed / np.maximum(arrived, 1), 1.0)
+        eps = max(cr.mean() - f * cr.std(), 0.0)
+        return (cr <= eps) & (arrived >= 1)
+
+    def phase2(pairs, machines_free):
+        """pairs: list of (task, machine, key). One task per machine, min key."""
+        assign = {}
+        for j in machines_free:
+            cand = [(key, k) for (k, jj, key) in pairs if jj == j]
+            if cand:
+                key, k = min(cand)
+                assign[j] = k
+        # a task may not be assigned twice (cannot happen: each task appears
+        # with exactly one machine in `pairs`)
+        return assign
+
+    def mapping_event():
+        nonlocal status
+        pend = [k for k in range(n) if status[k] == PENDING]
+        free = [j for j in range(M) if len(machines[j].queue) < Q]
+        suffered = suffered_mask()
+
+        # stale purge (all heuristics)
+        for k in list(pend):
+            if now >= dl[k]:
+                status[k] = CANCELLED
+                cancelled[ttype[k]] += 1
+                pend.remove(k)
+
+        if heuristic in ("ELARE", "FELARE"):
+            # hopeless proactive drop
+            for k in list(pend):
+                if now + eet[ttype[k]].min() > dl[k]:
+                    status[k] = CANCELLED
+                    cancelled[ttype[k]] += 1
+                    pend.remove(k)
+
+        if heuristic == "FELARE":
+            # queue eviction for the earliest-deadline rescuable suffered task
+            resc = [
+                k for k in pend
+                if suffered[ttype[k]]
+                and not any(
+                    avail(machines[j]) + eet[ttype[k], j] <= dl[k]
+                    for j in range(M) if len(machines[j].queue) < Q
+                )
+                and now + eet[ttype[k]].min() <= dl[k]
+            ]
+            if resc:
+                k = min(resc, key=lambda k: dl[k])
+                mstar = min(
+                    range(M),
+                    key=lambda j: avail(machines[j]) + eet[ttype[k], j],
+                )
+                m = machines[mstar]
+                evict = []
+                base = avail_base(m)
+                rem = sum(eet[ttype[t], mstar] for t in m.queue)
+                for qi in range(len(m.queue) - 1, -1, -1):
+                    t = m.queue[qi]
+                    if base + rem + eet[ttype[k], mstar] <= dl[k]:
+                        break
+                    if not suffered[ttype[t]]:
+                        evict.append(qi)
+                        rem -= eet[ttype[t], mstar]
+                if base + rem + eet[ttype[k], mstar] <= dl[k]:
+                    for qi in evict:
+                        t = m.queue.pop(qi)
+                        status[t] = CANCELLED
+                        cancelled[ttype[t]] += 1
+            free = [j for j in range(M) if len(machines[j].queue) < Q]
+
+        # Phase-I
+        pairs = []
+        if heuristic in ("ELARE", "FELARE"):
+            for k in pend:
+                best = None
+                for j in free:
+                    s = avail(machines[j])
+                    e = eet[ttype[k], j]
+                    if s + e <= dl[k]:
+                        ec = _energy(s, e, dl[k], p_dyn[j])
+                        if best is None or ec < best[2]:
+                            best = (k, j, ec)
+                if best:
+                    pairs.append(best)
+        else:  # MM / MSD / MMU: min completion machine, no feasibility
+            for k in pend:
+                best = None
+                for j in free:
+                    s = avail(machines[j])
+                    c = _completion(s, eet[ttype[k], j], dl[k])
+                    if best is None or c < best[2]:
+                        best = (k, j, c)
+                if best:
+                    k, j, c = best
+                    # keys computed in float32 with the same op order as the
+                    # JAX engine, so tie-breaking is bit-identical (the
+                    # 1e-6 epsilon / reciprocal are not dyadic-exact).
+                    f32 = np.float32
+                    if heuristic == "MM":
+                        key = float(f32(c))
+                    elif heuristic == "MSD":
+                        key = float(f32(dl[k]) + f32(1e-6) * f32(c))
+                    else:  # MMU
+                        slack = (f32(dl[k]) - f32(now)
+                                 - f32(eet[ttype[k], j]))
+                        if abs(slack) < 1e-9:
+                            slack = f32(1e-9)
+                        key = float(f32(-1.0) / slack)
+                    pairs.append((k, j, key))
+
+        # Phase-II (FELARE: suffered pairs first)
+        if heuristic == "FELARE":
+            hi = [p for p in pairs if suffered[ttype[p[0]]]]
+            lo = [p for p in pairs if not suffered[ttype[p[0]]]]
+            assign = phase2(hi, free)
+            rest = [j for j in free if j not in assign]
+            taken = set(assign.values())
+            assign.update(
+                phase2([p for p in lo if p[0] not in taken], rest)
+            )
+        else:
+            assign = phase2(pairs, free)
+
+        for j, k in assign.items():
+            if status[k] == PENDING and len(machines[j].queue) < Q:
+                machines[j].queue.append(k)
+                status[k] = QUEUED
+
+    def start_tasks():
+        # One pop per machine per event; a dead-on-arrival task becomes a
+        # zero-duration run (finalized as MISSED with zero energy at the same
+        # timestamp) — mirrors the JAX engine's event structure exactly.
+        for m in machines:
+            if m.run < 0 and m.queue:
+                k = m.queue.pop(0)
+                m.run = k
+                m.run_start = now
+                status[k] = RUNNING
+                if now >= dl[k]:
+                    m.run_success = False
+                    m.run_end_act = now
+                    m.run_end_exp = now
+                else:
+                    e_act = exec_act[k, m.j]
+                    m.run_success = now + e_act <= dl[k]
+                    m.run_end_act = min(now + e_act, dl[k])
+                    m.run_end_exp = _completion(now, eet[ttype[k], m.j], dl[k])
+
+    max_steps = 16 * n + 64
+    for _ in range(max_steps):
+        t = next_event()
+        if not np.isfinite(t):
+            break
+        now = max(now, t)
+        # finalize completions
+        for m in machines:
+            if m.run >= 0 and m.run_end_act <= now:
+                k = m.run
+                dur = m.run_end_act - m.run_start
+                en = p_dyn[m.j] * dur
+                e_dyn += en
+                m.busy += dur
+                if m.run_success:
+                    status[k] = COMPLETED
+                    completed[ttype[k]] += 1
+                else:
+                    status[k] = MISSED
+                    missed[ttype[k]] += 1
+                    e_wasted += en
+                m.run = -1
+                m.run_end_act = np.inf
+                m.run_end_exp = now
+        # arrivals
+        for k in range(n):
+            if status[k] == UNARRIVED and arr[k] <= now:
+                status[k] = PENDING
+                arrived[ttype[k]] += 1
+        mapping_event()
+        start_tasks()
+    makespan = now
+    e_idle = float(sum(p_idle[m.j] * (makespan - m.busy) for m in machines))
+    return dict(
+        completed_by_type=completed,
+        missed_by_type=missed,
+        cancelled_by_type=cancelled,
+        arrived_by_type=arrived,
+        energy_dynamic=e_dyn,
+        energy_wasted=e_wasted,
+        energy_idle=e_idle,
+        makespan=makespan,
+    )

@@ -1,0 +1,113 @@
+"""Core datatypes for the FELARE scheduling system.
+
+Shapes use the paper's notation:
+  S = number of task types (ML applications), M = number of machine types,
+  N = number of tasks in a workload trace, Q = per-machine local-queue slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Task status codes used by both engines.
+UNARRIVED = 0   # not yet arrived
+PENDING = 1     # in the arriving queue (arrived, unmapped)
+QUEUED = 2      # in a machine's local queue
+RUNNING = 3     # executing
+COMPLETED = 4   # finished on time
+MISSED = 5      # started execution but killed at its deadline
+CANCELLED = 6   # dropped before being assigned (proactive drop / stale / victim)
+
+STATUS_NAMES = {
+    UNARRIVED: "unarrived",
+    PENDING: "pending",
+    QUEUED: "queued",
+    RUNNING: "running",
+    COMPLETED: "completed",
+    MISSED: "missed",
+    CANCELLED: "cancelled",
+}
+
+INF = jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """A heterogeneous edge system: machines + profiling data.
+
+    eet:    (S, M) expected execution time of task type i on machine type j.
+    p_dyn:  (M,) dynamic power of each machine.
+    p_idle: (M,) idle power of each machine.
+    queue_size: local queue slots per machine (bounded, equal across machines).
+    fairness_factor: ``f`` in Eq. 3; aggressiveness of the fairness method.
+    """
+
+    eet: np.ndarray
+    p_dyn: np.ndarray
+    p_idle: np.ndarray
+    queue_size: int = 2
+    fairness_factor: float = 1.0
+
+    @property
+    def n_task_types(self) -> int:
+        return self.eet.shape[0]
+
+    @property
+    def n_machines(self) -> int:
+        return self.eet.shape[1]
+
+    def as_jax(self) -> "SystemArrays":
+        return SystemArrays(
+            eet=jnp.asarray(self.eet, jnp.float32),
+            p_dyn=jnp.asarray(self.p_dyn, jnp.float32),
+            p_idle=jnp.asarray(self.p_idle, jnp.float32),
+        )
+
+
+class SystemArrays(NamedTuple):
+    eet: jnp.ndarray     # (S, M)
+    p_dyn: jnp.ndarray   # (M,)
+    p_idle: jnp.ndarray  # (M,)
+
+
+class Trace(NamedTuple):
+    """A workload trace of N dynamically-arriving tasks (arrival-sorted)."""
+
+    arrival: jnp.ndarray    # (N,) float32
+    task_type: jnp.ndarray  # (N,) int32
+    deadline: jnp.ndarray   # (N,) float32  (Eq. 4)
+    exec_actual: jnp.ndarray  # (N, M) float32 Gamma-sampled actual runtimes
+
+
+class MapAction(NamedTuple):
+    """Output of a mapping heuristic at one mapping event."""
+
+    assign: jnp.ndarray      # (M,) int32 task index per machine, -1 = none
+    drop: jnp.ndarray        # (N,) bool  proactive drops from the arriving queue
+    queue_drop: jnp.ndarray  # (M, Q) bool victims evicted from local queues (FELARE)
+
+
+class Metrics(NamedTuple):
+    """Aggregate results of one simulated trace."""
+
+    completed_by_type: jnp.ndarray  # (S,)
+    missed_by_type: jnp.ndarray     # (S,)
+    cancelled_by_type: jnp.ndarray  # (S,)
+    arrived_by_type: jnp.ndarray    # (S,)
+    energy_dynamic: jnp.ndarray     # () total dynamic energy
+    energy_wasted: jnp.ndarray      # () dynamic energy spent on missed tasks
+    energy_idle: jnp.ndarray        # () idle energy over the makespan
+    makespan: jnp.ndarray           # () time of last event
+
+    @property
+    def completion_rate_by_type(self):
+        return self.completed_by_type / jnp.maximum(self.arrived_by_type, 1)
+
+    @property
+    def collective_completion_rate(self):
+        return self.completed_by_type.sum() / jnp.maximum(
+            self.arrived_by_type.sum(), 1
+        )

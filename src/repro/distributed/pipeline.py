@@ -1,0 +1,78 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+The layer stack is split into ``P`` stages along a ``pipe`` mesh axis; M
+microbatches stream through with the classic (M + P - 1)-tick schedule.
+Stage-to-stage activation handoff is a ``collective_permute`` ring shift —
+the jax-native mapping of the paper-adjacent send/recv pattern (DESIGN.md §5:
+PP is a supported feature, validated at small scale; the headline dry-run
+mesh uses DP x TP where PP is not needed for the assigned cells).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe(stage_fn, mesh, axis: str = "pipe"):
+    """Build a pipelined apply.
+
+    stage_fn(stage_params, x) -> x', the per-stage transform (e.g. a scan
+    over the stage's layers). stage_params leaves have a leading dim == P
+    (stage-major stacking); x: (M, ...) microbatches.
+
+    Returns run(stacked_params, x_microbatches) -> (M, ...) outputs,
+    numerically identical to applying all stages sequentially.
+    """
+    n_stages = mesh.shape[axis]
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axis), P()),     # params sharded by stage; x replicated
+        out_specs=P(),
+    )
+    def run(stage_params, xs):
+        # inside: stage_params leaves have leading dim 1 (this stage)
+        local = jax.tree.map(lambda a: a[0], stage_params)
+        sid = jax.lax.axis_index(axis)
+        M = xs.shape[0]
+        n_ticks = M + n_stages - 1
+        perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(t, state):
+            recv, outs = state
+            # stage 0 ingests microbatch t (if any); others take the ring
+            mb = jnp.where(t < M, t, 0)
+            x_in = jnp.where(sid == 0, xs[mb], recv)
+            y = stage_fn(local, x_in)
+            # last stage emits microbatch t - (P - 1)
+            out_idx = t - (n_stages - 1)
+            emit = (sid == n_stages - 1) & (out_idx >= 0)
+            oi = jnp.clip(out_idx, 0, M - 1)
+            cur = jax.lax.dynamic_index_in_dim(outs, oi, 0, keepdims=False)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(emit, y, cur), oi, 0)
+            recv = jax.lax.ppermute(y, axis, perm)
+            return recv, outs
+
+        # initial carries must be typed as pipe-varying for the fori_loop
+        outs0 = jax.lax.pcast(jnp.zeros_like(xs), (axis,), to="varying")
+        recv0 = jax.lax.pcast(jnp.zeros_like(xs[0]), (axis,), to="varying")
+        _, outs = jax.lax.fori_loop(0, n_ticks, tick, (recv0, outs0))
+        # only the last stage holds real outputs; share them back to all
+        outs = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    return run
+
+
+def stack_stages(layer_params, n_stages: int):
+    """(L, ...) layer-stacked params -> (P, L/P, ...) stage-major stacking."""
+    def resh(a):
+        L = a.shape[0]
+        assert L % n_stages == 0, f"{L} layers not divisible by {n_stages}"
+        return a.reshape(n_stages, L // n_stages, *a.shape[1:])
+    return jax.tree.map(resh, layer_params)

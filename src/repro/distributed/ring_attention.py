@@ -1,0 +1,69 @@
+"""Ring attention: sequence-parallel exact attention via shard_map.
+
+For long-context prefill the (B, S, H, hd) activations are sharded over the
+sequence on a mesh axis; K/V shards rotate around the ring with
+``ppermute`` while each device accumulates its queries' online softmax —
+exact attention with S/P-sized working sets and the comm hidden behind the
+next block's compute (the TPU-native analogue of RingAttention /
+context parallelism; DESIGN.md §5 SP).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def ring_attention(q, k, v, mesh, axis: str = "model", *, causal=True):
+    """q, k, v: (B, S, H, hd) with S divisible by mesh.shape[axis].
+
+    Returns (B, S, H, hd), numerically equal to full softmax attention.
+    GQA: pass k/v already head-repeated (or Hkv == H).
+    """
+    n = mesh.shape[axis]
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis), P(None, axis)),
+        out_specs=P(None, axis),
+    )
+    def run(ql, kl, vl):
+        i = jax.lax.axis_index(axis)
+        B, Sl, H, hd = ql.shape
+        scale = hd ** -0.5
+        qf = ql.astype(jnp.float32) * scale
+        q_pos = i * Sl + jnp.arange(Sl)
+
+        def step(r, carry):
+            kr, vr, m, l, acc = carry
+            # kr currently holds the shard that started at ring slot (i - r)
+            src = (i - r) % n
+            k_pos = src * Sl + jnp.arange(Sl)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kr.astype(jnp.float32))
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vr.astype(jnp.float32))
+            perm = [(j, (j + 1) % n) for j in range(n)]
+            kr = jax.lax.ppermute(kr, axis, perm)
+            vr = jax.lax.ppermute(vr, axis, perm)
+            return kr, vr, m_new, l_new, acc
+
+        m0 = jnp.full((B, H, Sl), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, Sl), jnp.float32)
+        a0 = jnp.zeros((B, H, Sl, hd), jnp.float32)
+        m0, l0, a0 = (jax.lax.pcast(x, (axis,), to="varying")
+                      for x in (m0, l0, a0))
+        _, _, m, l, acc = jax.lax.fori_loop(
+            0, n, step, (kl, vl, m0, l0, a0))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.swapaxes(1, 2).astype(ql.dtype)
+
+    return run(q, k, v)

@@ -1,0 +1,205 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs.
+
+Layout (DESIGN.md §5):
+  * params: FSDP over ``data`` (one matmul dim), TP over ``model`` (heads /
+    ffn-inner / vocab), replicated over ``pod`` — gradients are all-reduced
+    across pods (the compressible cross-pod collective).
+  * batch: sharded over (``pod``, ``data``).
+  * decode caches: batch over (``pod``, ``data``); KV heads over ``model``
+    when divisible, otherwise KV *sequence* over ``model`` (GQA archs whose
+    kv-head count is below the TP width — sequence-parallel decode).
+  * MoE experts: EP over ``model``.
+Scanned layer stacks carry one leading (layer) dim, never sharded.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name -> spec for the *trailing* dims (scan dims padded with None).
+# (data, model) = (FSDP, TP).
+_NAME_RULES: dict[str, tuple] = {
+    "tok": ("model", "data"),        # (V, d): vocab TP'd for the LM head
+    "unembed": ("data", "model"),
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    "router": ("data", None),
+    "in_proj": ("data", "model"),
+    "out_proj": ("model", "data"),
+    "w_in": ("data", "model"),
+    "w_out": ("model", "data"),
+    "w_if": ("data", None),
+    "b_up": ("model",),
+}
+
+
+def _moe_aware(name: str, ndim: int):
+    """w_gate/w_up/w_down appear in both dense MLP (2D) and MoE (3D)."""
+    if name in ("w_gate", "w_up"):
+        return ("model", "data", None) if ndim == 3 else ("data", "model")
+    if name == "w_down":
+        return ("model", None, "data") if ndim == 3 else ("model", "data")
+    return None
+
+
+def _path_names(path):
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return out
+
+
+def param_spec(path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    scan = 1 if any(n in ("blocks", "enc_blocks") for n in names) else 0
+    ndim = leaf.ndim - scan
+    rule = _moe_aware(name, ndim)
+    if rule is None:
+        rule = _NAME_RULES.get(name)
+    if rule is None or len(rule) != ndim:
+        rule = (None,) * ndim  # replicate (norms, convs, scalars, gates)
+    return P(*((None,) * scan + tuple(rule)))
+
+
+def param_specs(params_shapes):
+    return jax.tree_util.tree_map_with_path(param_spec, params_shapes)
+
+
+def _valid(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec entries that don't divide the dim (safety net)."""
+    fixed = []
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            fixed.append(None)
+            continue
+        ax = (names,) if isinstance(names, str) else tuple(names)
+        size = 1
+        for a in ax:
+            size *= mesh.shape[a]
+        fixed.append(names if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def _attn_overrides(cfg, mesh: Mesh) -> dict:
+    """Head-divisibility-aware TP for attention projections.
+
+    Sharding the fused head dim when (n_heads % tp != 0) makes the
+    (B,S,H*hd) -> (B,S,H,hd) reshape inexpressible and the partitioner
+    inserts per-layer activation reshard all-reduces (§Perf iteration B:
+    10 TB/step on internvl2's 14-head/2-kv stack at TP=16). Projections
+    whose head count doesn't divide the TP width fall back to FSDP-only.
+    """
+    tp = mesh.shape.get("model", 1)
+    if cfg is None or tp == 1:
+        return {}
+    over = {}
+    if cfg.n_heads % tp:
+        over.update({"wq": ("data", None), "wo": (None, "data"),
+                     "bq": (None,)})
+    if cfg.n_kv_heads % tp:
+        over.update({"wk": ("data", None), "wv": ("data", None),
+                     "bk": (None,), "bv": (None,)})
+    return over
+
+
+def param_shardings(params_shapes, mesh: Mesh, cfg=None):
+    over = _attn_overrides(cfg, mesh)
+
+    def one(path, leaf):
+        spec = param_spec(path, leaf)
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name in over:
+            scan = 1 if any(n in ("blocks", "enc_blocks") for n in names) \
+                else 0
+            spec = P(*((None,) * scan + tuple(over[name])))
+        return NamedSharding(mesh, _valid(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_state_shardings(params_shapes, mesh: Mesh, cfg=None):
+    """Adam mu/nu mirror the param layout; step is replicated."""
+    from repro.optim.adamw import AdamWState
+
+    pspecs = param_shardings(params_shapes, mesh, cfg)
+    rep = NamedSharding(mesh, P())
+    return AdamWState(step=rep, mu=pspecs, nu=pspecs)
+
+
+def batch_axes(mesh: Mesh):
+    """The data-parallel mesh axes (pod included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_sharding(mesh: Mesh, batch_shapes, accum_dim: bool = False):
+    dp = batch_axes(mesh)
+
+    def one(leaf):
+        shape = leaf.shape
+        b_idx = 1 if accum_dim else 0
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        spec = [None] * len(shape)
+        if shape[b_idx] % dp_size == 0 and dp_size > 1:
+            spec[b_idx] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_sharding(cfg, mesh: Mesh, cache_shapes):
+    """Decode-cache shardings: batch over DP axes; heads-or-seq over model."""
+    dp = batch_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if name in ("len", "xlen"):
+            return NamedSharding(mesh, P(*spec))
+        # leading layer-stack dim then batch
+        b_idx = 1 if len(shape) >= 2 else 0
+        if shape[b_idx] % dp_size == 0 and dp_size > 1:
+            spec[b_idx] = dp
+        if name in ("k", "v", "xk", "xv") and len(shape) == 5:
+            # (L, B, S, Hkv, hd): heads over model if divisible, else seq
+            if shape[3] % tp == 0:
+                spec[3] = "model"
+            elif shape[2] % tp == 0:
+                spec[2] = "model"
+        elif name == "ssm" and len(shape) == 5:
+            # (L, B, H, N, P): ssm heads over model
+            if shape[2] % tp == 0:
+                spec[2] = "model"
+        elif name == "conv" and len(shape) == 4:
+            if shape[3] % tp == 0:
+                spec[3] = "model"
+        elif name in ("S", "n", "c", "h", "m") and len(shape) >= 4:
+            # xlstm states (nsb, B, H, ...): shard widest trailing dim
+            for d in range(len(shape) - 1, 1, -1):
+                if shape[d] % tp == 0 and shape[d] >= tp:
+                    spec[d] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

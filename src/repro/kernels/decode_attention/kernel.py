@@ -1,0 +1,83 @@
+"""Single-token decode attention: one query row vs a long KV cache.
+
+The decode hot spot is *memory*-bound: the whole KV cache streams from HBM
+once per token. Grid: (B, H, kv_blocks); the single query row stays resident
+while KV blocks stream through VMEM with an online-softmax running state —
+two fp32 scalars + one (1, hd) accumulator per (b, h).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 512
+NEG_INF = -1e30  # python scalar (pallas cannot capture jnp consts)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, bk, scale):
+    kb = pl.program_id(2)
+    n_kb = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32) * scale       # (1, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bk)
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(kpos < len_ref[0, 0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _finish():
+        o_ref[0, 0, :] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_bhd(q, k, v, kv_len, *, bk=DEFAULT_BK, interpret=True):
+    """q: (B, H, 1, hd); k, v: (B, Hkv, Sk, hd); kv_len: (B,)."""
+    B, H, _, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    grid = (B, H, Sk // bk)
+    kernel = functools.partial(_decode_kernel, bk=bk, scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, g=g: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, g=g: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.reshape(B, 1).astype(jnp.int32), q, k, v)

@@ -1,0 +1,25 @@
+"""Public wrapper for the decode kernel ((B, 1, H, hd) model layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import (
+    DEFAULT_BK,
+    decode_attention_bhd,
+)
+
+
+def decode_attention(q, k, v, kv_len, *, bk=None, interpret=True):
+    """q: (B, 1, H, hd); k, v: (B, Sk, Hkv, hd); kv_len: (B,)."""
+    B, _, H, hd = q.shape
+    Sk = k.shape[1]
+    bk = bk or min(DEFAULT_BK, Sk)
+    Skp = -(-Sk // bk) * bk
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if Skp != Sk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    out = decode_attention_bhd(qt, kt, vt, kv_len, bk=bk, interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for decode_attention."""
+from __future__ import annotations
+
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def decode_attention_ref(q, k, v, kv_len):
+    """q: (B, H, 1, hd); k, v: (B, Hkv, Sk, hd); kv_len: (B,)."""
+    return flash_attention_ref(q, k, v, kv_len, causal=False)

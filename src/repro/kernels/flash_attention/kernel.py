@@ -1,0 +1,108 @@
+"""Blockwise online-softmax attention (FlashAttention) for TPU, with GQA.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — the kv dimension is the
+innermost (sequential) loop; running max / sum / accumulator live in VMEM
+scratch and are rescaled per kv block. Causal blocks above the diagonal are
+skipped via the mask (block-level early-out is a perf iteration recorded in
+EXPERIMENTS.md §Perf). K/V are indexed at head ``h // group`` for GQA.
+
+VMEM budget per step: q (BQ, hd) + k, v (BK, hd) + acc (BQ, hd) + scores
+(BQ, BK), all fp32 — BQ = BK = 128, hd <= 256 keeps this well under 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30  # python scalar (pallas cannot capture jnp consts)
+
+
+def _flash_kernel(qlen_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, bq, bk, causal, q_offset,
+                  scale):
+    kb = pl.program_id(3)
+    n_kb = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale     # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)             # (bk, hd)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (bq, bk)
+
+    qb = pl.program_id(2)
+    qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + q_offset
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < qlen_ref[0, 0]                     # kv_len bound
+    if causal:
+        mask &= qpos >= kpos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_offset", "bq", "bk", "interpret"))
+def flash_attention_bhsd(q, k, v, kv_len, *, causal=True, q_offset=0,
+                         bq=DEFAULT_BQ, bk=DEFAULT_BK, interpret=True):
+    """q: (B, H, Sq, hd); k, v: (B, Hkv, Sk, hd); kv_len: (B,) int32.
+
+    Sq % bq == 0 and Sk % bk == 0 (ops.py pads). Returns (B, H, Sq, hd).
+    """
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    grid = (B, H, Sq // bq, Sk // bk)
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, causal=causal, q_offset=q_offset,
+        scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, i, j: (b, 0)),
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, g=g: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            # fp32 running accumulator / max / sum in VMEM scratch
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.reshape(B, 1).astype(jnp.int32), q, k, v)

@@ -1,0 +1,41 @@
+"""Public wrapper: layout transform + padding for the flash kernel.
+
+Model code calls with (B, S, H, hd) layout (same as layers.sdpa); the kernel
+wants (B, H, S, hd) with block-aligned sequence lengths.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (
+    DEFAULT_BK,
+    DEFAULT_BQ,
+    flash_attention_bhsd,
+)
+
+
+def flash_attention(q, k, v, *, causal=True, kv_len=None, q_offset=0,
+                    bq=None, bk=None, interpret=True):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd) — returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq = bq or min(DEFAULT_BQ, Sq)
+    bk = bk or min(DEFAULT_BK, Sk)
+    Sqp = -(-Sq // bq) * bq
+    Skp = -(-Sk // bk) * bk
+
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if Sqp != Sq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skp != Sk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+    if kv_len is None:
+        kv_len = jnp.full((B,), Sk, jnp.int32)
+
+    out = flash_attention_bhsd(
+        qt, kt, vt, kv_len, causal=causal, q_offset=q_offset, bq=bq, bk=bk,
+        interpret=interpret)
+    return jnp.moveaxis(out[:, :, :Sq], 1, 2)

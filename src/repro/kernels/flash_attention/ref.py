@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash_attention (materializes the score matrix)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, kv_len=None, *, causal=True, q_offset=0):
+    """q: (B, H, Sq, hd); k, v: (B, Hkv, Sk, hd); kv_len: (B,) or None."""
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    kk = jnp.repeat(k, g, axis=1)
+    vv = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    if kv_len is not None:
+        valid = jnp.arange(Sk)[None, :] < kv_len[:, None]
+        s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

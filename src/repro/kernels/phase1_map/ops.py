@@ -1,0 +1,31 @@
+"""jit'd public wrapper for phase1_map: pad, call kernel, unpad.
+
+Contract matches repro.core.heuristics.elare_phase1's ``phase1_impl`` hook:
+  phase1_map(avail, eet_rows, deadline, p_dyn, pending, qfree)
+    -> (best_m (N,), best_ec (N,))
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.phase1_map.kernel import BLOCK_N, phase1_map_padded
+
+_LANE = 128
+
+
+def phase1_map(avail, eet_rows, deadline, p_dyn, pending, qfree, *,
+               interpret: bool = True):
+    N, M = eet_rows.shape
+    Np = -(-N // BLOCK_N) * BLOCK_N
+    Mp = max(_LANE, -(-M // _LANE) * _LANE)
+
+    eet_p = jnp.zeros((Np, Mp), jnp.float32).at[:N, :M].set(eet_rows)
+    avail_p = jnp.zeros((Mp,), jnp.float32).at[:M].set(avail)
+    pdyn_p = jnp.zeros((Mp,), jnp.float32).at[:M].set(p_dyn)
+    qfree_p = jnp.zeros((Mp,), jnp.int32).at[:M].set(qfree.astype(jnp.int32))
+    dl_p = jnp.zeros((Np,), jnp.float32).at[:N].set(deadline)
+    pend_p = jnp.zeros((Np,), jnp.int32).at[:N].set(pending.astype(jnp.int32))
+
+    bm, bec = phase1_map_padded(
+        avail_p, pdyn_p, qfree_p, eet_p, dl_p, pend_p, interpret=interpret)
+    return bm[:N, 0], bec[:N, 0]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the phase1_map kernel (mirrors heuristics Phase-I)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = jnp.float32(1e30)
+
+
+def phase1_map_ref(avail, p_dyn, qfree, eet_rows, deadline, pending):
+    """avail/p_dyn/qfree: (M,); eet_rows: (N, M); deadline/pending: (N,).
+
+    Returns (best_m (N,) int32, best_ec (N,) f32 — BIG when infeasible).
+    """
+    s = avail[None, :]
+    feas = ((s + eet_rows <= deadline[:, None])
+            & pending[:, None].astype(bool)
+            & qfree[None, :].astype(bool))
+    ec = jnp.where(feas, p_dyn[None, :] * eet_rows, BIG)
+    return jnp.argmin(ec, axis=1).astype(jnp.int32), jnp.min(ec, axis=1)

@@ -1,0 +1,94 @@
+"""Chunked SSD (Mamba2) scan kernel for TPU.
+
+Grid: (batch, heads, chunks) with the chunk dim innermost (sequential); the
+(N, P) state matrix lives in VMEM scratch and carries across chunks. All
+intra-chunk work is (Q x Q)/(Q x N)/(N x P) matmuls — MXU-shaped, the
+TPU-native reformulation of the GPU selective-scan (DESIGN.md §2).
+
+Block layout per step: x (Q, P), dt/loga (Q, 1), B/C (Q, N); VMEM footprint
+~ Q*(P + 2N) + Q*Q + N*P fp32 — Q=128, N=64, P=64 is ~150 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, loga_ref, b_ref, c_ref, y_ref, s_out_ref,
+                state_ref, *, Q):
+    cb = pl.program_id(2)
+    n_cb = pl.num_programs(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)         # (Q, 1)
+    loga = loga_ref[0, 0].astype(jnp.float32)     # (Q, 1)
+    B = b_ref[0].astype(jnp.float32)              # (Q, N)
+    C = c_ref[0].astype(jnp.float32)              # (Q, N)
+
+    cl = jnp.cumsum(loga, axis=0)                 # (Q, 1) inclusive
+    seg = cl - cl.T                               # (Q, Q) = cl_i - cl_j
+    causal = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(causal, jnp.exp(seg), 0.0)
+
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    w = CB * decay * dt.T                         # (Q, Q), weight on j
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    S = state_ref[...]                            # (N, P)
+    y += jnp.exp(cl) * jax.lax.dot_general(
+        C, S, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    segl = jnp.exp(cl[-1:] - cl)                  # (Q, 1)
+    xw = x * (segl * dt)                          # (Q, P)
+    S_new = jnp.exp(cl[-1, 0]) * S + jax.lax.dot_general(
+        B, xw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    state_ref[...] = S_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(cb == n_cb - 1)
+    def _finish():
+        s_out_ref[0, 0] = S_new
+
+
+@functools.partial(jax.jit, static_argnames=("Q", "interpret"))
+def ssd_scan_bhlp(x, dt, loga, Bm, Cm, *, Q, interpret=True):
+    """x: (B, H, L, P); dt/loga: (B, H, L, 1); Bm/Cm: (B, L, N); L % Q == 0.
+
+    Returns y: (B, H, L, P), final state (B, H, N, P) fp32.
+    """
+    B, H, L, P = x.shape
+    N = Bm.shape[-1]
+    grid = (B, H, L // Q)
+    kernel = functools.partial(_ssd_kernel, Q=Q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, L, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, loga, Bm, Cm)

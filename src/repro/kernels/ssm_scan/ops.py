@@ -1,0 +1,25 @@
+"""Public wrapper for the SSD kernel ((B, L, H, P) model layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssd_scan_bhlp
+
+
+def ssm_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=True):
+    """Same contract as repro.models.ssm.ssd_chunked.
+
+    x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N).
+    Returns (y (B, L, H, P), final_state (B, H, N, P)).
+    """
+    B, L, H, P = x.shape
+    Q = min(chunk, L)
+    assert L % Q == 0, f"seq {L} not divisible by chunk {Q}"
+    xt = jnp.moveaxis(x, 2, 1)                              # (B, H, L, P)
+    dtt = jnp.moveaxis(dt, 2, 1)[..., None]                 # (B, H, L, 1)
+    loga = dtt * A[None, :, None, None]
+    y, S = ssd_scan_bhlp(xt, dtt.astype(jnp.float32),
+                         loga.astype(jnp.float32),
+                         Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                         Q=Q, interpret=interpret)
+    return jnp.moveaxis(y, 1, 2), S

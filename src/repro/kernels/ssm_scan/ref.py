@@ -1,0 +1,9 @@
+"""Pure-jnp sequential oracle for the SSD scan kernel."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_ref
+
+
+def ssm_scan_ref(x, dt, A, Bm, Cm):
+    """x: (B, L, H, P); dt: (B, L, H); A: (H,); Bm/Cm: (B, L, N)."""
+    return ssd_ref(x, dt, A, Bm, Cm)

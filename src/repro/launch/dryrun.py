@@ -1,0 +1,221 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST set the placeholder-device flag before ANY jax import (jax locks the
+device count at first init) — hence the first two lines.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+Each cell appends one JSON line (memory analysis, cost analysis, collective
+bytes, roofline terms) so interrupted sweeps resume cheaply.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402  (jax import must follow the env var)
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry, shapes as shp
+from repro.datapipe.synthetic import input_specs
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.roofline import analysis as ra, hlo_graph, jaxpr_cost
+from repro.train.steps import make_serve_steps, make_train_step
+
+DEFAULT_ACCUM = {"train_4k": 8}
+
+
+def serve_batch_specs(cfg, shape):
+    """ShapeDtypeStruct inputs for prefill cells."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        return {
+            "frames": jax.ShapeDtypeStruct((B, S // 2, cfg.d_model),
+                                           jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, S // 2), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S - cfg.n_patches), jnp.int32),
+            "patches": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model),
+                                            jnp.bfloat16),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def decode_specs(cfg, shape):
+    B, S = shape.global_batch, shape.seq_len
+    max_seq = S // 2 if cfg.family == "audio" else S
+    cache = jax.eval_shape(lambda: tf.init_cache(cfg, B, max_seq))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               accum: int | None = None, cfg=None):
+    cfg = cfg or registry.get_config(arch)
+    shape = shp.SHAPES[shape_name]
+    ok, reason = shp.applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "reason": reason}
+
+    pshapes = tf.param_shapes(cfg)
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            accum = accum or DEFAULT_ACCUM.get(shape_name, 8)
+            step = make_train_step(cfg, AdamW(), mesh, donate=False)
+            specs = input_specs(cfg, shape, accum=accum)
+            opt_shapes = jax.eval_shape(AdamW().init, pshapes)
+            jitted = step.jit_for(specs)
+            lowered = jitted.lower(pshapes, opt_shapes, specs)
+            cost_fn, cost_args = step, (pshapes, opt_shapes, specs)
+        elif shape.kind == "prefill":
+            prefill_jit_for, _ = make_serve_steps(cfg, mesh)
+            specs = serve_batch_specs(cfg, shape)
+            max_seq = (shape.seq_len // 2 if cfg.family == "audio"
+                       else shape.seq_len)
+            jitted = prefill_jit_for(specs, max_seq)
+            lowered = jitted.lower(pshapes, specs)
+
+            def _prefill_raw(p, b):
+                return tf.prefill(cfg, p, b, max_seq)
+            cost_fn, cost_args = _prefill_raw, (pshapes, specs)
+        else:  # decode
+            _, decode_jit_for = make_serve_steps(cfg, mesh)
+            cache_shapes, tok = decode_specs(cfg, shape)
+            jitted = decode_jit_for(cache_shapes, tok)
+            lowered = jitted.lower(pshapes, cache_shapes, tok)
+
+            def _decode_raw(p, c, t):
+                return tf.decode_step(cfg, p, c, t)
+            cost_fn, cost_args = _decode_raw, (pshapes, cache_shapes, tok)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_stats = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        } if mem is not None else None
+    except Exception:
+        mem_stats = None
+    hlo = compiled.as_text()
+    coll_flat = ra.collective_bytes(hlo)
+    coll_weighted = hlo_graph.collective_bytes_weighted(hlo)
+    # trip-count-exact global flops/bytes from the jaxpr walk
+    jc = jaxpr_cost.jaxpr_cost(cost_fn, *cost_args)
+    chips = mesh.devices.size
+    mf = ra.model_flops_for(cfg, shape)
+    roof = ra.Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=jc["flops"] / chips,
+        bytes_per_device=jc["bytes"] / chips,
+        coll_bytes_per_device=sum(coll_weighted.values()) / chips,
+        model_flops=mf,
+    )
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost": {k: cost[k] for k in ("flops", "bytes accessed")
+                 if k in cost},
+        "jaxpr_cost": jc,
+        "memory": mem_stats,
+        "collective_bytes": coll_flat,
+        "collective_bytes_weighted": coll_weighted,
+        "roofline": roof.row(),
+        "hlo_lines": len(hlo.splitlines()),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(shp.SHAPES))
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--variant", choices=("base", "opt"), default="base",
+                    help="opt: beyond-paper optimized config "
+                         "(vocab padded to a TP-shardable multiple)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    outfile = outdir / "cells.jsonl"
+    done = set()
+    if outfile.exists():
+        for line in outfile.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                pass
+
+    meshes = {}
+    mesh_names = (["pod", "multipod"] if args.mesh == "both"
+                  else [args.mesh])
+    for mn in mesh_names:
+        meshes[mn] = make_production_mesh(multi_pod=(mn == "multipod"))
+
+    if args.all:
+        cells = [(a, s) for a in registry.ARCH_IDS for s in shp.SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for arch, shape_name in cells:
+        for mn, mesh in meshes.items():
+            if (arch, shape_name, mn) in done:
+                print(f"[cached] {arch} x {shape_name} x {mn}")
+                continue
+            print(f"[lower+compile] {arch} x {shape_name} x {mn} ...",
+                  flush=True)
+            cfg = registry.get_config(arch)
+            if args.variant == "opt":
+                cfg = cfg.scaled(pad_vocab_to=256)
+            try:
+                rec = lower_cell(arch, shape_name, mesh, mn,
+                                 accum=args.accum, cfg=cfg)
+            except Exception as e:  # a failed cell is a bug: record it
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape_name, "mesh": mn,
+                       "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                n_fail += 1
+            with open(outfile, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            print(f"  -> {rec['status']}"
+                  + (f" compile {rec.get('compile_s')}s" if rec.get(
+                      "compile_s") else ""), flush=True)
+    print(f"done; {n_fail} failures -> {outfile}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (the dry-run launcher sets XLA_FLAGS before any jax import;
+smoke tests and benches see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips (pod, data, model) — the ``pod`` axis
+    carries cross-pod data parallelism (gradient all-reduce)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, examples, elastic rescale)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host has (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

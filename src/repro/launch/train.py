@@ -1,0 +1,99 @@
+"""Training launcher: --arch <id> on a host mesh (or the production mesh on
+real hardware), with checkpoints and restart.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --steps 50 --smoke            # reduced config, CPU
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+      --production-mesh             # on a real pod: full config + mesh
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import registry
+from repro.datapipe.synthetic import Prefetcher, SyntheticLM
+from repro.launch import mesh as mesh_mod
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import cosine_with_warmup
+from repro.train.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--model-axis", type=int, default=1,
+                    help="TP width for the host mesh")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = (registry.get_smoke_config(args.arch) if args.smoke
+           else registry.get_config(args.arch))
+    mesh = (mesh_mod.make_production_mesh() if args.production_mesh
+            else mesh_mod.make_host_mesh(args.model_axis))
+    single = mesh.devices.size == 1
+
+    opt = AdamW(lr=None)
+    sched = cosine_with_warmup(args.lr, warmup=min(100, args.steps // 10 + 1),
+                               total=args.steps)
+    step_fn = make_train_step(cfg, opt, None if single else mesh,
+                              lr_schedule=sched, donate=False)
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq, accum=args.accum)
+
+    params = tf.init(jax.random.PRNGKey(0), cfg)
+    opt_state = opt.init(params)
+    start = 0
+    if args.ckpt and ckpt.latest_step(args.ckpt) is not None:
+        state, start = ckpt.restore(
+            args.ckpt, {"p": tf.param_shapes(cfg),
+                        "o": jax.eval_shape(opt.init, tf.param_shapes(cfg))})
+        params, opt_state = state["p"], state["o"]
+        print(f"restored from step {start}")
+
+    if not single:
+        b0 = data.batch_at(0)
+        with mesh:
+            step_fn = step_fn.jit_for(jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), b0))
+
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"devices={mesh.devices.size} batch={args.batch} seq={args.seq}")
+
+    it = iter(Prefetcher(data))
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = next(it)
+        if single:
+            params, opt_state, m = step_fn(params, opt_state, batch)
+        else:
+            with mesh:
+                params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            tput = args.batch * args.seq / max(time.time() - t0, 1e-9)
+            print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.2f} tok/s {tput:.0f}")
+            t0 = time.time()
+        if args.ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt, step + 1, {"p": params, "o": opt_state},
+                      blocking=False)
+    if args.ckpt:
+        ckpt.save(args.ckpt, args.steps, {"p": params, "o": opt_state})
+
+
+if __name__ == "__main__":
+    main()

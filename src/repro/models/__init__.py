@@ -1,0 +1,16 @@
+"""Model zoo: unified init/forward/prefill/decode over all assigned archs."""
+from repro.models import layers, moe, ssm, transformer, xlstm
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init,
+    init_cache,
+    param_shapes,
+    prefill,
+)
+
+__all__ = [
+    "layers", "moe", "ssm", "transformer", "xlstm",
+    "init", "forward", "prefill", "decode_step", "init_cache",
+    "param_shapes",
+]

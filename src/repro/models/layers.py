@@ -1,0 +1,283 @@
+"""Shared model layers: norms, RoPE, GQA attention, MLPs.
+
+All layers are pure functions over parameter pytrees (nested dicts). Matmul
+accumulation is fp32 (``preferred_element_type``); activations flow in the
+config's dtype (bf16 by default).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+def norm_init(cfg: ModelConfig, with_bias=None):
+    with_bias = cfg.norm == "layernorm" if with_bias is None else with_bias
+    p = {"scale": jnp.ones((cfg.d_model,), cfg.p_dtype)}
+    if with_bias:
+        p["bias"] = jnp.zeros((cfg.d_model,), cfg.p_dtype)
+    return p
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm" and "bias" in p:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA), pluggable impl
+# --------------------------------------------------------------------------
+def attn_init(key, cfg: ModelConfig, d_kv_src: int | None = None):
+    """QKVO projections. ``d_kv_src`` != None -> cross-attention K/V source."""
+    d, hd = cfg.d_model, cfg.hd
+    dk = d_kv_src if d_kv_src is not None else d
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, cfg.n_heads * hd), cfg.p_dtype),
+        "wk": _dense_init(ks[1], (dk, cfg.n_kv_heads * hd), cfg.p_dtype),
+        "wv": _dense_init(ks[2], (dk, cfg.n_kv_heads * hd), cfg.p_dtype),
+        "wo": _dense_init(ks[3], (cfg.n_heads * hd, d), cfg.p_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), cfg.p_dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.p_dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.p_dtype)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def qkv(cfg: ModelConfig, p, x, kv_src=None):
+    """Project to (B, S, H, hd) / (B, Skv, Hkv, hd)."""
+    B = x.shape[0]
+    kv_src = x if kv_src is None else kv_src
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, -1, cfg.n_heads, cfg.hd)
+    k = _proj(kv_src, p["wk"], p.get("bk")).reshape(
+        B, -1, cfg.n_kv_heads, cfg.hd)
+    v = _proj(kv_src, p["wv"], p.get("bv")).reshape(
+        B, -1, cfg.n_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def sdpa_xla(q, k, v, *, causal: bool, kv_len=None, q_offset=0):
+    """Reference scaled-dot-product attention with GQA, fp32 softmax.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd). ``kv_len``: (B,) valid KV
+    prefix length (decode); ``q_offset``: absolute position of q[0] for the
+    causal mask.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (hd ** -0.5)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(Sk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    if kv_len is not None:
+        valid = jnp.arange(Sk)[None, :] < kv_len[:, None]  # (B, Sk)
+        logits = jnp.where(valid[:, None, None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def sdpa_xla_chunked(q, k, v, *, causal, kv_len=None, q_offset=0,
+                     block: int = 1024):
+    """Query-blockwise attention: numerically identical to ``sdpa_xla`` but
+    peak score memory is (B, Hkv, g, block, Sk) instead of (.., Sq, Sk) —
+    the XLA-level peak-memory control for long prefill when the Pallas
+    flash kernel isn't available (attn_impl="xla_chunked")."""
+    B, Sq, H, hd = q.shape
+    bs = min(block, Sq)
+    pad = (-Sq) % bs
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    nb = qp.shape[1] // bs
+    qb = qp.reshape(B, nb, bs, H, hd).swapaxes(0, 1)  # (nb, B, bs, H, hd)
+
+    def body(_, qi_i):
+        qi, i = qi_i
+        out = sdpa_xla(qi, k, v, causal=causal, kv_len=kv_len,
+                       q_offset=q_offset + i * bs)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, (qb, jnp.arange(nb)))
+    out = outs.swapaxes(0, 1).reshape(B, nb * bs, H, hd)
+    return out[:, :Sq]
+
+
+def sdpa(cfg: ModelConfig, q, k, v, *, causal, kv_len=None, q_offset=0):
+    """Implementation dispatch: xla | xla_chunked | pallas |
+    pallas_interpret."""
+    if cfg.attn_impl == "xla":
+        return sdpa_xla(q, k, v, causal=causal, kv_len=kv_len,
+                        q_offset=q_offset)
+    if cfg.attn_impl == "xla_chunked":
+        return sdpa_xla_chunked(q, k, v, causal=causal, kv_len=kv_len,
+                                q_offset=q_offset)
+    from repro.kernels.flash_attention import ops as flash_ops
+    from repro.kernels.decode_attention import ops as dec_ops
+
+    interpret = cfg.attn_impl == "pallas_interpret"
+    if q.shape[1] == 1 and kv_len is not None:  # decode
+        return dec_ops.decode_attention(q, k, v, kv_len, interpret=interpret)
+    return flash_ops.flash_attention(
+        q, k, v, causal=causal, kv_len=kv_len, q_offset=q_offset,
+        interpret=interpret,
+    )
+
+
+def attn_apply(cfg: ModelConfig, p, x, positions, *, causal=True,
+               kv_src=None, kv_positions=None, use_rope=True):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    q, k, v = qkv(cfg, p, x, kv_src)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        kp = positions if kv_positions is None else kv_positions
+        k = rope(k, kp, cfg.rope_theta)
+    out = sdpa(cfg, q, k, v, causal=causal)
+    B, S = x.shape[:2]
+    return _proj(out.reshape(B, S, -1), p["wo"]), (k, v)
+
+
+def attn_decode(cfg: ModelConfig, p, x, pos, ck, cv, cache_len, *,
+                use_rope=True, cross=False):
+    """Single-token decode against a KV cache.
+
+    x: (B, 1, d); ck/cv: (B, S_max, Hkv, hd); cache_len: (B,) ints.
+    Returns (out (B,1,d), new_ck, new_cv, new_len).
+    """
+    B = x.shape[0]
+    if cross:
+        q = _proj(x, p["wq"], p.get("bq")).reshape(B, 1, cfg.n_heads, cfg.hd)
+        if use_rope:
+            q = rope(q, pos, cfg.rope_theta)
+        k, v, new_len = ck, cv, cache_len
+    else:
+        q, k1, v1 = qkv(cfg, p, x)
+        if use_rope:
+            q = rope(q, pos, cfg.rope_theta)
+            k1 = rope(k1, pos, cfg.rope_theta)
+        # in-place scatter at each sequence's write position: touches one
+        # (Hkv, hd) row per batch element instead of rewriting the cache
+        # (§Perf iteration C: the full-cache `where` doubled decode traffic).
+        bidx = jnp.arange(B)
+        # mode="drop": writing past capacity is a no-op, never a corruption
+        k = ck.at[bidx, cache_len].set(k1[:, 0].astype(ck.dtype),
+                                       mode="drop")
+        v = cv.at[bidx, cache_len].set(v1[:, 0].astype(cv.dtype),
+                                       mode="drop")
+        new_len = cache_len + 1
+    out = sdpa(cfg, q, k, v, causal=False, kv_len=new_len)
+    return _proj(out.reshape(B, 1, -1), p["wo"]), k, v, new_len
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": _dense_init(ks[0], (d, ff), cfg.p_dtype),
+            "w_up": _dense_init(ks[1], (d, ff), cfg.p_dtype),
+            "w_down": _dense_init(ks[2], (ff, d), cfg.p_dtype),
+        }
+    return {
+        "w_up": _dense_init(ks[0], (d, ff), cfg.p_dtype),
+        "b_up": jnp.zeros((ff,), cfg.p_dtype),
+        "w_down": _dense_init(ks[1], (ff, d), cfg.p_dtype),
+        "b_down": jnp.zeros((d,), cfg.p_dtype),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    if cfg.mlp == "swiglu":
+        g = _proj(x, p["w_gate"])
+        u = _proj(x, p["w_up"])
+        return _proj(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u,
+                     p["w_down"])
+    h = _proj(x, p["w_up"], p["b_up"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return _proj(h, p["w_down"], p["b_down"])
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+def embed_init(key, cfg: ModelConfig):
+    # vocab padded to cfg.pad_vocab_to so the LM head stays TP-shardable
+    # (§Perf iteration B: a non-divisible vocab silently replicates the
+    # embedding and all chunk logits). Padding rows are masked at the head.
+    V = cfg.padded_vocab
+    p = {"tok": _dense_init(key, (V, cfg.d_model), cfg.p_dtype,
+                            scale=cfg.d_model ** -0.5)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _dense_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, V), cfg.p_dtype)
+    return p
+
+
+def embed_apply(p, tokens, dtype):
+    return p["tok"][tokens].astype(dtype)
+
+
+def unembed_apply(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        w = p["tok"].T
+    else:
+        w = p["unembed"]
+    logits = jnp.einsum("...d,dv->...v", x, w,
+                        preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with capacity-based
+dispatch (einsum formulation => XLA lowers the dispatch to all-to-alls under
+expert parallelism; FLOPs scale with *active* experts, not total)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": _dense_init(ks[1], (E, d, ff), cfg.p_dtype),
+        "w_up": _dense_init(ks[2], (E, d, ff), cfg.p_dtype),
+        "w_down": _dense_init(ks[3], (E, ff, d), cfg.p_dtype),
+    }
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.n_experts)
+    return max(c, cfg.experts_per_token)
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (B, S, d); aux: load-balancing loss.
+
+    GROUPED capacity-based dispatch (§Perf iteration A): tokens are split
+    into groups of <= ``cfg.moe_group`` and each group dispatches within its
+    own capacity buffer. The dispatch one-hot is then (G, Tg, E, Cg) with
+    Cg ∝ Tg — LINEAR total size in T instead of the naive (T, E, C) whose
+    C ∝ T made dispatch traffic quadratic in tokens (the granite-moe
+    prefill_32k baseline spent 99.9% of its bytes there). Per-group capacity
+    also bounds expert hot-spotting locally, the standard Switch/GShard
+    formulation. Overflow tokens fall back to the residual path.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.experts_per_token
+    Tg = min(cfg.moe_group, T)
+    while T % Tg:
+        Tg -= 1
+    G = T // Tg
+    C = _capacity(Tg, cfg)
+    xt = x.reshape(G, Tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)               # (G, Tg, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)         # (G, Tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # slot of each (token, k) within its expert's per-group capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # (G, Tg, K, E)
+    flat = onehot.reshape(G, Tg * K, E)
+    pos = ((jnp.cumsum(flat, axis=1) * flat - 1)
+           .reshape(G, Tg, K, E)
+           .max(axis=-1))                                  # (G, Tg, K)
+    within = (pos >= 0) & (pos < C)
+    pos_c = jnp.where(within, pos, C)                      # C = overflow bin
+
+    # SCATTER dispatch (§Perf iteration A2): route tokens into the per-
+    # expert capacity buffers with a scatter-add instead of a (Tg,K,E,C)
+    # one-hot einsum — traffic drops from O(T·K·E·C) to O(T·K·d).
+    gidx = jnp.arange(G)[:, None, None]
+    gidx = jnp.broadcast_to(gidx, (G, Tg, K))
+    vals = (xt[:, :, None, :] * within[..., None].astype(xt.dtype))
+    xe = jnp.zeros((G, E, C + 1, d), xt.dtype).at[
+        gidx, gate_idx, pos_c].add(vals)[:, :, :C]         # (G, E, C, d)
+
+    # expert matmuls in the (E, G*C, d) layout (single batch dim keeps the
+    # dot on the fast path of every backend)
+    xe3 = xe.swapaxes(0, 1).reshape(E, G * C, d)
+    g = jnp.einsum("ecd,edf->ecf", xe3, p["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", xe3, p["w_up"],
+                   preferred_element_type=jnp.float32).astype(xt.dtype)
+    h = (jax.nn.silu(g).astype(xt.dtype) * u)
+    ye3 = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
+                     preferred_element_type=jnp.float32).astype(xt.dtype)
+    ye = ye3.reshape(E, G, C, d).swapaxes(0, 1)            # (G, E, C, d)
+
+    # GATHER combine: y[t] = sum_k gate[t,k] * ye[e_k, slot_k]
+    back = ye[gidx, gate_idx, jnp.clip(pos_c, 0, C - 1)]   # (G, Tg, K, d)
+    y = (back * (gate_vals.astype(xt.dtype)
+                 * within.astype(xt.dtype))[..., None]).sum(2)
+
+    # Switch-style load balancing aux loss
+    me = probs.reshape(T, E).mean(0)
+    ce = (onehot.reshape(T, K, E).sum(1) > 0).astype(jnp.float32).mean(0)
+    aux = E * jnp.sum(me * ce)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,200 @@
+"""Mamba2 (SSD) blocks, TPU-adapted.
+
+The SSD scan is written in its *chunked* matmul form — intra-chunk work is
+(Q x Q) / (Q x N) matmuls that map onto the MXU, inter-chunk state flows
+through a `lax.scan` — the TPU-native restructuring of the CUDA selective
+scan. A Pallas kernel for the intra-chunk part lives in
+repro/kernels/ssm_scan; this module is the XLA path and the oracle's basis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d, din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * N
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * din + 2 * N + H), cfg.p_dtype),
+        "conv_w": _dense_init(ks[1], (cfg.ssm_conv, conv_ch), cfg.p_dtype,
+                              scale=cfg.ssm_conv ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), cfg.p_dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((din,), cfg.p_dtype),
+        "out_proj": _dense_init(ks[2], (din, d), cfg.p_dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B, L, C); w: (K, C) depthwise causal conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    segs = [xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(K)]
+    y = sum(segs) + b[None, None, :]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, L, H, P) inputs per head
+    dt: (B, L, H)    positive step sizes
+    A:  (H,)         negative per-head decay rates
+    Bm: (B, L, N)    input projections (single group)
+    Cm: (B, L, N)    output projections
+    Returns y: (B, L, H, P), final_state: (B, H, N, P).
+    """
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, f"seq {L} not divisible by chunk {Q}"
+    nc = L // Q
+
+    f32 = jnp.float32
+    xr = x.reshape(B, nc, Q, H, P).astype(f32)
+    dtr = dt.reshape(B, nc, Q, H).astype(f32)
+    Br = Bm.reshape(B, nc, Q, N).astype(f32)
+    Cr = Cm.reshape(B, nc, Q, N).astype(f32)
+
+    loga = dtr * A[None, None, None, :]                # (B,nc,Q,H) negative
+    cl = jnp.cumsum(loga, axis=2)                      # inclusive cumsum
+
+    # intra-chunk: y[i] += sum_{j<=i} C_i.B_j exp(cl_i - cl_j) dt_j x_j
+    CB = jnp.einsum("bciN,bcjN->bcij", Cr, Br)         # (B,nc,Q,Q)
+    seg = cl[:, :, :, None, :] - cl[:, :, None, :, :]  # (B,nc,Q,Q,H) i,j
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    xdt = xr * dtr[..., None]                          # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", CB, decay, xdt)
+
+    # chunk summaries: S_c = sum_j exp(cl_last - cl_j) dt_j B_j x_j^T
+    segl = jnp.exp(cl[:, :, -1:, :] - cl)              # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bcjh,bcjN,bcjhp->bchNp", segl * dtr, Br, xr)
+    chunk_decay = jnp.exp(cl[:, :, -1, :])             # (B,nc,H)
+
+    def scan_fn(S_prev, inp):
+        S_c, dec = inp  # (B,H,N,P), (B,H)
+        S_new = dec[:, :, None, None] * S_prev + S_c
+        return S_new, S_prev
+
+    S0 = jnp.zeros((B, H, N, P), f32)
+    S_final, S_prevs = jax.lax.scan(
+        scan_fn,
+        S0,
+        (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)              # (B,nc,H,N,P)
+
+    # inter-chunk: y[i] += C_i exp(cl_i) . S_prev
+    y_inter = jnp.einsum(
+        "bciN,bcih,bchNp->bcihp", Cr, jnp.exp(cl), S_prevs
+    )
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    return y.astype(x.dtype), S_final
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Sequential oracle for ssd_chunked (and the Pallas kernel)."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp  # (B,H,P),(B,H),(B,N),(B,N)
+        a = jnp.exp(dtt * A[None])                      # (B,H)
+        S = a[:, :, None, None] * S + jnp.einsum(
+            "bh,bN,bhp->bhNp", dtt, Bt, xt.astype(f32))
+        y = jnp.einsum("bN,bhNp->bhp", Ct, S)
+        return S, y
+
+    S0 = jnp.zeros((B, H, N, P), f32)
+    xs = (
+        jnp.moveaxis(x.astype(f32), 1, 0),
+        jnp.moveaxis(dt.astype(f32), 1, 0),
+        jnp.moveaxis(Bm.astype(f32), 1, 0),
+        jnp.moveaxis(Cm.astype(f32), 1, 0),
+    )
+    S, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), S
+
+
+def mamba_apply(cfg: ModelConfig, p, x, *, return_state=False):
+    """Full-sequence Mamba2 mixer. x: (B, L, d)."""
+    B, L, d = x.shape
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(conv_out, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xh = xs.reshape(B, L, H, P)
+    if cfg.ssm_impl == "xla":
+        y, S = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    else:
+        from repro.kernels.ssm_scan import ops as ssm_ops
+        y, S = ssm_ops.ssm_scan(
+            xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+            interpret=cfg.ssm_impl == "pallas_interpret")
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, L, din)
+    # gated RMSNorm (mamba2's norm-before-out_proj)
+    yz = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    ms = (yz.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-5)
+          * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("ble,ed->bld", yz, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_state:
+        K = cfg.ssm_conv
+        conv_state = conv_in[:, -(K - 1):, :] if L >= K - 1 else jnp.pad(
+            conv_in, ((0, 0), (K - 1 - L, 0), (0, 0)))
+        return out, {"ssm": S, "conv": conv_state}
+    return out
+
+
+def mamba_decode(cfg: ModelConfig, p, x, state):
+    """Single-token decode. x: (B, 1, d); state: {ssm (B,H,N,P), conv (B,K-1,C)}."""
+    B = x.shape[0]
+    din, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)       # (B,1,C)
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)  # (B,K,C)
+    w = p["conv_w"]
+    y = (window * w[None]).sum(axis=1, keepdims=True) + p["conv_b"]
+    conv_out = jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype)
+    xs, Bm, Cm = jnp.split(conv_out, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    a = jnp.exp(dt * A[None])                               # (B,H)
+    S = state["ssm"]
+    S = a[:, :, None, None] * S + jnp.einsum(
+        "bh,bN,bhp->bhNp", dt, Bm[:, 0].astype(jnp.float32), xh)
+    yh = jnp.einsum("bN,bhNp->bhp", Cm[:, 0].astype(jnp.float32), S)
+    yh = yh + xh * p["D"][None, :, None]
+    yv = yh.reshape(B, 1, din).astype(x.dtype)
+    yz = yv * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    ms = (yz.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    yz = (yz.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-5)
+          * p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("ble,ed->bld", yz, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_state = {"ssm": S, "conv": window[:, 1:, :]}
+    return out, new_state

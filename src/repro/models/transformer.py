@@ -1,0 +1,473 @@
+"""Unified model stack for all assigned architectures.
+
+One ``init`` / ``forward`` / ``prefill`` / ``decode_step`` / ``init_cache``
+surface dispatching on ``cfg.family``:
+
+  dense | vlm   : pre-norm GQA transformer (VLM prepends stub patch embeds)
+  moe           : GQA attention + top-k expert MLP
+  ssm           : xLSTM — scan over (mLSTM, sLSTM) superblocks
+  hybrid        : Zamba2 — Mamba2 backbone + one shared attention block
+                  invoked every ``attn_every`` layers (per-invocation norms)
+  audio         : Whisper backbone — bidirectional encoder (stub frame
+                  embeddings) + causal decoder with cross-attention
+
+Layer stacks are ``lax.scan`` over stacked parameters (HLO stays O(1) in
+depth — essential for the 512-device dry-run compiles) with optional per-layer
+remat. ``forward`` returns final *hidden states*; the LM head / loss is
+applied chunked in repro.train.loss so full-vocab logits are never
+materialized for a whole batch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as ll
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+def _attn_block_init(key, cfg, cross=False):
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": ll.norm_init(cfg),
+        "attn": ll.attn_init(ks[0], cfg),
+        "ln2": ll.norm_init(cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    else:
+        p["mlp"] = ll.mlp_init(ks[1], cfg)
+    if cross:
+        p["lnx"] = ll.norm_init(cfg)
+        p["xattn"] = ll.attn_init(ks[2], cfg)
+    return p
+
+
+def _stacked(key, n, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init(key, cfg: ModelConfig):
+    k_emb, k_blocks, k_extra = jax.random.split(key, 3)
+    params = {"embed": ll.embed_init(k_emb, cfg),
+              "final_norm": ll.norm_init(cfg)}
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        params["blocks"] = _stacked(
+            k_blocks, cfg.n_layers, lambda k: _attn_block_init(k, cfg))
+    elif fam == "ssm":
+        assert cfg.n_layers % 2 == 0
+        nsb = cfg.n_layers // 2
+        params["blocks"] = _stacked(
+            k_blocks, nsb,
+            lambda k: {
+                "mlstm": xlstm_mod.mlstm_init(jax.random.fold_in(k, 0), cfg),
+                "slstm": xlstm_mod.slstm_init(jax.random.fold_in(k, 1), cfg),
+            })
+    elif fam == "hybrid":
+        assert cfg.n_layers % cfg.attn_every == 0
+        n_inv = cfg.n_layers // cfg.attn_every
+        params["blocks"] = _stacked(
+            k_blocks, cfg.n_layers,
+            lambda k: {"ln": ll.norm_init(cfg),
+                       "mamba": ssm_mod.mamba_init(k, cfg)})
+        params["shared_attn"] = _attn_block_init(k_extra, cfg)
+        params["inv_norms"] = jnp.ones((n_inv, cfg.d_model), cfg.p_dtype)
+    elif fam == "audio":
+        ke, kd = jax.random.split(k_blocks)
+        params["enc_blocks"] = _stacked(
+            ke, cfg.encoder_layers, lambda k: _attn_block_init(k, cfg))
+        params["blocks"] = _stacked(
+            kd, cfg.n_layers,
+            lambda k: _attn_block_init(k, cfg, cross=True))
+        params["enc_norm"] = ll.norm_init(cfg)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run / sharding rules)."""
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+
+# ==========================================================================
+# full-sequence forward (train / prefill body)
+# ==========================================================================
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _attn_block_apply(cfg, p, x, positions, *, causal=True, enc=None,
+                      enc_positions=None, collect_kv=False):
+    h, kv = ll.attn_apply(cfg, p["attn"], ll.norm_apply(cfg, p["ln1"], x),
+                          positions, causal=causal)
+    x = x + h
+    xkv = None
+    if enc is not None:
+        h, xkv = ll.attn_apply(
+            cfg, p["xattn"], ll.norm_apply(cfg, p["lnx"], x), positions,
+            causal=False, kv_src=enc, kv_positions=enc_positions)
+        x = x + h
+    aux = jnp.float32(0.0)
+    if cfg.family == "moe":
+        h, aux = moe_mod.moe_apply(cfg, p["moe"],
+                                   ll.norm_apply(cfg, p["ln2"], x))
+    else:
+        h = ll.mlp_apply(cfg, p["mlp"], ll.norm_apply(cfg, p["ln2"], x))
+    x = x + h
+    if collect_kv:
+        return x, aux, (kv, xkv)
+    return x, aux
+
+
+def _embed_input(cfg, params, batch):
+    """tokens (+ stub modality embeddings) -> (B, S, d), positions (S,)."""
+    x = ll.embed_apply(params["embed"], batch["tokens"], cfg.act_dtype)
+    if cfg.family == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(cfg.act_dtype), x], 1)
+    S = x.shape[1]
+    return x, jnp.arange(S)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    """-> (hidden (B, S, d), aux_loss). Causal LM over the full sequence."""
+    fam = cfg.family
+    if fam == "audio":
+        return _forward_audio(cfg, params, batch)
+    x, positions = _embed_input(cfg, params, batch)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(x, lp):
+            x, aux = _attn_block_apply(cfg, lp, x, positions)
+            return x, aux
+        x, auxs = jax.lax.scan(_maybe_remat(cfg, body), x, params["blocks"])
+        aux = auxs.sum()
+    elif fam == "ssm":
+        def body(x, lp):
+            x = xlstm_mod.mlstm_apply(cfg, lp["mlstm"], x)
+            x = xlstm_mod.slstm_apply(cfg, lp["slstm"], x)
+            return x, jnp.float32(0.0)
+        x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["blocks"])
+        aux = jnp.float32(0.0)
+    elif fam == "hybrid":
+        n_inv = cfg.n_layers // cfg.attn_every
+        blocks = jax.tree.map(
+            lambda a: a.reshape(n_inv, cfg.attn_every, *a.shape[1:]),
+            params["blocks"])
+
+        def mamba_body(x, lp):
+            x = x + ssm_mod.mamba_apply(
+                cfg, lp["mamba"],
+                ll.norm_apply(cfg, lp["ln"], x))
+            return x, None
+
+        mb = _maybe_remat(cfg, mamba_body)
+        for g in range(n_inv):
+            grp = jax.tree.map(lambda a, g=g: a[g], blocks)
+            x, _ = jax.lax.scan(mb, x, grp)
+            xn = x * params["inv_norms"][g][None, None].astype(x.dtype)
+            x, _ = _attn_block_apply(cfg, params["shared_attn"], xn,
+                                     positions)
+        aux = jnp.float32(0.0)
+    else:
+        raise ValueError(fam)
+    return ll.norm_apply(cfg, params["final_norm"], x), aux
+
+
+def _forward_audio(cfg, params, batch):
+    """frames (B, Se, d) [stub embeddings] + tokens (B, Sd)."""
+    frames = batch["frames"].astype(cfg.act_dtype)
+    enc_pos = jnp.arange(frames.shape[1])
+
+    def enc_body(x, lp):
+        x, aux = _attn_block_apply(cfg, lp, x, enc_pos, causal=False)
+        return x, aux
+    enc, _ = jax.lax.scan(_maybe_remat(cfg, enc_body), frames,
+                          params["enc_blocks"])
+    enc = ll.norm_apply(cfg, params["enc_norm"], enc)
+
+    x = ll.embed_apply(params["embed"], batch["tokens"], cfg.act_dtype)
+    dec_pos = jnp.arange(x.shape[1])
+
+    def dec_body(x, lp):
+        x, aux = _attn_block_apply(cfg, lp, x, dec_pos, enc=enc,
+                                   enc_positions=enc_pos)
+        return x, aux
+    x, _ = jax.lax.scan(_maybe_remat(cfg, dec_body), x, params["blocks"])
+    return ll.norm_apply(cfg, params["final_norm"], x), jnp.float32(0.0)
+
+
+# ==========================================================================
+# KV / state caches
+# ==========================================================================
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Zero-initialized decode cache (shapes depend on family)."""
+    fam = cfg.family
+    dt = cfg.act_dtype
+    if fam in ("dense", "vlm", "moe"):
+        L = cfg.n_layers
+        kv = jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.hd), dt)
+        return {"k": kv, "v": kv, "len": jnp.zeros((batch,), jnp.int32)}
+    if fam == "ssm":
+        nsb = cfg.n_layers // 2
+        H, d = cfg.n_heads, cfg.d_model
+        di, dh = 2 * d, d // H
+        dk = di // H
+        f32 = jnp.float32
+        return {
+            "mlstm": {
+                "S": jnp.zeros((nsb, batch, H, dk, dk), f32),
+                "n": jnp.zeros((nsb, batch, H, dk), f32),
+                "conv": jnp.zeros((nsb, batch, 3, di), dt),
+            },
+            "slstm": {
+                "c": jnp.zeros((nsb, batch, H, dh), f32),
+                "n": jnp.zeros((nsb, batch, H, dh), f32),
+                "h": jnp.zeros((nsb, batch, H, dh), f32),
+                "m": jnp.full((nsb, batch, H, dh), -1e9, f32),
+            },
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    if fam == "hybrid":
+        L = cfg.n_layers
+        n_inv = L // cfg.attn_every
+        H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_ch = cfg.d_inner + 2 * N
+        return {
+            "ssm": jnp.zeros((L, batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch), dt),
+            "k": jnp.zeros((n_inv, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                           dt),
+            "v": jnp.zeros((n_inv, batch, max_seq, cfg.n_kv_heads, cfg.hd),
+                           dt),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    if fam == "audio":
+        L = cfg.n_layers
+        enc_seq = max_seq  # cross-KV over encoder frames
+        kv = jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.hd), dt)
+        xkv = jnp.zeros((L, batch, enc_seq, cfg.n_kv_heads, cfg.hd), dt)
+        return {"k": kv, "v": kv, "xk": xkv, "xv": xkv,
+                "len": jnp.zeros((batch,), jnp.int32),
+                "xlen": jnp.zeros((batch,), jnp.int32)}
+    raise ValueError(fam)
+
+
+# ==========================================================================
+# prefill
+# ==========================================================================
+def prefill(cfg: ModelConfig, params, batch, max_seq: int):
+    """Process the prompt; return (last hidden (B,1,d), cache)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        x, positions = _embed_input(cfg, params, batch)
+        B, S = x.shape[:2]
+
+        def body(x, lp):
+            x, _, (kv, _) = _attn_block_apply(
+                cfg, lp, x, positions, collect_kv=True)
+            return x, kv
+        x, kvs = jax.lax.scan(body, x, params["blocks"])
+        k, v = kvs  # (L, B, S, Hkv, hd)
+        pad = max_seq - S
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {"k": k, "v": v,
+                 "len": jnp.full((B,), S, jnp.int32)}
+        x = ll.norm_apply(cfg, params["final_norm"], x)
+        return x[:, -1:], cache
+    if fam == "ssm":
+        x, _ = _embed_input(cfg, params, batch)
+        B, S = x.shape[:2]
+
+        def body(x, lp):
+            x, mst = xlstm_mod.mlstm_apply(cfg, lp["mlstm"], x,
+                                           return_state=True)
+            x, sst = xlstm_mod.slstm_apply(cfg, lp["slstm"], x,
+                                           return_state=True)
+            return x, (mst, sst)
+        x, (mst, sst) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"mlstm": mst, "slstm": sst,
+                 "len": jnp.full((B,), S, jnp.int32)}
+        x = ll.norm_apply(cfg, params["final_norm"], x)
+        return x[:, -1:], cache
+    if fam == "hybrid":
+        x, positions = _embed_input(cfg, params, batch)
+        B, S = x.shape[:2]
+        n_inv = cfg.n_layers // cfg.attn_every
+        blocks = jax.tree.map(
+            lambda a: a.reshape(n_inv, cfg.attn_every, *a.shape[1:]),
+            params["blocks"])
+
+        def mamba_body(x, lp):
+            out, stt = ssm_mod.mamba_apply(
+                cfg, lp["mamba"], ll.norm_apply(cfg, lp["ln"], x),
+                return_state=True)
+            return x + out, stt
+
+        ssm_states, conv_states, ks, vs = [], [], [], []
+        for g in range(n_inv):
+            grp = jax.tree.map(lambda a, g=g: a[g], blocks)
+            x, stt = jax.lax.scan(mamba_body, x, grp)
+            ssm_states.append(stt["ssm"])
+            conv_states.append(stt["conv"])
+            xn = x * params["inv_norms"][g][None, None].astype(x.dtype)
+            x, _, (kv, _) = _attn_block_apply(
+                cfg, params["shared_attn"], xn, positions, collect_kv=True)
+            ks.append(kv[0])
+            vs.append(kv[1])
+        pad = max_seq - S
+        k = jnp.pad(jnp.stack(ks), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(jnp.stack(vs), ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = {
+            "ssm": jnp.concatenate(ssm_states, 0).reshape(
+                cfg.n_layers, B, cfg.ssm_heads, cfg.ssm_state,
+                cfg.ssm_head_dim),
+            "conv": jnp.concatenate(conv_states, 0).reshape(
+                cfg.n_layers, B, cfg.ssm_conv - 1, -1),
+            "k": k, "v": v, "len": jnp.full((B,), S, jnp.int32),
+        }
+        x = ll.norm_apply(cfg, params["final_norm"], x)
+        return x[:, -1:], cache
+    if fam == "audio":
+        frames = batch["frames"].astype(cfg.act_dtype)
+        enc_pos = jnp.arange(frames.shape[1])
+
+        def enc_body(x, lp):
+            x, _ = _attn_block_apply(cfg, lp, x, enc_pos, causal=False)
+            return x, None
+        enc, _ = jax.lax.scan(enc_body, frames, params["enc_blocks"])
+        enc = ll.norm_apply(cfg, params["enc_norm"], enc)
+
+        x = ll.embed_apply(params["embed"], batch["tokens"], cfg.act_dtype)
+        B, Sd = x.shape[:2]
+        dec_pos = jnp.arange(Sd)
+
+        def dec_body(x, lp):
+            x, _, (kv, xkv) = _attn_block_apply(
+                cfg, lp, x, dec_pos, enc=enc, enc_positions=enc_pos,
+                collect_kv=True)
+            return x, (kv, xkv)
+        x, (kvs, xkvs) = jax.lax.scan(dec_body, x, params["blocks"])
+        pad = max_seq - Sd
+        padk = lambda a: jnp.pad(
+            a, ((0, 0), (0, 0), (0, max_seq - a.shape[2]), (0, 0), (0, 0)))
+        cache = {"k": padk(kvs[0]), "v": padk(kvs[1]),
+                 "xk": padk(xkvs[0]), "xv": padk(xkvs[1]),
+                 "len": jnp.full((B,), Sd, jnp.int32),
+                 "xlen": jnp.full((B,), frames.shape[1], jnp.int32)}
+        x = ll.norm_apply(cfg, params["final_norm"], x)
+        return x[:, -1:], cache
+    raise ValueError(fam)
+
+
+# ==========================================================================
+# decode
+# ==========================================================================
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One decode step. tokens: (B, 1) -> (logits (B, 1, V), new cache)."""
+    fam = cfg.family
+    x = ll.embed_apply(params["embed"], tokens, cfg.act_dtype)
+    B = x.shape[0]
+    pos = cache["len"][:, None]  # (B,1) absolute position of the new token
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(x, scanned):
+            lp, ck, cv = scanned
+            h, nk, nv, _ = ll.attn_decode(
+                cfg, lp["attn"], ll.norm_apply(cfg, lp["ln1"], x), pos,
+                ck, cv, cache["len"])
+            x = x + h
+            if cfg.family == "moe":
+                h, _ = moe_mod.moe_apply(cfg, lp["moe"],
+                                         ll.norm_apply(cfg, lp["ln2"], x))
+            else:
+                h = ll.mlp_apply(cfg, lp["mlp"],
+                                 ll.norm_apply(cfg, lp["ln2"], x))
+            return x + h, (nk, nv)
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = {"k": nk, "v": nv, "len": cache["len"] + 1}
+    elif fam == "ssm":
+        def body(x, scanned):
+            lp, mst, sst = scanned
+            x, mst = xlstm_mod.mlstm_decode(cfg, lp["mlstm"], x, mst)
+            x, sst = xlstm_mod.slstm_decode(cfg, lp["slstm"], x, sst)
+            return x, (mst, sst)
+        x, (mst, sst) = jax.lax.scan(
+            body, x, (params["blocks"], cache["mlstm"], cache["slstm"]))
+        cache = {"mlstm": mst, "slstm": sst, "len": cache["len"] + 1}
+    elif fam == "hybrid":
+        n_inv = cfg.n_layers // cfg.attn_every
+        blocks = jax.tree.map(
+            lambda a: a.reshape(n_inv, cfg.attn_every, *a.shape[1:]),
+            params["blocks"])
+        rs = lambda a: a.reshape(n_inv, cfg.attn_every, *a.shape[1:])
+        ssm_g, conv_g = rs(cache["ssm"]), rs(cache["conv"])
+
+        def mamba_body(x, scanned):
+            lp, s_ssm, s_conv = scanned
+            out, stt = ssm_mod.mamba_decode(
+                cfg, lp["mamba"], ll.norm_apply(cfg, lp["ln"], x),
+                {"ssm": s_ssm, "conv": s_conv})
+            return x + out, (stt["ssm"], stt["conv"])
+
+        new_ssm, new_conv, new_k, new_v = [], [], [], []
+        for g in range(n_inv):
+            grp = jax.tree.map(lambda a, g=g: a[g], blocks)
+            x, (s1, c1) = jax.lax.scan(
+                mamba_body, x, (grp, ssm_g[g], conv_g[g]))
+            new_ssm.append(s1)
+            new_conv.append(c1)
+            xn = x * params["inv_norms"][g][None, None].astype(x.dtype)
+            sp = params["shared_attn"]
+            h, nk, nv, _ = ll.attn_decode(
+                cfg, sp["attn"], ll.norm_apply(cfg, sp["ln1"], xn), pos,
+                cache["k"][g], cache["v"][g], cache["len"])
+            x = x + h
+            h = ll.mlp_apply(cfg, sp["mlp"],
+                             ll.norm_apply(cfg, sp["ln2"], x))
+            x = x + h
+            new_k.append(nk)
+            new_v.append(nv)
+        cache = {
+            "ssm": jnp.concatenate(new_ssm, 0),
+            "conv": jnp.concatenate(new_conv, 0),
+            "k": jnp.stack(new_k), "v": jnp.stack(new_v),
+            "len": cache["len"] + 1,
+        }
+    elif fam == "audio":
+        def body(x, scanned):
+            lp, ck, cv, cxk, cxv = scanned
+            h, nk, nv, _ = ll.attn_decode(
+                cfg, lp["attn"], ll.norm_apply(cfg, lp["ln1"], x), pos,
+                ck, cv, cache["len"])
+            x = x + h
+            h, _, _, _ = ll.attn_decode(
+                cfg, lp["xattn"], ll.norm_apply(cfg, lp["lnx"], x), pos,
+                cxk, cxv, cache["xlen"], cross=True)
+            x = x + h
+            h = ll.mlp_apply(cfg, lp["mlp"],
+                             ll.norm_apply(cfg, lp["ln2"], x))
+            return x + h, (nk, nv)
+        x, (nk, nv) = jax.lax.scan(
+            body, x,
+            (params["blocks"], cache["k"], cache["v"], cache["xk"],
+             cache["xv"]))
+        cache = {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"],
+                 "len": cache["len"] + 1, "xlen": cache["xlen"]}
+    else:
+        raise ValueError(fam)
+
+    x = ll.norm_apply(cfg, params["final_norm"], x)
+    logits = ll.unembed_apply(cfg, params["embed"], x)
+    return logits, cache

@@ -1,0 +1,280 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory with hidden-state recurrence, sequential lax.scan).
+
+TPU adaptation notes (DESIGN.md): the mLSTM uses the sigmoid-input-gate
+gated-linear-attention variant so the chunkwise form is MXU matmuls without
+the exponential-gate stabilizer bookkeeping; the sLSTM keeps its inherently
+sequential recurrence (h_{t-1} feeds the gates) as a `lax.scan` — it cannot
+be parallelized over time and that is a property of the architecture, not
+the implementation. The assignment's d_ff=0 means blocks carry their own
+up/down projections and there is no separate MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _dense_init, norm_apply, norm_init
+
+
+# --------------------------------------------------------------------------
+# chunked gated linear attention (mLSTM core)
+# --------------------------------------------------------------------------
+def gla_chunked(q, k, v, i_gate, logf, chunk: int):
+    """S_t = f_t S_{t-1} + i_t k_t^T v_t;  n_t likewise with v=1;
+    y_t = (q_t S_t) / max(|q_t n_t|, 1).
+
+    q,k: (B,L,H,Dk); v: (B,L,H,Dv); i_gate: (B,L,H); logf: (B,L,H) (<=0).
+    Returns y: (B,L,H,Dv), (S_final, n_final).
+    """
+    B, L, H, Dk = q.shape
+    Dv = v.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+    f32 = jnp.float32
+
+    qr = q.reshape(B, nc, Q, H, Dk).astype(f32) * (Dk ** -0.5)
+    kr = k.reshape(B, nc, Q, H, Dk).astype(f32)
+    vr = v.reshape(B, nc, Q, H, Dv).astype(f32)
+    ir = i_gate.reshape(B, nc, Q, H).astype(f32)
+    cl = jnp.cumsum(logf.reshape(B, nc, Q, H).astype(f32), axis=2)
+
+    seg = cl[:, :, :, None, :] - cl[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    qk = jnp.einsum("bcihd,bcjhd->bchij", qr, kr)
+    irj = jnp.moveaxis(ir, 2, 3)[:, :, :, None, :]          # (B,nc,H,1,Q_j)
+    w = qk * jnp.moveaxis(decay, -1, 2) * irj               # (B,nc,H,i,j)
+    y_intra = jnp.einsum("bchij,bcjhv->bcihv", w, vr)
+    # normalizer intra: sum_j decay_ij i_j (q_i . k_j) is exactly w row-sum
+    n_intra_scalar = w.sum(-1)                              # (B,nc,H,Q)
+
+    segl = jnp.exp(cl[:, :, -1:, :] - cl)                  # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bcjh,bcjhd,bcjhv->bchdv", segl * ir, kr, vr)
+    n_chunk = jnp.einsum("bcjh,bcjhd->bchd", segl * ir, kr)
+    cdecay = jnp.exp(cl[:, :, -1, :])                      # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        S_prev, n_prev = carry
+        S_c, n_c, dec = inp
+        S_new = dec[:, :, None, None] * S_prev + S_c
+        n_new = dec[:, :, None] * n_prev + n_c
+        return (S_new, n_new), (S_prev, n_prev)
+
+    S0 = jnp.zeros((B, H, Dk, Dv), f32)
+    n0 = jnp.zeros((B, H, Dk), f32)
+    (S_f, n_f), (S_prevs, n_prevs) = jax.lax.scan(
+        scan_fn, (S0, n0),
+        (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(n_chunk, 1, 0),
+         jnp.moveaxis(cdecay, 1, 0)),
+    )
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)                  # (B,nc,H,Dk,Dv)
+    n_prevs = jnp.moveaxis(n_prevs, 0, 1)                  # (B,nc,H,Dk)
+
+    y_inter = jnp.einsum("bcihd,bcih,bchdv->bcihv", qr, jnp.exp(cl),
+                         S_prevs)
+    n_inter = jnp.einsum("bcihd,bcih,bchd->bcih", qr, jnp.exp(cl), n_prevs)
+
+    y = y_intra + y_inter                                   # (B,nc,Q,H,Dv)
+    n = jnp.moveaxis(n_intra_scalar, -1, 2)[..., None] + n_inter[..., None]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    return (
+        y.reshape(B, L, H, Dv).astype(q.dtype),
+        (S_f, n_f),
+    )
+
+
+def gla_ref(q, k, v, i_gate, logf):
+    """Sequential oracle for gla_chunked."""
+    B, L, H, Dk = q.shape
+    Dv = v.shape[-1]
+    f32 = jnp.float32
+
+    def step(carry, inp):
+        S, n = carry
+        qt, kt, vt, it, ft = inp
+        f = jnp.exp(ft)
+        S = f[..., None, None] * S + it[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = f[..., None] * n + it[..., None] * kt
+        qs = qt * (Dk ** -0.5)
+        num = jnp.einsum("bhd,bhdv->bhv", qs, S)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)), 1.0)
+        return (S, n), num / den[..., None]
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(f32), 1, 0)
+        for a in (q, k, v, i_gate, logf)
+    )
+    (S, n), ys = jax.lax.scan(step, (
+        jnp.zeros((B, H, Dk, Dv), f32), jnp.zeros((B, H, Dk), f32)), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype), (S, n)
+
+
+# --------------------------------------------------------------------------
+# mLSTM block
+# --------------------------------------------------------------------------
+def mlstm_init(key, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    di = 2 * d
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": norm_init(cfg),
+        "w_up": _dense_init(ks[0], (d, 2 * di), cfg.p_dtype),
+        "conv_w": _dense_init(ks[1], (4, di), cfg.p_dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), cfg.p_dtype),
+        "wq": _dense_init(ks[2], (di, di), cfg.p_dtype),
+        "wk": _dense_init(ks[3], (di, di), cfg.p_dtype),
+        "wv": _dense_init(ks[4], (di, di), cfg.p_dtype),
+        "w_if": _dense_init(ks[5], (di, 2 * H), jnp.float32),
+        "b_if": jnp.concatenate(
+            [jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "w_down": _dense_init(ks[6], (di, d), cfg.p_dtype),
+    }
+
+
+def _conv4(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None] for i in range(K))
+    return jax.nn.silu((y + b[None, None]).astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_apply(cfg: ModelConfig, p, x, *, chunk=128, return_state=False):
+    B, L, d = x.shape
+    H = cfg.n_heads
+    di = 2 * d
+    h = norm_apply(cfg, p["norm"], x)
+    up = jnp.einsum("bld,de->ble", h, p["w_up"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = _conv4(xm, p["conv_w"], p["conv_b"])
+    q = jnp.einsum("ble,ef->blf", xc, p["wq"]).reshape(B, L, H, -1)
+    k = jnp.einsum("ble,ef->blf", xc, p["wk"]).reshape(B, L, H, -1)
+    v = jnp.einsum("ble,ef->blf", xm, p["wv"]).reshape(B, L, H, -1)
+    gates = jnp.einsum("ble,ef->blf", xc.astype(jnp.float32), p["w_if"]) \
+        + p["b_if"]
+    i_gate = jax.nn.sigmoid(gates[..., :H])
+    logf = jax.nn.log_sigmoid(gates[..., H:])
+    y, (S, n) = gla_chunked(q, k, v, i_gate, logf, min(chunk, L))
+    y = y.reshape(B, L, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("ble,ed->bld", y, p["w_down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_state:
+        conv_state = jnp.pad(xm, ((0, 0), (max(0, 3 - L), 0), (0, 0)))[:, -3:]
+        return x + out, {"S": S, "n": n, "conv": conv_state}
+    return x + out
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, state):
+    B = x.shape[0]
+    H = cfg.n_heads
+    d = cfg.d_model
+    di = 2 * d
+    h = norm_apply(cfg, p["norm"], x)
+    up = jnp.einsum("bld,de->ble", h, p["w_up"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    window = jnp.concatenate([state["conv"], xm], axis=1)   # (B,4,di)
+    y = (window * p["conv_w"][None]).sum(1, keepdims=True) + p["conv_b"]
+    xc = jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype)
+    q = jnp.einsum("ble,ef->blf", xc, p["wq"]).reshape(B, H, -1)
+    k = jnp.einsum("ble,ef->blf", xc, p["wk"]).reshape(B, H, -1)
+    v = jnp.einsum("ble,ef->blf", xm, p["wv"]).reshape(B, H, -1)
+    gates = jnp.einsum("ble,ef->blf", xc.astype(jnp.float32), p["w_if"]) \
+        + p["b_if"]
+    i_gate = jax.nn.sigmoid(gates[:, 0, :H])
+    logf = jax.nn.log_sigmoid(gates[:, 0, H:])
+    f = jnp.exp(logf)
+    S = f[..., None, None] * state["S"] + i_gate[..., None, None] * (
+        k[..., :, None].astype(jnp.float32)
+        * v[..., None, :].astype(jnp.float32))
+    n = f[..., None] * state["n"] + i_gate[..., None] * k.astype(jnp.float32)
+    qs = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    num = jnp.einsum("bhd,bhdv->bhv", qs, S)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n)), 1.0)
+    yv = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    yv = yv * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("ble,ed->bld", yv, p["w_down"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return x + out, {"S": S, "n": n, "conv": window[:, 1:]}
+
+
+# --------------------------------------------------------------------------
+# sLSTM block (sequential; hidden-state recurrence)
+# --------------------------------------------------------------------------
+def slstm_init(key, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": norm_init(cfg),
+        "w_in": _dense_init(ks[0], (d, 4 * d), cfg.p_dtype),
+        "b_in": jnp.zeros((4 * d,), jnp.float32),
+        "r": _dense_init(ks[1], (H, dh, 4 * dh), cfg.p_dtype,
+                         scale=dh ** -0.5),
+        "w_out": _dense_init(ks[2], (d, d), cfg.p_dtype),
+    }
+
+
+def _slstm_cell(cfg, p, carry, gx):
+    """One sLSTM step. carry: (c, n, h, m) each (B,H,dh); gx: (B,4d)."""
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,hdf->bhf", h, p["r"].astype(jnp.float32))
+    g = gx.reshape(*gx.shape[:-1], H, 4 * dh).astype(jnp.float32) + rec
+    zi, fi, ii, oi = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    logf = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(logf + m, ii)
+    i = jnp.exp(ii - m_new)
+    f = jnp.exp(logf + m - m_new)
+    c = f * c + i * z
+    n = f * n + i
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h_new, m_new)
+
+
+def slstm_apply(cfg: ModelConfig, p, x, *, return_state=False):
+    B, L, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xin = norm_apply(cfg, p["norm"], x)
+    gx = jnp.einsum("bld,df->blf", xin, p["w_in"],
+                    preferred_element_type=jnp.float32) + p["b_in"]
+
+    def step(carry, g):
+        carry = _slstm_cell(cfg, p, carry, g)
+        return carry, carry[2]
+
+    f32 = jnp.float32
+    init = tuple(jnp.zeros((B, H, dh), f32) for _ in range(3)) + (
+        jnp.full((B, H, dh), -1e9, f32),)
+    carry, hs = jax.lax.scan(step, init, jnp.moveaxis(gx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, L, d).astype(x.dtype)
+    out = jnp.einsum("bld,df->blf", hs, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_state:
+        return x + out, {"c": carry[0], "n": carry[1], "h": carry[2],
+                         "m": carry[3]}
+    return x + out
+
+
+def slstm_decode(cfg: ModelConfig, p, x, state):
+    B = x.shape[0]
+    d = cfg.d_model
+    xin = norm_apply(cfg, p["norm"], x)
+    gx = jnp.einsum("bld,df->blf", xin, p["w_in"],
+                    preferred_element_type=jnp.float32) + p["b_in"]
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry = _slstm_cell(cfg, p, carry, gx[:, 0])
+    hs = carry[2].reshape(B, 1, d).astype(x.dtype)
+    out = jnp.einsum("bld,df->blf", hs, p["w_out"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return x + out, {"c": carry[0], "n": carry[1], "h": carry[2],
+                     "m": carry[3]}

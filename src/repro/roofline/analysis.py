@@ -1,0 +1,167 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+  t_comp = HLO_FLOPs / (chips * peak)         [cost_analysis]
+  t_mem  = HLO_bytes / (chips * HBM_bw)       [cost_analysis]
+  t_coll = collective_bytes / (chips * ICI)   [parsed from the HLO text]
+
+cost_analysis() on the SPMD-partitioned module reports *per-device* numbers
+in current JAX; we detect whole-program counts (older behaviour) by checking
+against the analytic model FLOPs and normalize to per-device. collective
+bytes are summed over all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute operand sizes in the compiled module text.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[4,128]{...}' -> bytes. Tuple shapes handled by the caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op, by op kind.
+
+    HLO lines look like:
+      %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=...
+    The lhs shape is the op *result*; for all-reduce result==operand size,
+    for all-gather it is the gathered size (the bytes that crossed links up
+    to a ring factor — a consistent, conservative proxy).
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result shape appears after '=' ; op kind after the shape
+        m = re.match(r"%?[\w.\-]+ = (.+?) (%?[\w\-]+)\(", s)
+        if not m:
+            continue
+        kind = m.group(2).lstrip("%")
+        base = kind.split(".")[0]
+        # 'all-reduce-start'/'-done' pairs: count only '-start'
+        if base.endswith("-done"):
+            continue
+        norm = base.replace("-start", "")
+        if norm in _COLLECTIVES:
+            out[norm] = out.get(norm, 0) + _shape_bytes(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float            # 6·N_active·D (global, fwd+bwd) or serve
+    peak_mem_per_device: float | None = None
+
+    @property
+    def t_comp(self) -> float:
+        return self.flops_per_device / hw.PEAK_FLOPS_BF16
+
+    @property
+    def t_mem(self) -> float:
+        return self.bytes_per_device / hw.HBM_BW
+
+    @property
+    def t_coll(self) -> float:
+        return self.coll_bytes_per_device / hw.ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_comp, "memory": self.t_mem,
+                 "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline-optimistic step time: max of the three terms (perfect
+        overlap assumption)."""
+        return max(self.t_comp, self.t_mem, self.t_coll)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs (remat/redundancy waste)."""
+        tot = self.flops_per_device * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / t) / hw.PEAK_FLOPS_BF16
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_comp_s": self.t_comp, "t_mem_s": self.t_mem,
+            "t_coll_s": self.t_coll, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_frac": self.useful_flops_fraction,
+            "mfu": self.mfu,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the cell: 6·N_active·D for training,
+    2·N_active·D(+attn KV reads folded into mem) per decoded token set."""
+    n_active = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence in the batch
+    return 2.0 * n_active * shape.global_batch
+
+
+def from_compiled(arch, shape_name, mesh_name, chips, cost, hlo_text,
+                  model_flops, memory_stats=None) -> Roofline:
+    """cost: compiled.cost_analysis() dict; hlo_text: compiled.as_text()."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = sum(collective_bytes(hlo_text).values())
+    # detect whole-program counts and normalize to per-device
+    if model_flops and flops > 3.0 * model_flops:
+        flops /= chips
+        byts /= chips
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=coll / chips,
+        model_flops=model_flops,
+        peak_mem_per_device=memory_stats,
+    )

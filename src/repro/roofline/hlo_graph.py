@@ -1,0 +1,125 @@
+"""Trip-count-aware collective-byte accounting over compiled HLO text.
+
+The flat-text parse undercounts collectives inside ``while`` bodies (FSDP
+all-gathers inside the layer scan run L times, not once). This module splits
+the module into computations, builds the call graph (while/call/fusion/
+conditional), extracts while trip counts from the condition computation's
+compare-against-constant, and sums collective bytes with multipliers.
+"""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->", re.M)
+_CALLED = re.compile(
+    r"(?:body|to_apply|calls|branch_computations)=\{?%?([\w.\-,%\s]+?)\}?[,)]"
+)
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line.strip())
+    return comps
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """Heuristic: the integer constant compared in the condition."""
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"%?([\w.\-]+) = \w+\[\] constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if " compare(" in ln:
+            for name, val in consts.items():
+                if re.search(rf"%?{re.escape(name)}\b", ln.split("compare(")[1]):
+                    return max(val, 1)
+    return max(consts.values(), default=1)
+
+
+def collective_bytes_weighted(hlo: str) -> dict[str, float]:
+    comps = split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                entry = m.group(1)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    if entry is None:
+        return {}
+
+    memo: dict[str, dict[str, float]] = {}
+
+    def walk(name: str, depth=0) -> dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in comps:
+            return {}
+        memo[name] = {}  # cycle guard
+        total: dict[str, float] = {}
+        for ln in comps[name]:
+            m = re.match(r"%?[\w.\-]+ = (.+?) ([\w\-]+)\(", ln)
+            if not m:
+                continue
+            shape_s, op = m.group(1), m.group(2)
+            base = op.split(".")[0]
+            if base.endswith("-done"):
+                continue
+            norm = base.replace("-start", "")
+            if norm in _COLLECTIVES:
+                total[norm] = total.get(norm, 0.0) + _shape_bytes(shape_s)
+            if base == "while":
+                bm, cm = _BODY.search(ln), _COND.search(ln)
+                if bm:
+                    trips = _trip_count(comps.get(cm.group(1), [])) if cm else 1
+                    sub = walk(bm.group(1), depth + 1)
+                    for k, v in sub.items():
+                        total[k] = total.get(k, 0.0) + trips * v
+            elif base in ("call", "fusion", "conditional", "async-start"):
+                cm2 = _CALLED.search(ln)
+                if cm2:
+                    for cname in re.split(r"[,\s%]+", cm2.group(1)):
+                        if cname:
+                            sub = walk(cname, depth + 1)
+                            for k, v in sub.items():
+                                total[k] = total.get(k, 0.0) + v
+        memo[name] = total
+        return total
+
+    return walk(entry)

@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants (the TARGET; this container runs CPU)."""
+
+PEAK_FLOPS_BF16 = 197e12     # per chip, bf16
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per-chip usable, one axis)
+HBM_BYTES = 16 * 2**30       # 16 GiB per chip
+CHIPS_PER_POD = 256

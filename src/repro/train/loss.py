@@ -1,0 +1,69 @@
+"""Chunked cross-entropy LM loss.
+
+The LM head matmul + softmax runs per sequence-chunk inside a ``lax.scan``,
+so (tokens x vocab) logits are never materialized for the whole batch — the
+difference between fitting and OOMing for command-r's 256k vocab at 1M-token
+global batches. With vocab TP-sharded, XLA keeps the chunk logits sharded and
+reduces the logsumexp across the ``model`` axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ll
+
+
+def chunked_lm_loss(cfg, params, hidden, labels, mask, chunk: int = 512):
+    """hidden: (B, S, d); labels, mask: (B, S). Returns (mean_loss, n_tokens).
+
+    ``mask`` zeroes padding / modality positions (e.g. VLM patch slots).
+    """
+    B, S, d = hidden.shape
+    C = min(chunk, S)
+    while S % C:
+        C -= 1
+    nc = S // C
+    h = hidden.reshape(B, nc, C, d).swapaxes(0, 1)     # (nc, B, C, d)
+    y = labels.reshape(B, nc, C).swapaxes(0, 1)
+    m = mask.reshape(B, nc, C).swapaxes(0, 1)
+
+    def body(carry, xs):
+        loss_sum, count = carry
+        hc, yc, mc = xs
+        logits = ll.unembed_apply(cfg, params["embed"], hc)  # fp32 (B,C,V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, yc[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (loss_sum + nll.sum(), count + mc.sum()), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (h, y, m))
+    return loss_sum / jnp.maximum(count, 1.0), count
+
+
+def make_loss_fn(cfg, aux_weight: float = 0.01):
+    """(params, batch) -> (scalar loss, metrics dict).
+
+    batch: tokens (B, S) plus family extras; labels are tokens shifted left.
+    VLM: loss only on text positions (hidden covers patches + text).
+    """
+    from repro.models import transformer as tf
+
+    def loss_fn(params, batch):
+        hidden, aux = tf.forward(cfg, params, batch)
+        tokens = batch["tokens"]
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.ones_like(labels, jnp.float32).at[:, -1].set(0.0)
+        if "mask" in batch:
+            mask = mask * batch["mask"]
+        if cfg.family == "vlm":
+            # hidden = [patches | text]; predict text tokens only
+            hidden = hidden[:, cfg.n_patches:]
+        loss, count = chunked_lm_loss(cfg, params, hidden, labels, mask)
+        total = loss + aux_weight * aux
+        return total, {"loss": loss, "aux": aux, "tokens": count}
+
+    return loss_fn

@@ -1,0 +1,130 @@
+"""jit-compiled train / serve steps with multi-pod sharding.
+
+``make_train_step``: microbatched gradient accumulation via ``lax.scan``
+(batch: (A, mb, S)), per-layer remat inside the model, AdamW update. The
+returned callable is ``jax.jit`` with explicit in/out shardings so the same
+code lowers on 1 CPU device, a 256-chip pod, or the 512-chip 2-pod mesh.
+
+``make_serve_steps``: prefill + single-token decode against a sharded cache.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.train.loss import make_loss_fn
+
+
+def make_train_step(cfg, optimizer: AdamW, mesh=None, *, lr_schedule=None,
+                    donate: bool = True):
+    """-> train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch["tokens"]: (A, mb, S) — A grad-accum microbatches.
+    """
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        def micro(carry, mb):
+            gsum, lsum, tsum = carry
+            (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + metrics["loss"], tsum + metrics["tokens"]), None
+
+        gzero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum, tsum), _ = jax.lax.scan(
+            micro, (gzero, jnp.float32(0.0), jnp.float32(0.0)), batch)
+        A = batch["tokens"].shape[0]
+        grads = jax.tree.map(lambda g: g / A, gsum)
+        lr = lr_schedule(opt_state.step) if lr_schedule else None
+        params, opt_state, gnorm = optimizer.update(
+            grads, opt_state, params, lr=lr)
+        metrics = {"loss": lsum / A, "grad_norm": gnorm, "tokens": tsum}
+        return params, opt_state, metrics
+
+    if mesh is None:
+        return jax.jit(train_step, donate_argnums=(0, 1) if donate else ())
+
+    pshapes = tf.param_shapes(cfg)
+    pshard = sh.param_shardings(pshapes, mesh, cfg)
+    oshard = sh.opt_state_shardings(pshapes, mesh, cfg)
+
+    def in_batch_shardings(batch_shapes):
+        return sh.batch_sharding(mesh, batch_shapes, accum_dim=True)
+
+    def jit_for(batch_shapes):
+        return jax.jit(
+            train_step,
+            in_shardings=(pshard, oshard, in_batch_shardings(batch_shapes)),
+            out_shardings=(pshard, oshard,
+                           jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                        {"loss": 0, "grad_norm": 0,
+                                         "tokens": 0})),
+            donate_argnums=(0, 1) if donate else (),
+        )
+
+    train_step.jit_for = jit_for  # type: ignore[attr-defined]
+    train_step.param_shardings = pshard  # type: ignore[attr-defined]
+    train_step.opt_shardings = oshard  # type: ignore[attr-defined]
+    return train_step
+
+
+def make_serve_steps(cfg, mesh=None):
+    """-> (prefill_step, decode_step) jit'd (sharded when mesh given)."""
+
+    def prefill_step(params, batch, *, max_seq):
+        from repro.models import layers as ll
+        hidden, cache = tf.prefill(cfg, params, batch, max_seq)
+        logits = ll.unembed_apply(cfg, params["embed"], hidden)
+        return logits, cache
+
+    def decode_step(params, cache, tokens):
+        return tf.decode_step(cfg, params, cache, tokens)
+
+    if mesh is None:
+        return (
+            jax.jit(prefill_step, static_argnames=("max_seq",)),
+            jax.jit(decode_step),
+        )
+
+    pshapes = tf.param_shapes(cfg)
+    pshard = sh.param_shardings(pshapes, mesh, cfg)
+
+    def decode_jit_for(cache_shapes, token_shapes):
+        cshard = sh.cache_sharding(cfg, mesh, cache_shapes)
+        tshard = sh.batch_sharding(mesh, token_shapes)
+        return jax.jit(
+            decode_step,
+            in_shardings=(pshard, cshard, tshard),
+            out_shardings=(
+                sh.batch_sharding(
+                    mesh,
+                    jax.eval_shape(decode_step, pshapes, cache_shapes,
+                                   token_shapes)[0]),
+                cshard,
+            ),
+            donate_argnums=(1,),
+        )
+
+    def prefill_jit_for(batch_shapes, max_seq):
+        bshard = sh.batch_sharding(mesh, batch_shapes)
+        fn = functools.partial(prefill_step, max_seq=max_seq)
+        out_sh = jax.eval_shape(fn, pshapes, batch_shapes)
+        return jax.jit(
+            fn,
+            in_shardings=(pshard, bshard),
+            out_shardings=(
+                sh.batch_sharding(mesh, out_sh[0]),
+                sh.cache_sharding(cfg, mesh, out_sh[1]),
+            ),
+        )
+
+    return prefill_jit_for, decode_jit_for

@@ -1,0 +1,161 @@
+"""Engine tests: conservation invariants, oracle equivalence (property-based),
+and qualitative reproduction of the paper's headline behaviours."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import api, engine, pyengine, workload
+from repro.core.types import Trace
+
+SPEC = api.paper_system()
+HEURISTICS = ["MM", "MSD", "MMU", "ELARE", "FELARE"]
+
+
+def _dyadic(x):
+    return (np.round(np.asarray(x) * 64) / 64).astype(np.float32)
+
+
+def _trace(seed, n, rate):
+    tr = workload.poisson_trace(jax.random.PRNGKey(seed), n, rate, SPEC.eet)
+    return tr._replace(
+        arrival=jnp.asarray(_dyadic(tr.arrival)),
+        deadline=jnp.asarray(_dyadic(tr.deadline)),
+        exec_actual=jnp.asarray(_dyadic(tr.exec_actual)),
+    )
+
+
+@pytest.mark.parametrize("heuristic", HEURISTICS)
+def test_task_conservation(heuristic):
+    """Every arrived task ends exactly one of completed/missed/cancelled."""
+    tr = _trace(1, 300, 4.0)
+    m = engine.simulate(tr, SPEC, heuristic)
+    total = (
+        np.asarray(m.completed_by_type)
+        + np.asarray(m.missed_by_type)
+        + np.asarray(m.cancelled_by_type)
+    )
+    assert np.array_equal(total, np.asarray(m.arrived_by_type))
+    assert int(np.sum(m.arrived_by_type)) == 300
+
+
+@pytest.mark.parametrize("heuristic", HEURISTICS)
+def test_energy_invariants(heuristic):
+    tr = _trace(2, 200, 3.0)
+    m = engine.simulate(tr, SPEC, heuristic)
+    assert float(m.energy_wasted) <= float(m.energy_dynamic) + 1e-4
+    assert float(m.energy_dynamic) >= 0 and float(m.energy_idle) >= 0
+    assert float(m.makespan) > 0
+
+
+@pytest.mark.parametrize("heuristic", HEURISTICS)
+@pytest.mark.parametrize("seed", [0, 7])
+def test_matches_python_oracle(heuristic, seed):
+    tr = _trace(seed, 120, 2.5)
+    mj = engine.simulate(tr, SPEC, heuristic)
+    mp = pyengine.simulate(tr, SPEC, heuristic)
+    for k in ["completed_by_type", "missed_by_type", "cancelled_by_type",
+              "arrived_by_type"]:
+        assert np.array_equal(np.asarray(getattr(mj, k)), mp[k]), k
+    for k in ["energy_dynamic", "energy_wasted", "makespan"]:
+        assert float(getattr(mj, k)) == pytest.approx(float(mp[k]), rel=1e-3)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    rate=st.sampled_from([1.0, 2.0, 4.0, 8.0]),
+    heuristic=st.sampled_from(HEURISTICS),
+)
+@settings(max_examples=12, deadline=None)
+def test_property_oracle_equivalence(seed, rate, heuristic):
+    """The vectorized lax engine and the loop oracle agree on arbitrary
+    Poisson traces (dyadic-rounded so fp32/fp64 arithmetic is exact)."""
+    tr = _trace(seed, 60, rate)
+    mj = engine.simulate(tr, SPEC, heuristic)
+    mp = pyengine.simulate(tr, SPEC, heuristic)
+    assert np.array_equal(
+        np.asarray(mj.completed_by_type), mp["completed_by_type"]
+    )
+    assert np.array_equal(
+        np.asarray(mj.cancelled_by_type), mp["cancelled_by_type"]
+    )
+    assert float(mj.energy_wasted) == pytest.approx(
+        mp["energy_wasted"], rel=1e-3, abs=1e-3
+    )
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    heuristic=st.sampled_from(HEURISTICS),
+    queue_size=st.sampled_from([1, 2, 4]),
+)
+@settings(max_examples=10, deadline=None)
+def test_property_conservation_any_queue(seed, heuristic, queue_size):
+    spec = api.paper_system(queue_size=queue_size)
+    tr = _trace(seed, 80, 5.0)
+    m = engine.simulate(tr, spec, heuristic)
+    total = (
+        np.asarray(m.completed_by_type)
+        + np.asarray(m.missed_by_type)
+        + np.asarray(m.cancelled_by_type)
+    )
+    assert np.array_equal(total, np.asarray(m.arrived_by_type))
+
+
+def test_vmap_batch_matches_single():
+    traces = workload.trace_batch(
+        jax.random.PRNGKey(3), 4, 100, 3.0, SPEC.eet
+    )
+    batched = engine.simulate_batch(traces, SPEC, "ELARE")
+    for i in range(4):
+        single = engine.simulate(jax.tree.map(lambda x: x[i], traces),
+                                 SPEC, "ELARE")
+        assert np.array_equal(
+            np.asarray(batched.completed_by_type[i]),
+            np.asarray(single.completed_by_type),
+        )
+
+
+# --- paper-claim-level behaviour -------------------------------------------
+def test_elare_wastes_less_energy_than_mm():
+    """Sec. VII-B: ELARE cuts wasted energy at low/moderate arrival rates."""
+    traces = workload.trace_batch(
+        jax.random.PRNGKey(11), 8, 400, 4.0, SPEC.eet
+    )
+    w = {}
+    for h in ["MM", "ELARE"]:
+        m = engine.simulate_batch(traces, SPEC, h)
+        w[h] = float(np.mean(np.asarray(m.energy_wasted)))
+    assert w["ELARE"] < w["MM"]
+
+
+def test_elare_cancels_proactively_mm_misses():
+    """Fig. 6: ELARE's unsuccessful tasks are mostly cancellations; MM's are
+    mostly deadline misses (which imply wasted energy)."""
+    traces = workload.trace_batch(
+        jax.random.PRNGKey(13), 8, 400, 4.0, SPEC.eet
+    )
+    me = engine.simulate_batch(traces, SPEC, "ELARE")
+    mm = engine.simulate_batch(traces, SPEC, "MM")
+    assert np.sum(me.cancelled_by_type) > np.sum(me.missed_by_type)
+    assert np.sum(mm.missed_by_type) > np.sum(mm.cancelled_by_type)
+
+
+def test_felare_improves_fairness_over_elare():
+    """Fig. 7: FELARE narrows the per-type completion-rate spread with only
+    marginal collective completion loss."""
+    traces = workload.trace_batch(
+        jax.random.PRNGKey(17), 10, 500, 5.0, SPEC.eet
+    )
+    res = {}
+    for h in ["ELARE", "FELARE"]:
+        m = engine.simulate_batch(traces, SPEC, h)
+        c = np.asarray(m.completed_by_type, np.float64).sum(0)
+        a = np.asarray(m.arrived_by_type, np.float64).sum(0)
+        cr = c / np.maximum(a, 1)
+        res[h] = (cr.std(), c.sum() / a.sum())
+    assert res["FELARE"][0] <= res["ELARE"][0] + 1e-9
+    # negligible collective completion degradation (< 5 points)
+    assert res["FELARE"][1] >= res["ELARE"][1] - 0.05

@@ -1,0 +1,99 @@
+"""Unit + property tests for the paper's closed-form math (Eqs. 1-4)."""
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import equations
+from repro.core.eet import TABLE_I
+
+
+class TestCompletionTime:
+    def test_feasible_row(self):
+        # s + e <= d -> c = s + e
+        assert float(equations.completion_time(1.0, 2.0, 10.0)) == 3.0
+
+    def test_killed_mid_run(self):
+        # s < d < s + e -> c = d (killed at the deadline)
+        assert float(equations.completion_time(1.0, 20.0, 10.0)) == 10.0
+
+    def test_never_started(self):
+        # s >= d -> c = s (dropped before execution)
+        assert float(equations.completion_time(11.0, 2.0, 10.0)) == 11.0
+
+    @given(
+        s=st.floats(0, 100, allow_nan=False),
+        e=st.floats(0.01, 100, allow_nan=False),
+        d=st.floats(0, 200, allow_nan=False),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_cases_partition(self, s, e, d):
+        c = float(equations.completion_time(s, e, d))
+        s32, e32, d32 = (np.float32(x) for x in (s, e, d))
+        if s32 + e32 <= d32:
+            assert c == pytest.approx(float(s32 + e32), rel=1e-6)
+        elif s32 < d32:
+            assert c == pytest.approx(float(d32), rel=1e-6)
+        else:
+            assert c == pytest.approx(float(s32), rel=1e-6)
+
+
+class TestEnergy:
+    def test_feasible_energy(self):
+        assert float(equations.expected_energy(0.0, 2.0, 10.0, 3.0)) == 6.0
+
+    def test_wasted_energy_killed(self):
+        # runs from s to d then killed: p * (d - s)
+        assert float(equations.expected_energy(4.0, 20.0, 10.0, 2.0)) == 12.0
+
+    def test_zero_energy_never_started(self):
+        assert float(equations.expected_energy(12.0, 5.0, 10.0, 2.0)) == 0.0
+
+    @given(
+        s=st.floats(0, 50), e=st.floats(0.01, 50), d=st.floats(0, 100),
+        p=st.floats(0.1, 10),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_energy_nonnegative_and_bounded(self, s, e, d, p):
+        ec = float(equations.expected_energy(s, e, d, p))
+        assert ec >= 0.0
+        # never exceeds the energy of a full successful run
+        assert ec <= p * e + 1e-4
+
+
+class TestFairnessLimit:
+    def test_paper_example(self):
+        # Sec. V worked example: rates 20/60/15/45 %, f=1 -> eps = 16.6
+        cr = jnp.array([0.20, 0.60, 0.15, 0.45])
+        eps = float(equations.fairness_limit(cr, 1.0))
+        assert eps == pytest.approx(0.166, abs=5e-3)
+
+    def test_large_f_disables(self):
+        cr = jnp.array([0.2, 0.9, 0.4, 0.7])
+        assert float(equations.fairness_limit(cr, 100.0)) == 0.0
+
+    @given(st.lists(st.floats(0, 1), min_size=2, max_size=16),
+           st.floats(0, 5))
+    @settings(max_examples=200, deadline=None)
+    def test_limit_below_mean(self, rates, f):
+        eps = float(equations.fairness_limit(jnp.array(rates), f))
+        assert 0.0 <= eps <= np.mean(rates) + 1e-6
+
+
+class TestDeadlines:
+    def test_eq4_structure(self):
+        # delta = arr + e_bar_i + e_bar, from Table I
+        e_bar_i = TABLE_I.mean(axis=1)
+        e_bar = e_bar_i.mean()
+        arr = jnp.array([0.0, 5.0])
+        tt = jnp.array([2, 0])
+        d = np.asarray(equations.deadlines(arr, tt, TABLE_I))
+        assert d[0] == pytest.approx(e_bar_i[2] + e_bar, rel=1e-5)
+        assert d[1] == pytest.approx(5.0 + e_bar_i[0] + e_bar, rel=1e-5)
+
+    def test_deadline_after_arrival(self):
+        arr = jnp.linspace(0, 10, 7)
+        tt = jnp.zeros(7, jnp.int32)
+        d = equations.deadlines(arr, tt, TABLE_I)
+        assert bool(jnp.all(d > arr))

@@ -1,0 +1,195 @@
+"""Unit tests for the mapping heuristics at a single mapping event."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heuristics
+from repro.core.heuristics import MachineView
+from repro.core.types import SystemArrays
+
+# 2 task types x 2 machines toy system:
+#   machine 0: slow & frugal; machine 1: fast & hungry.
+EET = jnp.array([[4.0, 1.0], [8.0, 2.0]], jnp.float32)
+SYS = SystemArrays(
+    eet=EET,
+    p_dyn=jnp.array([1.0, 5.0], jnp.float32),
+    p_idle=jnp.array([0.05, 0.05], jnp.float32),
+)
+
+
+def _view(avail=(0.0, 0.0), queue=None, Q=2):
+    M = len(avail)
+    q = jnp.full((M, Q), -1, jnp.int32) if queue is None else jnp.asarray(queue)
+    qlen = (q >= 0).sum(axis=1).astype(jnp.int32)
+    return MachineView(jnp.asarray(avail, jnp.float32), q, qlen)
+
+
+def _call(fn, now, pending, ttype, dl, view, suffered=None):
+    pending = jnp.asarray(pending)
+    suffered = (
+        jnp.zeros(EET.shape[0], bool) if suffered is None
+        else jnp.asarray(suffered)
+    )
+    return fn(
+        jnp.float32(now), pending, jnp.asarray(ttype, jnp.int32),
+        jnp.asarray(dl, jnp.float32), view, SYS, suffered,
+    )
+
+
+class TestELARE:
+    def test_picks_min_energy_feasible(self):
+        # type-0 task, generous deadline: both machines feasible.
+        # energies: m0 = 1*4 = 4, m1 = 5*1 = 5 -> picks m0 (min energy).
+        act = _call(heuristics.elare_select, 0.0, [True], [0], [100.0], _view())
+        assert int(act.assign[0]) == 0
+        assert int(act.assign[1]) == -1
+
+    def test_falls_back_to_fast_machine_under_tight_deadline(self):
+        # deadline 2: only m1 (e=1) is feasible.
+        act = _call(heuristics.elare_select, 0.0, [True], [0], [2.0], _view())
+        assert int(act.assign[1]) == 0
+        assert int(act.assign[0]) == -1
+
+    def test_defers_infeasible_but_not_hopeless(self):
+        # m1 busy until 5, m0 too slow: infeasible now, but an empty m1
+        # could make it (0 + 1 <= 2 is false once avail=5 though) -> with
+        # avail (0,5): s1=5, 5+1>2 infeasible; min eet = 1, now+1 <= 2 ->
+        # not hopeless -> deferred, NOT dropped.
+        act = _call(
+            heuristics.elare_select, 0.0, [True], [0], [2.0], _view((0.0, 5.0))
+        )
+        assert int(act.assign[0]) == -1 and int(act.assign[1]) == -1
+        assert not bool(act.drop[0])
+
+    def test_drops_hopeless(self):
+        # even the fastest machine misses: now + min_e = 0 + 1 > 0.5
+        act = _call(heuristics.elare_select, 0.0, [True], [0], [0.5], _view())
+        assert bool(act.drop[0])
+
+    def test_drops_stale(self):
+        act = _call(heuristics.elare_select, 10.0, [True], [0], [9.0], _view())
+        assert bool(act.drop[0])
+
+    def test_one_task_per_machine(self):
+        # three identical tasks, all prefer m0 -> only the min-ec one maps.
+        act = _call(
+            heuristics.elare_select, 0.0, [True] * 3, [0, 0, 0],
+            [100.0, 100.0, 100.0], _view(),
+        )
+        assert int(act.assign[0]) == 0  # lowest index on ties
+        assigned = set(int(a) for a in act.assign if int(a) >= 0)
+        assert len(assigned) == len([a for a in act.assign if int(a) >= 0])
+
+
+class TestBaselines:
+    def test_mm_picks_min_completion(self):
+        # MM ignores energy: m1 completes at 1 < m0 at 4 -> m1.
+        act = _call(heuristics.mm_select, 0.0, [True], [0], [100.0], _view())
+        assert int(act.assign[1]) == 0
+
+    def test_mm_maps_infeasible(self):
+        # deadline hopeless -> MM still maps (no feasibility check). Eq. 1
+        # clamps both completions to the deadline (tie) -> machine 0 wins.
+        act = _call(heuristics.mm_select, 0.0, [True], [0], [0.5], _view())
+        assert 0 in [int(a) for a in act.assign]
+        assert not bool(act.drop[0])
+
+    def test_msd_prefers_soonest_deadline(self):
+        act = _call(
+            heuristics.msd_select, 0.0, [True, True], [0, 0], [50.0, 20.0],
+            _view(),
+        )
+        # both nominate m1 (faster); MSD picks task 1 (deadline 20).
+        assert int(act.assign[1]) == 1
+
+    def test_mmu_prefers_least_slack(self):
+        act = _call(
+            heuristics.mmu_select, 0.0, [True, True], [0, 0], [50.0, 3.0],
+            _view(),
+        )
+        # task 1 slack = 3 - 1 = 2 << task 0 slack -> picked first.
+        assert int(act.assign[1]) == 1
+
+
+class TestFELARE:
+    def test_suffered_priority(self):
+        # two tasks, types 0 and 1, both feasible only on m1 (tight-ish dl).
+        # type 1 is suffered -> it wins the machine even with higher energy.
+        act = _call(
+            heuristics.felare_select, 0.0, [True, True], [0, 1], [3.0, 3.0],
+            _view(), suffered=[False, True],
+        )
+        assert int(act.assign[1]) == 1
+
+    def test_queue_eviction_rescues_suffered(self):
+        # m1 queue holds a non-suffered type-0 task (task idx 1); pending
+        # suffered type-1 task (idx 0) infeasible with the queue ahead of it
+        # (s = 2 + 1 = 3; 3 + 2 > 4) but feasible if the victim is evicted
+        # (s = 2; 2 + 2 <= 4). m0 is far too slow (e=8).
+        queue = jnp.array([[-1, -1], [1, -1]], jnp.int32)
+        view = MachineView(
+            jnp.array([0.0, 2.0], jnp.float32), queue,
+            jnp.array([0, 1], jnp.int32),
+        )
+        # tasks: idx0 pending type1 dl 4; idx1 queued type0 dl big
+        act = _call(
+            heuristics.felare_select, 0.0, [True, False], [1, 0],
+            [4.0, 100.0], view, suffered=[False, True],
+        )
+        assert bool(act.queue_drop[1, 0])          # victim evicted
+        assert int(act.assign[1]) == 0             # suffered task mapped
+
+    def test_no_eviction_of_suffered_victims(self):
+        # same but the queued victim is itself of a suffered type -> no evict.
+        queue = jnp.array([[-1, -1], [1, -1]], jnp.int32)
+        view = MachineView(
+            jnp.array([0.0, 2.0], jnp.float32), queue,
+            jnp.array([0, 1], jnp.int32),
+        )
+        act = _call(
+            heuristics.felare_select, 0.0, [True, False], [1, 1],
+            [4.0, 100.0], view, suffered=[False, True],
+        )
+        assert not bool(act.queue_drop.any())
+
+    def test_no_pointless_eviction(self):
+        # suffered task hopeless even on an empty machine -> no eviction.
+        queue = jnp.array([[-1, -1], [1, -1]], jnp.int32)
+        view = MachineView(
+            jnp.array([0.0, 2.0], jnp.float32), queue,
+            jnp.array([0, 1], jnp.int32),
+        )
+        act = _call(
+            heuristics.felare_select, 0.0, [True, False], [1, 0],
+            [0.5, 100.0], view, suffered=[False, True],
+        )
+        assert not bool(act.queue_drop.any())
+
+    def test_reduces_to_elare_when_no_suffering(self):
+        act_f = _call(
+            heuristics.felare_select, 0.0, [True, True], [0, 1],
+            [100.0, 100.0], _view(), suffered=[False, False],
+        )
+        act_e = _call(
+            heuristics.elare_select, 0.0, [True, True], [0, 1],
+            [100.0, 100.0], _view(), suffered=[False, False],
+        )
+        assert np.array_equal(np.asarray(act_f.assign), np.asarray(act_e.assign))
+        assert np.array_equal(np.asarray(act_f.drop), np.asarray(act_e.drop))
+
+
+class TestInvariants:
+    def test_full_queues_block_assignment(self):
+        queue = jnp.array([[2, 3], [4, 5]], jnp.int32)
+        view = MachineView(
+            jnp.zeros(2, jnp.float32), queue, jnp.array([2, 2], jnp.int32)
+        )
+        for fn in heuristics.HEURISTICS.values():
+            act = _call(fn, 0.0, [True], [0], [100.0], view)
+            assert int(act.assign[0]) == -1 and int(act.assign[1]) == -1
+
+    def test_nothing_assigned_when_nothing_pending(self):
+        for fn in heuristics.HEURISTICS.values():
+            act = _call(fn, 0.0, [False, False], [0, 1], [10.0, 10.0], _view())
+            assert (np.asarray(act.assign) == -1).all()
+            assert not np.asarray(act.drop).any()

@@ -1,0 +1,206 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _key(i):
+    return jax.random.PRNGKey(i)
+
+
+# --------------------------------------------------------------------------
+# phase1_map
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("N,M", [(1, 4), (37, 4), (128, 4), (300, 8),
+                                 (513, 3)])
+def test_phase1_map_sweep(N, M):
+    from repro.kernels.phase1_map import ops, ref
+
+    ks = jax.random.split(_key(N * 17 + M), 6)
+    eet = jax.random.uniform(ks[0], (N, M), minval=0.3, maxval=6.0)
+    avail = jax.random.uniform(ks[1], (M,), maxval=4.0)
+    dl = jax.random.uniform(ks[2], (N,), minval=0.5, maxval=10.0)
+    pdyn = jax.random.uniform(ks[3], (M,), minval=1.0, maxval=3.0)
+    pend = jax.random.bernoulli(ks[4], 0.6, (N,))
+    qfree = jax.random.bernoulli(ks[5], 0.7, (M,))
+    bm, bec = ops.phase1_map(avail, eet, dl, pdyn, pend, qfree,
+                             interpret=True)
+    bm2, bec2 = ref.phase1_map_ref(avail, pdyn, qfree, eet, dl, pend)
+    np.testing.assert_array_equal(np.asarray(bm), np.asarray(bm2))
+    np.testing.assert_allclose(np.asarray(bec), np.asarray(bec2), rtol=1e-6)
+
+
+def test_phase1_map_matches_heuristic_phase1():
+    """Kernel slot-in: same (machine, energy) choice as the jnp Phase-I."""
+    from repro.core import heuristics
+    from repro.core.eet import P_DYN, P_IDLE, TABLE_I
+    from repro.core.types import SystemArrays
+    from repro.kernels.phase1_map import ops
+
+    sysarr = SystemArrays(jnp.asarray(TABLE_I), jnp.asarray(P_DYN),
+                          jnp.asarray(P_IDLE))
+    ks = jax.random.split(_key(3), 3)
+    N = 50
+    ttype = jax.random.randint(ks[0], (N,), 0, 4)
+    dl = jax.random.uniform(ks[1], (N,), minval=2.0, maxval=12.0)
+    pending = jax.random.bernoulli(ks[2], 0.8, (N,))
+    view = heuristics.MachineView(
+        avail_base=jnp.array([0.0, 1.0, 0.5, 2.0]),
+        queue=jnp.full((4, 2), -1, jnp.int32),
+        qlen=jnp.zeros(4, jnp.int32),
+    )
+    qfree = view.qlen < 2
+
+    def impl(avail, eet_rows, deadline, p_dyn, pend, qf):
+        return ops.phase1_map(avail, eet_rows, deadline, p_dyn, pend, qf,
+                              interpret=True)
+
+    bm1, bec1, feas1, _, _ = heuristics.elare_phase1(
+        0.0, pending, ttype, dl, view, sysarr, qfree, phase1_impl=impl)
+    bm2, bec2, feas2, _, _ = heuristics.elare_phase1(
+        0.0, pending, ttype, dl, view, sysarr, qfree, phase1_impl=None)
+    np.testing.assert_array_equal(np.asarray(feas1), np.asarray(feas2))
+    # argmin may differ only where infeasible (both report BIG)
+    np.testing.assert_array_equal(
+        np.asarray(bm1)[np.asarray(feas1)], np.asarray(bm2)[np.asarray(feas2)]
+    )
+    np.testing.assert_allclose(
+        np.asarray(bec1)[np.asarray(feas1)],
+        np.asarray(bec2)[np.asarray(feas2)], rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# flash_attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("Sq,Sk,H,Hkv,hd", [
+    (128, 128, 4, 4, 64),      # MHA
+    (128, 128, 4, 2, 64),      # GQA
+    (256, 256, 8, 1, 32),      # MQA
+    (64, 192, 4, 2, 128),      # uneven, padded seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(Sq, Sk, H, Hkv, hd, dtype):
+    from repro.kernels.flash_attention import ops, ref
+
+    ks = jax.random.split(_key(Sq + Sk + H), 3)
+    B = 2
+    q = (jax.random.normal(ks[0], (B, Sq, H, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, Sk, Hkv, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, Sk, Hkv, hd)) * 0.5).astype(dtype)
+    causal = Sq == Sk
+    out = ops.flash_attention(q, k, v, causal=causal, bq=64, bk=64,
+                              interpret=True)
+    want = jnp.moveaxis(
+        ref.flash_attention_ref(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), causal=causal), 1, 2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol)
+
+
+def test_flash_attention_kv_len_and_offset():
+    from repro.kernels.flash_attention import ops, ref
+
+    ks = jax.random.split(_key(9), 3)
+    B, S, H, hd = 2, 128, 2, 32
+    q = jax.random.normal(ks[0], (B, 32, H, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, hd)) * 0.5
+    kv_len = jnp.array([100, 57], jnp.int32)
+    out = ops.flash_attention(q, k, v, causal=True, kv_len=kv_len,
+                              q_offset=64, bq=32, bk=64, interpret=True)
+    want = jnp.moveaxis(
+        ref.flash_attention_ref(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), kv_len, causal=True, q_offset=64), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# decode_attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("Sk,H,Hkv,hd", [
+    (256, 4, 4, 64), (512, 8, 2, 64), (1024, 4, 1, 128), (192, 2, 2, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_sweep(Sk, H, Hkv, hd, dtype):
+    from repro.kernels.decode_attention import ops, ref
+
+    ks = jax.random.split(_key(Sk + H), 4)
+    B = 2
+    q = (jax.random.normal(ks[0], (B, 1, H, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, Sk, Hkv, hd)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, Sk, Hkv, hd)) * 0.5).astype(dtype)
+    kv_len = jax.random.randint(ks[3], (B,), 1, Sk)
+    out = ops.decode_attention(q, k, v, kv_len, bk=128, interpret=True)
+    want = jnp.moveaxis(
+        ref.decode_attention_ref(
+            jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+            jnp.moveaxis(v, 2, 1), kv_len), 1, 2)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol)
+
+
+# --------------------------------------------------------------------------
+# ssm_scan
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("L,H,P,N,chunk", [
+    (64, 2, 32, 16, 16), (128, 4, 64, 64, 32), (96, 1, 16, 8, 32),
+    (256, 2, 64, 32, 128),
+])
+def test_ssm_scan_sweep(L, H, P, N, chunk):
+    from repro.kernels.ssm_scan import ops, ref
+
+    ks = jax.random.split(_key(L + H + P), 5)
+    B = 2
+    x = jax.random.normal(ks[0], (B, L, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, L, N)) * 0.5
+    y, S = ops.ssm_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    y2, S2 = ref.ssm_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S2), atol=2e-4)
+
+
+def test_ssm_scan_matches_model_path():
+    """Kernel == the model's XLA ssd_chunked (the serving/training path)."""
+    from repro.kernels.ssm_scan import ops
+    from repro.models.ssm import ssd_chunked
+
+    ks = jax.random.split(_key(77), 5)
+    B, L, H, P, N = 2, 128, 2, 32, 16
+    x = jax.random.normal(ks[0], (B, L, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (B, L, N)) * 0.5
+    y1, S1 = ops.ssm_scan(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    y2, S2 = ssd_chunked(x, dt, A, Bm, Cm, 32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(S1), np.asarray(S2), atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# model-integration: pallas_interpret attention == xla attention
+# --------------------------------------------------------------------------
+def test_model_attention_impl_parity():
+    from repro.configs import registry
+    from repro.models import transformer as tf
+
+    cfg_x = registry.get_smoke_config("qwen1.5-0.5b").scaled(
+        remat=False, dtype="float32", param_dtype="float32")
+    cfg_p = cfg_x.scaled(attn_impl="pallas_interpret")
+    params = tf.init(_key(0), cfg_x)
+    batch = {"tokens": jax.random.randint(_key(1), (2, 64), 0,
+                                          cfg_x.vocab_size)}
+    h_x, _ = tf.forward(cfg_x, params, batch)
+    h_p, _ = tf.forward(cfg_p, params, batch)
+    np.testing.assert_allclose(
+        np.asarray(h_x), np.asarray(h_p), atol=2e-4)

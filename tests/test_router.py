@@ -1,0 +1,129 @@
+"""Serving-router tests: FELARE as the live request scheduler."""
+import numpy as np
+import pytest
+
+from repro.cluster.profiles import (
+    FLEET,
+    eet_from_roofline,
+    power_vectors,
+    request_cost,
+)
+from repro.cluster.router import Request, Router
+from repro.configs import registry
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _router(heuristic="FELARE", eet=None, **kw):
+    clock = FakeClock()
+    if eet is None:
+        eet = np.array([[1.0, 0.3], [2.0, 0.6]], np.float32)
+    r = Router(eet, p_dyn=np.array([1.0, 5.0]), p_idle=np.array([0.1, 0.5]),
+               heuristic=heuristic, now_fn=clock, **kw)
+    return r, clock
+
+
+class TestRouterLifecycle:
+    def test_request_maps_and_starts(self):
+        r, clock = _router()
+        started = r.on_request(Request(0, 0, 0.0, deadline=10.0))
+        assert len(started) == 1
+        j, req = started[0]
+        assert req.status == "running"
+        assert j == 0  # ELARE-family picks the min-energy feasible machine
+
+    def test_completion_updates_metrics_and_eet(self):
+        r, clock = _router()
+        (j, req), = r.on_request(Request(0, 0, 0.0, deadline=10.0))
+        clock.t = 0.9
+        r.on_completion(j, success=True, latency=0.9)
+        m = r.metrics()
+        assert m["completed"][0] == 1
+        assert m["eet"][0, j] != pytest.approx(1.0)  # EMA moved
+
+    def test_straggler_adaptation_shifts_routing(self):
+        """A machine that keeps running slow loses traffic (EET EMA)."""
+        r, clock = _router(heuristic="ELARE", eet=np.array(
+            [[0.5, 0.6]], np.float32))
+        # machine 0 looks best but is secretly 10x slow
+        for k in range(8):
+            started = r.on_request(
+                Request(k, 0, clock.t, deadline=clock.t + 3.0))
+            for j, req in started:
+                clock.t += 5.0 if j == 0 else 0.6
+                r.on_completion(j, success=(j != 0),
+                                latency=5.0 if j == 0 else 0.6)
+        assert r.eet[0, 0] > r.eet[0, 1]  # learned machine 0 is slow
+
+    def test_deadline_miss_counts_missed(self):
+        r, clock = _router()
+        (j, req), = r.on_request(Request(0, 0, 0.0, deadline=0.5))
+        clock.t = 2.0
+        r.on_completion(j, success=False, latency=2.0)
+        m = r.metrics()
+        assert m["missed"][0] == 1
+        assert m["energy_wasted"] > 0
+
+    def test_fairness_tracking(self):
+        r, clock = _router()
+        for k in range(6):
+            started = r.on_request(
+                Request(k, k % 2, clock.t, deadline=clock.t + 8.0))
+            for j, req in started:
+                clock.t += 0.3
+                r.on_completion(j, success=(req.task_type == 0),
+                                latency=0.3)
+        m = r.metrics()
+        assert m["completion_rate_by_type"][0] > \
+            m["completion_rate_by_type"][1]
+        assert 0 < m["jain_fairness"] <= 1.0
+
+
+class TestRooflineEET:
+    def test_eet_from_roofline_ordering(self):
+        """Bigger archs cost more everywhere; faster machines are faster."""
+        cfgs = [registry.get_config("qwen1.5-0.5b"),
+                registry.get_config("internlm2-1.8b")]
+        eet = eet_from_roofline(cfgs)
+        assert eet.shape == (2, len(FLEET))
+        assert (eet[1] > eet[0]).all()          # 1.8b slower than 0.5b
+        v5e4 = [m.name for m in FLEET].index("v5e-4")
+        cpu = [m.name for m in FLEET].index("cpu-host")
+        assert (eet[:, v5e4] < eet[:, cpu]).all()
+
+    def test_request_cost_scales(self):
+        cfg = registry.get_config("qwen1.5-0.5b")
+        f1, _ = request_cost(cfg, 128)
+        f2, _ = request_cost(cfg, 256)
+        assert f2 == pytest.approx(2 * f1)
+
+    def test_power_vectors(self):
+        p_dyn, p_idle = power_vectors()
+        assert (p_dyn > p_idle).all()
+
+
+class TestRouterHeuristics:
+    @pytest.mark.parametrize("h", ["FELARE", "ELARE", "MM", "MSD", "MMU"])
+    def test_all_heuristics_drive_router(self, h):
+        r, clock = _router(heuristic=h)
+        done = 0
+        for k in range(10):
+            clock.t += 0.2
+            started = r.on_request(
+                Request(k, k % 2, clock.t, deadline=clock.t + 4.0))
+            for j, req in started:
+                clock.t += float(r.eet[req.task_type, j])
+                r.on_completion(j, success=True,
+                                latency=float(r.eet[req.task_type, j]))
+                done += 1
+        m = r.metrics()
+        total = (m["completed"] + m["missed"] + m["cancelled"]).sum()
+        pending_or_queued = m["arrived"].sum() - total
+        assert pending_or_queued >= 0  # conservation
+        assert m["completed"].sum() > 0
