@@ -4,6 +4,10 @@ Each function returns (rows, derived) where rows are CSV-ready dicts and
 `derived` echoes the paper's headline claim next to our measurement.
 Sizes are scaled (default 5 traces x 600 tasks vs the paper's 30 x 2000) to
 finish on 1 CPU core; pass full=True for paper-scale runs.
+
+All figures are thin consumers of `repro.experiments`: each one is a single
+batched sweep (every heuristic x rate x replicate in one jitted vmap), and
+the rows below just read the SweepResult reductions.
 """
 from __future__ import annotations
 
@@ -11,33 +15,51 @@ import time
 
 import numpy as np
 
-from repro.core import api
+from repro import experiments
 
 HEURISTICS = ("MM", "MSD", "MMU", "ELARE", "FELARE")
 
 
-def _study(h, rates, spec, full):
-    return api.run_study(
-        h, rates, spec,
-        n_traces=30 if full else 5,
-        n_tasks=2000 if full else 600,
+_SWEEP_CACHE: dict = {}
+
+
+def _sweep(heuristics, rates, system, full, *, reps=None, tasks=None,
+           seed=0):
+    """One batched sweep: the whole figure's grid in one jit+vmap.
+
+    Memoized on the full grid key — figures that read different reductions
+    of the same grid (e.g. Figs. 3 and 4) share one simulation.
+    """
+    spec = experiments.SweepSpec(
+        system=system,
+        rates=tuple(float(r) for r in rates),
+        reps=reps if reps is not None else (30 if full else 5),
+        n_tasks=tasks if tasks is not None else (2000 if full else 600),
+        heuristics=tuple(heuristics),
+        seed=seed,
     )
+    if spec not in _SWEEP_CACHE:  # frozen dataclass: hashable, collision-proof
+        _SWEEP_CACHE[spec] = experiments.run_sweep(spec)
+    return _SWEEP_CACHE[spec]
 
 
 def fig3_pareto(full=False):
     """Energy vs deadline-miss-rate trade-off curves (Pareto front)."""
-    spec = api.paper_system()
     rates = [1.0, 2.0, 3.0, 4.0, 6.0, 8.0]
+    res = _sweep(HEURISTICS, rates, "paper", full)
+    miss = 1.0 - res.completion_rate_pooled            # (H, R)
+    energy = res.energy                                # (H, R)
     rows = []
     pts = {}
-    for h in HEURISTICS:
-        for r in _study(h, rates, spec, full):
+    for h_i, h in enumerate(HEURISTICS):
+        for r_i, rate in enumerate(rates):
             rows.append({
-                "fig": "3", "heuristic": h, "rate": r.arrival_rate,
-                "miss_rate": round(r.miss_rate, 4),
-                "energy": round(r.energy_total, 1),
+                "fig": "3", "heuristic": h, "rate": rate,
+                "miss_rate": round(float(miss[h_i, r_i]), 4),
+                "energy": round(float(energy[h_i, r_i]), 1),
             })
-            pts.setdefault(h, []).append((r.miss_rate, r.energy_total))
+            pts.setdefault(h, []).append(
+                (float(miss[h_i, r_i]), float(energy[h_i, r_i])))
     # non-domination check: at each low/moderate rate, no baseline may have
     # both <= miss-rate and <= energy (strictly better in one). Cross-rate
     # comparisons are meaningless here (lower arrival rate => longer trace
@@ -62,16 +84,17 @@ def fig3_pareto(full=False):
 
 def fig4_wasted_energy(full=False):
     """Wasted energy vs arrival rate, all heuristics (synthetic system)."""
-    spec = api.paper_system()
     rates = [1.0, 2.0, 3.0, 4.0, 6.0, 8.0]
-    rows, waste = [], {}
-    for h in HEURISTICS:
-        for r in _study(h, rates, spec, full):
-            w = r.wasted_energy_pct
-            rows.append({"fig": "4", "heuristic": h, "rate": r.arrival_rate,
-                         "wasted_pct": round(w, 2)})
-            waste[(h, r.arrival_rate)] = w
-    rel = (waste[("MM", 4.0)] - waste[("ELARE", 4.0)])
+    res = _sweep(HEURISTICS, rates, "paper", full)
+    wasted = res.wasted_pct                            # (H, R)
+    rows = [
+        {"fig": "4", "heuristic": h, "rate": rate,
+         "wasted_pct": round(float(wasted[h_i, r_i]), 2)}
+        for h_i, h in enumerate(HEURISTICS)
+        for r_i, rate in enumerate(rates)
+    ]
+    rel = float(wasted[HEURISTICS.index("MM"), rates.index(4.0)]
+                - wasted[HEURISTICS.index("ELARE"), rates.index(4.0)])
     derived = {
         "claim": "paper: ELARE ~12.6% less wasted energy than MM @rate 4",
         "measured_delta_pct_points": round(rel, 2),
@@ -82,39 +105,42 @@ def fig4_wasted_energy(full=False):
 
 def fig5_aws_wasted(full=False):
     """AWS scenario (face/speech on t2.xlarge vs g3s.xlarge): wasted energy."""
-    spec = api.aws_system()
+    hs = ("MM", "ELARE", "FELARE")
     rates = [0.5, 1.0, 2.0, 3.0]
-    rows, waste = [], {}
-    for h in ("MM", "ELARE", "FELARE"):
-        for r in _study(h, rates, spec, full):
-            rows.append({"fig": "5", "heuristic": h, "rate": r.arrival_rate,
-                         "wasted_pct": round(r.wasted_energy_pct, 2)})
-            waste[(h, r.arrival_rate)] = r.wasted_energy_pct
+    res = _sweep(hs, rates, "aws", full)
+    wasted = res.wasted_pct
+    rows = [
+        {"fig": "5", "heuristic": h, "rate": rate,
+         "wasted_pct": round(float(wasted[h_i, r_i]), 2)}
+        for h_i, h in enumerate(hs)
+        for r_i, rate in enumerate(rates)
+    ]
+    mm_at_2 = float(wasted[hs.index("MM"), rates.index(2.0)])
+    elare_at_2 = float(wasted[hs.index("ELARE"), rates.index(2.0)])
     derived = {
         "claim": "AWS scenario agrees with synthetic (ELARE wastes less)",
-        "mm_minus_elare_at_2": round(
-            waste[("MM", 2.0)] - waste[("ELARE", 2.0)], 2),
-        "pass": waste[("ELARE", 2.0)] <= waste[("MM", 2.0)],
+        "mm_minus_elare_at_2": round(mm_at_2 - elare_at_2, 2),
+        "pass": elare_at_2 <= mm_at_2,
     }
     return rows, derived
 
 
 def fig6_unsuccessful(full=False):
     """Cancelled vs missed decomposition, MM vs ELARE (proactive dropping)."""
-    spec = api.paper_system()
+    hs = ("MM", "ELARE")
     rates = [2.0, 3.0, 4.0, 6.0, 8.0]
+    res = _sweep(hs, rates, "paper", full)
+    cancelled, missed = res.cancelled_pct, res.missed_pct   # (H, R)
     rows, stats = [], {}
-    for h in ("MM", "ELARE"):
-        for r in _study(h, rates, spec, full):
-            m = r.metrics
-            arrived = float(np.sum(m.arrived_by_type))
-            cancelled = float(np.sum(m.cancelled_by_type)) / arrived * 100
-            missed = float(np.sum(m.missed_by_type)) / arrived * 100
-            rows.append({"fig": "6", "heuristic": h, "rate": r.arrival_rate,
-                         "cancelled_pct": round(cancelled, 2),
-                         "missed_pct": round(missed, 2),
-                         "unsuccessful_pct": round(cancelled + missed, 2)})
-            stats[(h, r.arrival_rate)] = (cancelled, missed)
+    for h_i, h in enumerate(hs):
+        for r_i, rate in enumerate(rates):
+            c = float(cancelled[h_i, r_i])
+            m = float(missed[h_i, r_i])
+            rows.append({"fig": "6", "heuristic": h, "rate": rate,
+                         "cancelled_pct": round(c, 2),
+                         "missed_pct": round(m, 2),
+                         "unsuccessful_pct": round(c + m, 2)})
+            stats[(h, rate)] = (c, m)
     delta = (stats[("MM", 3.0)][0] + stats[("MM", 3.0)][1]
              - stats[("ELARE", 3.0)][0] - stats[("ELARE", 3.0)][1])
     derived = {
@@ -131,21 +157,21 @@ def fig6_unsuccessful(full=False):
 
 def fig7_fairness(full=False):
     """Per-type + collective completion rates for all heuristics @rate 5."""
-    spec = api.paper_system()
+    res = _sweep(HEURISTICS, [5.0], "paper", full,
+                 reps=30 if full else 10, tasks=2000 if full else 600)
+    by_type = res.completion_rate_by_type[:, 0]        # (H, S)
+    coll_arr = res.completion_rate_pooled[:, 0]        # (H,)
     rows, spread, coll = [], {}, {}
-    for h in HEURISTICS:
-        res = api.run_study(h, [5.0], spec,
-                            n_traces=30 if full else 10,
-                            n_tasks=2000 if full else 600)[0]
-        cr = res.completion_rate_by_type
+    for h_i, h in enumerate(HEURISTICS):
+        cr = by_type[h_i]
         rows.append({
             "fig": "7", "heuristic": h,
             **{f"T{i+1}": round(float(c), 3) for i, c in enumerate(cr)},
-            "collective": round(res.completion_rate, 3),
+            "collective": round(float(coll_arr[h_i]), 3),
             "std": round(float(np.std(cr)), 4),
         })
         spread[h] = float(np.std(cr))
-        coll[h] = res.completion_rate
+        coll[h] = float(coll_arr[h_i])
     # NOTE: a baseline can show a small spread by being uniformly *bad*
     # (the paper's category (ii): "similar but low"); fairness only counts
     # at a competitive collective rate, so FELARE is judged against
@@ -167,17 +193,17 @@ def fig7_fairness(full=False):
 
 def fig8_aws_fairness(full=False):
     """AWS scenario fairness across face/speech applications @rate 2."""
-    spec = api.aws_system()
+    res = _sweep(HEURISTICS, [2.0], "aws", full,
+                 reps=30 if full else 10, tasks=2000 if full else 600)
+    by_type = res.completion_rate_by_type[:, 0]        # (H, 2)
+    coll = res.completion_rate_pooled[:, 0]
     rows, spread = [], {}
-    for h in HEURISTICS:
-        res = api.run_study(h, [2.0], spec,
-                            n_traces=10 if not full else 30,
-                            n_tasks=600 if not full else 2000)[0]
-        cr = res.completion_rate_by_type
+    for h_i, h in enumerate(HEURISTICS):
+        cr = by_type[h_i]
         rows.append({"fig": "8", "heuristic": h,
                      "face": round(float(cr[0]), 3),
                      "speech": round(float(cr[1]), 3),
-                     "collective": round(res.completion_rate, 3)})
+                     "collective": round(float(coll[h_i]), 3)})
         spread[h] = abs(float(cr[0] - cr[1]))
     derived = {
         "claim": "FELARE substantially fairer on the AWS pair",

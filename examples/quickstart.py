@@ -3,7 +3,8 @@
 Simulates the Sec. VI synthetic HEC system (Table I EET, 4 machines x 4 task
 types, Poisson arrivals) under MM / MSD / MMU / ELARE / FELARE and prints the
 energy-latency trade-off plus the fairness picture — Figs. 3, 4, 6, 7 in
-miniature.
+miniature. The whole (heuristic x rate x trace) grid runs as ONE jitted
+batch via `repro.experiments`.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--tasks 1000] [--traces 8]
 """
@@ -11,7 +12,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import api
+from repro import experiments
 
 
 def main():
@@ -22,21 +23,26 @@ def main():
                     default=[2.0, 4.0, 8.0])
     args = ap.parse_args()
 
-    spec = api.paper_system()
-    heuristics = ["MM", "MSD", "MMU", "ELARE", "FELARE"]
+    heuristics = ("MM", "MSD", "MMU", "ELARE", "FELARE")
+    spec = experiments.SweepSpec(
+        system="paper",
+        rates=tuple(args.rates),
+        reps=args.traces,
+        n_tasks=args.tasks,
+        heuristics=heuristics,
+    )
+    res = experiments.run_sweep(spec)
 
     print(f"{'heuristic':9s} {'rate':>5s} {'ontime%':>8s} {'waste%':>7s} "
           f"{'cancel':>7s} {'miss':>6s}  per-type completion")
-    for h in heuristics:
-        results = api.run_study(h, args.rates, spec, n_traces=args.traces,
-                                n_tasks=args.tasks)
-        for r in results:
-            m = r.metrics
+    for h_i, h in enumerate(heuristics):
+        for r_i, rate in enumerate(spec.rates):
+            m = res.metrics_for(h, rate)
             per_type = " ".join(
-                f"{x:.2f}" for x in r.completion_rate_by_type)
-            print(f"{h:9s} {r.arrival_rate:5.1f} "
-                  f"{100*r.completion_rate:8.1f} "
-                  f"{r.wasted_energy_pct:7.2f} "
+                f"{x:.2f}" for x in res.completion_rate_by_type[h_i, r_i])
+            print(f"{h:9s} {rate:5.1f} "
+                  f"{100 * res.completion_rate_pooled[h_i, r_i]:8.1f} "
+                  f"{res.wasted_pct[h_i, r_i]:7.2f} "
                   f"{int(np.sum(m.cancelled_by_type)):7d} "
                   f"{int(np.sum(m.missed_by_type)):6d}  [{per_type}]")
         print()

@@ -1,18 +1,43 @@
-"""High-level experiment API over the simulation engine."""
+"""High-level experiment API over the simulation engine.
+
+This module is the stable, paper-oriented surface:
+
+  * :func:`paper_system` / :func:`aws_system` build the two evaluation
+    systems of Sec. VI-A;
+  * :func:`run_study` runs the paper's experiment template (K i.i.d.
+    traces per arrival rate, one heuristic) and returns per-rate
+    :class:`StudyResult` views.
+
+Since the batched Monte-Carlo subsystem landed, ``run_study`` is a thin
+consumer of :mod:`repro.experiments` — the heavy lifting (trace-stack
+synthesis, the single-jit vmapped simulation, reductions) lives there.
+Prefer :func:`repro.experiments.run_sweep` directly for multi-heuristic
+grids; ``run_study`` remains for single-heuristic studies and backward
+compatibility.
+"""
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import numpy as np
 
 from repro.core import eet as eet_mod
-from repro.core import engine, workload
 from repro.core.types import Metrics, SystemSpec
 
 
-def paper_system(queue_size: int = 2, fairness_factor: float = 1.0) -> SystemSpec:
-    """The synthetic 4x4 system of Sec. VI-A (Table I + power profile)."""
+def paper_system(queue_size: int = 2, fairness_factor: float = 1.0
+                 ) -> SystemSpec:
+    """The synthetic 4x4 system of Sec. VI-A (Table I + power profile).
+
+    Args:
+      queue_size: bounded local-queue slots per machine (paper: 2).
+      fairness_factor: Eq. 3's ``f``; 1.0 is the paper's operating point,
+        larger values make the fairness trigger less aggressive.
+
+    Returns:
+      A :class:`SystemSpec` with the (4, 4) Table I EET in seconds and the
+      Sec. VI-A dynamic/idle power profile in unit-power multiples.
+    """
     return SystemSpec(
         eet=eet_mod.TABLE_I,
         p_dyn=eet_mod.P_DYN,
@@ -22,8 +47,18 @@ def paper_system(queue_size: int = 2, fairness_factor: float = 1.0) -> SystemSpe
     )
 
 
-def aws_system(queue_size: int = 2, fairness_factor: float = 1.0) -> SystemSpec:
-    """The AWS scenario (t2.xlarge / g3s.xlarge; FaceNet / DeepSpeech)."""
+def aws_system(queue_size: int = 2, fairness_factor: float = 1.0
+               ) -> SystemSpec:
+    """The AWS scenario: t2.xlarge / g3s.xlarge running FaceNet / DeepSpeech.
+
+    Args:
+      queue_size: bounded local-queue slots per machine.
+      fairness_factor: Eq. 3's ``f``.
+
+    Returns:
+      A :class:`SystemSpec` with a (2, 2) EET (face/speech x CPU/GPU,
+      seconds of end-to-end inference latency) and TDP-based powers (W).
+    """
     return SystemSpec(
         eet=eet_mod.AWS_EET,
         p_dyn=eet_mod.AWS_P_DYN,
@@ -35,12 +70,23 @@ def aws_system(queue_size: int = 2, fairness_factor: float = 1.0) -> SystemSpec:
 
 @dataclasses.dataclass
 class StudyResult:
+    """One (heuristic, arrival-rate) cell of a study.
+
+    Attributes:
+      heuristic: the mapping heuristic name (e.g. ``"FELARE"``).
+      arrival_rate: the Poisson arrival rate (tasks/sec) of this cell.
+      metrics: raw per-trace :class:`Metrics`; every leaf carries a leading
+        replicate dim (K traces): count leaves are (K, S) int arrays,
+        energy/makespan leaves are (K,) floats.
+    """
+
     heuristic: str
     arrival_rate: float
     metrics: Metrics  # batched over traces
 
     @property
     def completion_rate(self) -> float:
+        """On-time completion rate pooled over all replicates and types."""
         m = self.metrics
         return float(
             np.sum(m.completed_by_type) / np.maximum(np.sum(m.arrived_by_type), 1)
@@ -48,10 +94,12 @@ class StudyResult:
 
     @property
     def miss_rate(self) -> float:
+        """1 - :attr:`completion_rate` (the paper's deadline-miss rate)."""
         return 1.0 - self.completion_rate
 
     @property
     def completion_rate_by_type(self) -> np.ndarray:
+        """(S,) per-task-type completion rates, pooled over replicates."""
         m = self.metrics
         c = np.asarray(m.completed_by_type, np.float64).sum(0)
         a = np.asarray(m.arrived_by_type, np.float64).sum(0)
@@ -59,6 +107,7 @@ class StudyResult:
 
     @property
     def energy_total(self) -> float:
+        """Mean (dynamic + idle) energy per trace, in the system's units."""
         m = self.metrics
         return float(
             np.mean(
@@ -85,17 +134,43 @@ class StudyResult:
 def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
               n_traces: int = 30, n_tasks: int = 2000, seed: int = 0,
               cv_run: float = 0.1):
-    """The paper's experiment template: ``n_traces`` i.i.d. traces per
-    arrival rate, simulated in a single vmap per rate."""
-    results = []
-    for r_i, rate in enumerate(arrival_rates):
-        key = jax.random.PRNGKey(seed * 1000 + r_i)
-        traces = workload.trace_batch(
-            key, n_traces, n_tasks, float(rate), spec.eet, cv_run=cv_run
+    """The paper's experiment template for one heuristic.
+
+    Thin wrapper over :func:`repro.experiments.run_sweep`: synthesizes
+    ``n_traces`` replicate traces per arrival rate under one PRNG key
+    (common random numbers across rates) and simulates the whole
+    (rate x replicate) grid in a single jitted batch.
+
+    Args:
+      heuristic: one name from :data:`repro.core.heuristics.HEURISTICS`.
+      arrival_rates: sequence of R Poisson arrival rates (tasks/sec).
+      spec: the :class:`SystemSpec` to simulate (its queue size and
+        fairness factor are used as-is).
+      n_traces: K replicate traces per rate (paper: 30).
+      n_tasks: N tasks per trace (paper: 2000).
+      seed: PRNG seed for trace synthesis.
+      cv_run: coefficient of variation of actual runtimes around the EET.
+
+    Returns:
+      list[StudyResult] of length R, in ``arrival_rates`` order.
+    """
+    from repro import experiments
+
+    sweep_spec = experiments.SweepSpec(
+        system=spec,
+        rates=tuple(float(r) for r in arrival_rates),
+        reps=n_traces,
+        n_tasks=n_tasks,
+        heuristics=(heuristic,),
+        seed=seed,
+        cv_run=cv_run,
+    )
+    result = experiments.run_sweep(sweep_spec)
+    out = []
+    for rate in sweep_spec.rates:
+        res = StudyResult(
+            heuristic, float(rate), result.metrics_for(heuristic, rate)
         )
-        metrics = engine.simulate_batch(traces, spec, heuristic)
-        metrics = jax.tree.map(np.asarray, metrics)
-        res = StudyResult(heuristic, float(rate), metrics)
         res._p_dyn = np.asarray(spec.p_dyn)
-        results.append(res)
-    return results
+        out.append(res)
+    return out

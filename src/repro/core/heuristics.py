@@ -206,11 +206,19 @@ def felare_select(now, pending, task_type, deadline, view, sysarr, suffered,
     qfree_after = qlen_after < Q
     s2 = jnp.broadcast_to(jnp.maximum(avail_after, now)[None, :], e.shape)
 
-    feas = equations.feasible(s2, e, d) & pending[:, None] & qfree_after[None, :]
-    ec = equations.expected_energy(s2, e, d, sysarr.p_dyn[None, :])
-    ec_masked = jnp.where(feas, ec, BIG)
-    best_m = jnp.argmin(ec_masked, axis=1).astype(jnp.int32)
-    best_ec = jnp.min(ec_masked, axis=1)
+    if phase1_impl is not None:
+        # Fused Pallas path over the post-eviction availability (same
+        # contract as elare_phase1's hook).
+        best_m, best_ec = phase1_impl(
+            s2[0], e, deadline, sysarr.p_dyn, pending, qfree_after
+        )
+    else:
+        feas = (equations.feasible(s2, e, d)
+                & pending[:, None] & qfree_after[None, :])
+        ec = equations.expected_energy(s2, e, d, sysarr.p_dyn[None, :])
+        ec_masked = jnp.where(feas, ec, BIG)
+        best_m = jnp.argmin(ec_masked, axis=1).astype(jnp.int32)
+        best_ec = jnp.min(ec_masked, axis=1)
     task_feas = best_ec < BIG
     marange = jnp.arange(M)[None, :]
     nominee = task_feas[:, None] & (best_m[:, None] == marange)
@@ -246,9 +254,13 @@ def _baseline_select(now, pending, task_type, deadline, view, sysarr, suffered,
     del suffered
     M, Q = view.queue.shape
     qfree = view.qlen < Q
+    # Stale tasks (deadline already passed) are purged, never mapped — the
+    # baselines have no feasibility check, so without this mask a stale task
+    # could win a machine on the phase-2 key and burn the slot.
+    alive = pending & ~_stale(now, pending, deadline)
     s, e = _pair_grid(now, task_type, deadline, view, sysarr)
     c = equations.completion_time(s, e, deadline[:, None])
-    c_masked = jnp.where(pending[:, None] & qfree[None, :], c, BIG)
+    c_masked = jnp.where(alive[:, None] & qfree[None, :], c, BIG)
     best_m = jnp.argmin(c_masked, axis=1).astype(jnp.int32)
     best_c = jnp.min(c_masked, axis=1)
     has = best_c < BIG
@@ -292,8 +304,9 @@ def met_select(now, pending, task_type, deadline, view, sysarr, suffered
     del suffered
     M, Q = view.queue.shape
     qfree = view.qlen < Q
+    alive = pending & ~_stale(now, pending, deadline)
     e = sysarr.eet[task_type]                                   # (N, M)
-    e_masked = jnp.where(pending[:, None] & qfree[None, :], e, BIG)
+    e_masked = jnp.where(alive[:, None] & qfree[None, :], e, BIG)
     best_m = jnp.argmin(e_masked, axis=1).astype(jnp.int32)
     best_e = jnp.min(e_masked, axis=1)
     nominee = (best_e < BIG)[:, None] & (
@@ -315,9 +328,10 @@ def mct_select(now, pending, task_type, deadline, view, sysarr, suffered
     del suffered
     M, Q = view.queue.shape
     qfree = view.qlen < Q
+    alive = pending & ~_stale(now, pending, deadline)
     s, e = _pair_grid(now, task_type, deadline, view, sysarr)
     c = equations.completion_time(s, e, deadline[:, None])
-    c_masked = jnp.where(pending[:, None] & qfree[None, :], c, BIG)
+    c_masked = jnp.where(alive[:, None] & qfree[None, :], c, BIG)
     best_m = jnp.argmin(c_masked, axis=1).astype(jnp.int32)
     has = jnp.min(c_masked, axis=1) < BIG
     nominee = has[:, None] & (best_m[:, None] == jnp.arange(M)[None, :])
@@ -341,9 +355,10 @@ def random_select(now, pending, task_type, deadline, view, sysarr, suffered
     M, Q = view.queue.shape
     qfree = view.qlen < Q
     n = pending.shape[0]
+    alive = pending & ~_stale(now, pending, deadline)
     h = (jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761)
          + (now * 1e3).astype(jnp.uint32)) % jnp.uint32(M)
-    nominee = pending[:, None] & (
+    nominee = alive[:, None] & (
         h[:, None].astype(jnp.int32) == jnp.arange(M)[None, :])
     key = jnp.broadcast_to(
         jnp.arange(n, dtype=jnp.float32)[:, None], nominee.shape)

@@ -3,6 +3,15 @@
 Deliberately written with plain loops and numpy (no shared code with the JAX
 engine beyond the dataclasses) so hypothesis property tests can cross-check
 the vectorized `repro.core.engine` implementation event-by-event.
+
+Precision note: trace times are dyadic (the tests round them), so event
+timestamps are exact in both engines. Everything derived from the EET table
+(availability sums, feasibility boundaries, energy keys, the fairness limit)
+is NOT dyadic, and the JAX engine computes it in float32 — a float64 oracle
+flips near-tie mapping decisions and diverges. All decision arithmetic below
+therefore mirrors the engine's float32 operation order exactly; only the
+reported energy accumulators stay float64 (tests compare them with rel
+tolerance).
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ from repro.core.types import (
 )
 
 BIG = 1e30
+F = np.float32
 
 
 class _Machine:
@@ -27,7 +37,7 @@ class _Machine:
         self.run = -1
         self.run_start = 0.0
         self.run_end_act = np.inf
-        self.run_end_exp = 0.0
+        self.run_end_exp = F(0.0)
         self.run_success = False
         self.queue: list[int] = []
         self.busy = 0.0
@@ -41,23 +51,15 @@ def _completion(s, e, d):
     return s
 
 
-def _energy(s, e, d, p):
-    if s + e <= d:
-        return p * e
-    if s < d:
-        return p * (d - s)
-    return 0.0
-
-
 def simulate(trace, spec, heuristic: str):
     """Run one trace; returns a dict mirroring Metrics."""
     heuristic = heuristic.upper()
-    eet = np.asarray(spec.eet, np.float64)
-    p_dyn = np.asarray(spec.p_dyn, np.float64)
+    eet = np.asarray(spec.eet, np.float32)
+    p_dyn = np.asarray(spec.p_dyn, np.float32)
     p_idle = np.asarray(spec.p_idle, np.float64)
     S, M = eet.shape
     Q = spec.queue_size
-    f = spec.fairness_factor
+    fair_f = F(spec.fairness_factor)
 
     arr = np.asarray(trace.arrival, np.float64)
     ttype = np.asarray(trace.task_type)
@@ -82,14 +84,27 @@ def simulate(trace, spec, heuristic: str):
         return min(ts) if ts else np.inf
 
     def avail_base(m):
-        return max(now, m.run_end_exp if m.run >= 0 else now)
+        return F(max(now, m.run_end_exp if m.run >= 0 else now))
+
+    def qsum(m):
+        # f32 slot-order reduction, like the engine's queued_eet(...).sum(1)
+        s = F(0.0)
+        for k in m.queue:
+            s = F(s + eet[ttype[k], m.j])
+        return s
 
     def avail(m):
-        return avail_base(m) + sum(eet[ttype[k], m.j] for k in m.queue)
+        return F(avail_base(m) + qsum(m))
 
     def suffered_mask():
-        cr = np.where(arrived > 0, completed / np.maximum(arrived, 1), 1.0)
-        eps = max(cr.mean() - f * cr.std(), 0.0)
+        cr = np.where(
+            arrived > 0,
+            completed.astype(F) / np.maximum(arrived, 1).astype(F),
+            F(1.0),
+        ).astype(F)
+        mu = cr.mean(dtype=F)
+        sigma = cr.std(dtype=F)
+        eps = max(F(mu - F(fair_f * sigma)), F(0.0))
         return (cr <= eps) & (arrived >= 1)
 
     def phase2(pairs, machines_free):
@@ -120,7 +135,7 @@ def simulate(trace, spec, heuristic: str):
         if heuristic in ("ELARE", "FELARE"):
             # hopeless proactive drop
             for k in list(pend):
-                if now + eet[ttype[k]].min() > dl[k]:
+                if F(F(now) + eet[ttype[k]].min()) > dl[k]:
                     status[k] = CANCELLED
                     cancelled[ttype[k]] += 1
                     pend.remove(k)
@@ -131,29 +146,30 @@ def simulate(trace, spec, heuristic: str):
                 k for k in pend
                 if suffered[ttype[k]]
                 and not any(
-                    avail(machines[j]) + eet[ttype[k], j] <= dl[k]
+                    F(avail(machines[j]) + eet[ttype[k], j]) <= dl[k]
                     for j in range(M) if len(machines[j].queue) < Q
                 )
-                and now + eet[ttype[k]].min() <= dl[k]
+                and F(F(now) + eet[ttype[k]].min()) <= dl[k]
             ]
             if resc:
                 k = min(resc, key=lambda k: dl[k])
                 mstar = min(
                     range(M),
-                    key=lambda j: avail(machines[j]) + eet[ttype[k], j],
+                    key=lambda j: F(avail(machines[j]) + eet[ttype[k], j]),
                 )
                 m = machines[mstar]
+                e_tgt = eet[ttype[k], mstar]
                 evict = []
                 base = avail_base(m)
-                rem = sum(eet[ttype[t], mstar] for t in m.queue)
+                rem = qsum(m)
                 for qi in range(len(m.queue) - 1, -1, -1):
                     t = m.queue[qi]
-                    if base + rem + eet[ttype[k], mstar] <= dl[k]:
+                    if F(F(base + rem) + e_tgt) <= dl[k]:
                         break
                     if not suffered[ttype[t]]:
                         evict.append(qi)
-                        rem -= eet[ttype[t], mstar]
-                if base + rem + eet[ttype[k], mstar] <= dl[k]:
+                        rem = F(rem - eet[ttype[t], mstar])
+                if F(F(base + rem) + e_tgt) <= dl[k]:
                     for qi in evict:
                         t = m.queue.pop(qi)
                         status[t] = CANCELLED
@@ -168,8 +184,8 @@ def simulate(trace, spec, heuristic: str):
                 for j in free:
                     s = avail(machines[j])
                     e = eet[ttype[k], j]
-                    if s + e <= dl[k]:
-                        ec = _energy(s, e, dl[k], p_dyn[j])
+                    if F(s + e) <= dl[k]:
+                        ec = F(p_dyn[j] * e)
                         if best is None or ec < best[2]:
                             best = (k, j, ec)
                 if best:
@@ -184,20 +200,17 @@ def simulate(trace, spec, heuristic: str):
                         best = (k, j, c)
                 if best:
                     k, j, c = best
-                    # keys computed in float32 with the same op order as the
-                    # JAX engine, so tie-breaking is bit-identical (the
-                    # 1e-6 epsilon / reciprocal are not dyadic-exact).
-                    f32 = np.float32
+                    # keys in float32 with the engine's op order, so
+                    # tie-breaking is bit-identical.
                     if heuristic == "MM":
-                        key = float(f32(c))
+                        key = F(c)
                     elif heuristic == "MSD":
-                        key = float(f32(dl[k]) + f32(1e-6) * f32(c))
+                        key = F(F(dl[k]) + F(F(1e-6) * F(c)))
                     else:  # MMU
-                        slack = (f32(dl[k]) - f32(now)
-                                 - f32(eet[ttype[k], j]))
+                        slack = F(F(F(dl[k]) - F(now)) - eet[ttype[k], j])
                         if abs(slack) < 1e-9:
-                            slack = f32(1e-9)
-                        key = float(f32(-1.0) / slack)
+                            slack = F(1e-9)
+                        key = F(-(F(1.0) / slack))
                     pairs.append((k, j, key))
 
         # Phase-II (FELARE: suffered pairs first)
@@ -231,12 +244,14 @@ def simulate(trace, spec, heuristic: str):
                 if now >= dl[k]:
                     m.run_success = False
                     m.run_end_act = now
-                    m.run_end_exp = now
+                    m.run_end_exp = F(now)
                 else:
                     e_act = exec_act[k, m.j]
                     m.run_success = now + e_act <= dl[k]
                     m.run_end_act = min(now + e_act, dl[k])
-                    m.run_end_exp = _completion(now, eet[ttype[k], m.j], dl[k])
+                    m.run_end_exp = F(
+                        _completion(F(now), eet[ttype[k], m.j], F(dl[k]))
+                    )
 
     max_steps = 16 * n + 64
     for _ in range(max_steps):
@@ -249,7 +264,7 @@ def simulate(trace, spec, heuristic: str):
             if m.run >= 0 and m.run_end_act <= now:
                 k = m.run
                 dur = m.run_end_act - m.run_start
-                en = p_dyn[m.j] * dur
+                en = float(p_dyn[m.j]) * dur
                 e_dyn += en
                 m.busy += dur
                 if m.run_success:
@@ -261,7 +276,7 @@ def simulate(trace, spec, heuristic: str):
                     e_wasted += en
                 m.run = -1
                 m.run_end_act = np.inf
-                m.run_end_exp = now
+                m.run_end_exp = F(now)
         # arrivals
         for k in range(n):
             if status[k] == UNARRIVED and arr[k] <= now:

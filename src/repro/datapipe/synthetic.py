@@ -1,8 +1,14 @@
-"""Synthetic sharded data pipeline.
+"""Synthetic data generation.
 
-Deterministic per-step token batches (hash-based, reproducible across
-restarts — checkpoint/restart tests rely on this), with modality extras for
-the VLM / audio stubs, background prefetch, and grad-accum reshaping.
+Two producers live here:
+
+  * ``SyntheticLM`` / ``Prefetcher`` / ``input_specs`` — the deterministic
+    LM token pipeline used by the model-substrate examples (hash-based,
+    reproducible across restarts — checkpoint/restart tests rely on this).
+  * ``trace_stack`` — batched scheduling-workload synthesis for the
+    Monte-Carlo sweep subsystem (`repro.experiments`): a full
+    (arrival-rate x replicate) grid of Poisson traces under one PRNG key,
+    shaped for a single vmapped simulation.
 """
 from __future__ import annotations
 
@@ -12,6 +18,48 @@ import threading
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def trace_stack(key, rates, reps, n_tasks, eet, *, cv_run: float = 0.1,
+                type_probs=None):
+    """Synthesize the full sweep grid of workload traces under one PRNG key.
+
+    Replicate ``k`` uses the same subkey at every arrival rate (common
+    random numbers): the exponential inter-arrival draws, task types, and
+    actual-runtime draws are shared across rates, with only the arrival
+    time scale changing. This couples the sweep's rate axis the way the
+    paper couples its heuristic axis (every heuristic sees identical
+    traces), which sharpens rate-to-rate comparisons at a given replicate
+    count.
+
+    Args:
+      key: a single ``jax.random.PRNGKey``; the only seed material used.
+      rates: sequence of R arrival rates (tasks/sec, Poisson).
+      reps: K i.i.d. replicates per rate.
+      n_tasks: N tasks per trace.
+      eet: (S, M) expected-execution-time matrix (seconds); deadlines follow
+        Eq. 4 of the paper.
+      cv_run: coefficient of variation of the Gamma-sampled actual runtimes.
+      type_probs: optional (S,) task-type mix; uniform when omitted.
+
+    Returns:
+      A ``repro.core.types.Trace`` whose leaves carry leading dims (R, K):
+      arrival/task_type/deadline are (R, K, N) and exec_actual is
+      (R, K, N, M). Flatten the first two dims for one big vmap, or index
+      ``[r, k]`` for a single trace.
+    """
+    from repro.core import workload
+
+    rep_keys = jax.random.split(key, reps)                    # (K, 2)
+    rates_arr = jnp.asarray(rates, jnp.float32)               # (R,)
+
+    def one(rate, k):
+        return workload.poisson_trace(
+            k, n_tasks, rate, eet, cv_run=cv_run, type_probs=type_probs
+        )
+
+    over_reps = jax.vmap(one, in_axes=(None, 0))              # (K, ...)
+    return jax.vmap(over_reps, in_axes=(0, None))(rates_arr, rep_keys)
 
 
 class SyntheticLM:

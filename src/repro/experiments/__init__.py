@@ -1,0 +1,26 @@
+"""Batched Monte-Carlo experiment subsystem.
+
+The paper's evaluation (Figs. 3-8) is statistical: many random workload
+traces per arrival rate, simulated under every mapping heuristic. This
+package turns that into one-dispatch batched computations:
+
+  spec     — :class:`SweepSpec`, the full experiment configuration
+  runner   — :func:`run_sweep` / :func:`simulate_sweep`, one jit per sweep
+  results  — :class:`SweepResult`, mean/CI reductions + CSV/JSON artifacts
+  sweep    — the CLI: ``python -m repro.experiments.sweep``
+
+`repro.core.api.run_study`, `benchmarks/`, and `examples/` are thin
+consumers of this layer.
+"""
+from repro.experiments.results import SweepResult
+from repro.experiments.runner import run_sweep, simulate_sweep
+from repro.experiments.spec import SweepSpec, parse_rates, replace
+
+__all__ = [
+    "SweepResult",
+    "SweepSpec",
+    "parse_rates",
+    "replace",
+    "run_sweep",
+    "simulate_sweep",
+]

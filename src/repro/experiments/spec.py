@@ -1,0 +1,165 @@
+"""Sweep configuration: what to simulate, over which grid, with which engine.
+
+A :class:`SweepSpec` fully determines a batched Monte-Carlo experiment —
+(system, arrival rates, replicates, heuristics, seed) — so a sweep is
+reproducible from its spec alone and the spec can be serialized next to the
+result artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from repro.core.types import SystemSpec
+
+DEFAULT_HEURISTICS = ("MM", "MSD", "MMU", "ELARE", "FELARE")
+DEFAULT_RATES = (2.0, 3.0, 4.0, 6.0, 8.0)
+
+
+def parse_rates(text: str) -> tuple[float, ...]:
+    """Parse a CLI rate grid.
+
+    Two forms are accepted:
+      * ``"a,b,c"`` — an explicit comma-separated list: ``"1,2,4.5"``.
+      * ``"start:stop:step"`` — an inclusive range: ``"30:90:10"`` is
+        (30, 40, 50, 60, 70, 80, 90). ``"start:stop"`` uses step 1.
+    """
+    text = text.strip()
+    if ":" in text:
+        parts = [float(p) for p in text.split(":")]
+        if len(parts) == 2:
+            start, stop, step = parts[0], parts[1], 1.0
+        elif len(parts) == 3:
+            start, stop, step = parts
+        else:
+            raise ValueError(f"bad rate range {text!r}; want start:stop[:step]")
+        if step <= 0:
+            raise ValueError(f"rate step must be positive, got {step}")
+        out = []
+        r = start
+        # inclusive end, tolerant of float accumulation
+        while r <= stop + 1e-9:
+            out.append(round(r, 9))
+            r += step
+        return tuple(out)
+    return tuple(float(p) for p in text.split(",") if p.strip())
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A batched Monte-Carlo sweep over (rates x replicates x heuristics).
+
+    Attributes:
+      system: ``"paper"`` (the Sec. VI-A synthetic 4x4 system), ``"aws"``
+        (the t2.xlarge/g3s.xlarge FaceNet/DeepSpeech scenario), or a custom
+        :class:`~repro.core.types.SystemSpec`.
+      rates: R Poisson arrival rates (tasks/sec).
+      reps: K i.i.d. workload traces per rate (the paper uses 30).
+      n_tasks: N tasks per trace (the paper uses 2000).
+      heuristics: mapping-heuristic names from
+        :data:`repro.core.heuristics.HEURISTICS`.
+      seed: PRNG seed; the sweep consumes exactly one
+        ``jax.random.PRNGKey(seed)``.
+      cv_run: coefficient of variation of actual runtimes around the EET.
+      queue_size: per-machine local-queue slots; ``None`` keeps the
+        system's own value.
+      fairness_factor: Eq. 3's ``f``; ``None`` keeps the system's value.
+      use_pallas_phase1: route ELARE/FELARE Phase-I through the fused
+        Pallas kernel (`repro.kernels.phase1_map`) instead of the jnp path.
+      max_steps: optional hard cap on simulator events per trace (mostly
+        for tests); ``None`` uses the engine default of ``8 * N + 64``.
+    """
+
+    system: Union[str, SystemSpec] = "paper"
+    rates: tuple[float, ...] = DEFAULT_RATES
+    reps: int = 8
+    n_tasks: int = 400
+    heuristics: tuple[str, ...] = DEFAULT_HEURISTICS
+    seed: int = 0
+    cv_run: float = 0.1
+    queue_size: Optional[int] = None
+    fairness_factor: Optional[float] = None
+    use_pallas_phase1: bool = False
+    max_steps: Optional[int] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "rates",
+                           tuple(float(r) for r in self.rates))
+        object.__setattr__(self, "heuristics",
+                           tuple(h.upper() for h in self.heuristics))
+        if self.reps < 1:
+            raise ValueError("reps must be >= 1")
+        if self.n_tasks < 1:
+            raise ValueError("n_tasks must be >= 1")
+        if not self.rates:
+            raise ValueError("rates must be non-empty")
+        if not self.heuristics:
+            raise ValueError("heuristics must be non-empty")
+        from repro.core.heuristics import HEURISTICS
+
+        unknown = [h for h in self.heuristics if h not in HEURISTICS]
+        if unknown:
+            raise ValueError(
+                f"unknown heuristics {unknown}; "
+                f"choose from {sorted(HEURISTICS)}"
+            )
+
+    @property
+    def n_simulations(self) -> int:
+        """Total single-trace simulations the sweep performs."""
+        return len(self.heuristics) * len(self.rates) * self.reps
+
+    def resolve_system(self) -> SystemSpec:
+        """Materialize the SystemSpec, applying queue/fairness overrides."""
+        if isinstance(self.system, SystemSpec):
+            sys_spec = self.system
+        else:
+            from repro.core import api  # local import: api consumes us too
+
+            builders = {"paper": api.paper_system, "aws": api.aws_system}
+            try:
+                sys_spec = builders[str(self.system).lower()]()
+            except KeyError:
+                raise ValueError(
+                    f"unknown system {self.system!r}; "
+                    f"choose from {sorted(builders)} or pass a SystemSpec"
+                ) from None
+        overrides = {}
+        if self.queue_size is not None:
+            overrides["queue_size"] = int(self.queue_size)
+        if self.fairness_factor is not None:
+            overrides["fairness_factor"] = float(self.fairness_factor)
+        if overrides:
+            sys_spec = dataclasses.replace(sys_spec, **overrides)
+        return sys_spec
+
+    def to_json_dict(self) -> dict:
+        """JSON-serializable form (custom SystemSpecs record their shape)."""
+        if isinstance(self.system, SystemSpec):
+            system = {
+                "eet": [[float(x) for x in row] for row in self.system.eet],
+                "p_dyn": [float(x) for x in self.system.p_dyn],
+                "p_idle": [float(x) for x in self.system.p_idle],
+                "queue_size": self.system.queue_size,
+                "fairness_factor": self.system.fairness_factor,
+            }
+        else:
+            system = self.system
+        return {
+            "system": system,
+            "rates": list(self.rates),
+            "reps": self.reps,
+            "n_tasks": self.n_tasks,
+            "heuristics": list(self.heuristics),
+            "seed": self.seed,
+            "cv_run": self.cv_run,
+            "queue_size": self.queue_size,
+            "fairness_factor": self.fairness_factor,
+            "use_pallas_phase1": self.use_pallas_phase1,
+            "max_steps": self.max_steps,
+        }
+
+
+def replace(spec: SweepSpec, **kwargs) -> SweepSpec:
+    """``dataclasses.replace`` re-exported for fluent spec tweaking."""
+    return dataclasses.replace(spec, **kwargs)

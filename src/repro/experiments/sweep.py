@@ -1,0 +1,119 @@
+"""One-command batched Monte-Carlo sweep CLI.
+
+    PYTHONPATH=src python -m repro.experiments.sweep \
+        --system paper --rates 2,3,4,6,8 --reps 8 --tasks 400 \
+        --heuristics MM,MSD,MMU,ELARE,FELARE --out artifacts/sweep
+
+Rates accept either a comma list (``2,3,4.5``) or an inclusive
+``start:stop:step`` range (``30:90:10``). The sweep runs all
+(rate x replicate x heuristic) simulations as one jitted batch, prints the
+per-cell summary table, and writes ``sweep.csv`` + ``sweep.json`` under
+``--out``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from repro.experiments.results import SweepResult
+from repro.experiments.runner import run_sweep
+from repro.experiments.spec import (
+    DEFAULT_HEURISTICS,
+    DEFAULT_RATES,
+    SweepSpec,
+    parse_rates,
+)
+
+
+def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
+    """Parse CLI args into a SweepSpec (exposed for tests)."""
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments.sweep",
+        description="Batched Monte-Carlo sweep over "
+                    "(arrival rates x replicates x heuristics).",
+    )
+    ap.add_argument("--system", default="paper", choices=["paper", "aws"],
+                    help="which HEC system to simulate (default: paper)")
+    ap.add_argument("--rates", default=None,
+                    help="comma list '2,3,4' or inclusive range "
+                         "'start:stop:step' (default: "
+                         + ",".join(str(r) for r in DEFAULT_RATES) + ")")
+    ap.add_argument("--reps", type=int, default=8,
+                    help="replicate traces per rate (default: 8)")
+    ap.add_argument("--tasks", type=int, default=400,
+                    help="tasks per trace (default: 400; paper uses 2000)")
+    ap.add_argument("--heuristics",
+                    default=",".join(DEFAULT_HEURISTICS),
+                    help="comma list of heuristic names (default: "
+                         + ",".join(DEFAULT_HEURISTICS) + ")")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cv-run", type=float, default=0.1,
+                    help="CV of actual runtimes around the EET (default 0.1)")
+    ap.add_argument("--queue-size", type=int, default=None,
+                    help="per-machine queue slots (default: system's own)")
+    ap.add_argument("--fairness-factor", type=float, default=None,
+                    help="Eq. 3 fairness factor f (default: system's own)")
+    ap.add_argument("--pallas-phase1", action="store_true",
+                    help="route ELARE Phase-I through the Pallas kernel")
+    ap.add_argument("--out", default="artifacts/sweep",
+                    help="artifact directory (default: artifacts/sweep)")
+    args = ap.parse_args(argv)
+
+    heuristics = tuple(
+        h.strip() for h in args.heuristics.split(",") if h.strip()
+    )
+    try:
+        rates = parse_rates(args.rates) if args.rates else DEFAULT_RATES
+        spec = SweepSpec(
+            system=args.system,
+            rates=rates,
+            reps=args.reps,
+            n_tasks=args.tasks,
+            heuristics=heuristics,
+            seed=args.seed,
+            cv_run=args.cv_run,
+            queue_size=args.queue_size,
+            fairness_factor=args.fairness_factor,
+            use_pallas_phase1=args.pallas_phase1,
+        )
+    except ValueError as e:
+        ap.error(str(e))  # clean exit 2 instead of a traceback
+    return spec, args
+
+
+def print_summary(result: SweepResult, file=sys.stdout) -> None:
+    """Human-readable per-cell table (one line per heuristic x rate)."""
+    print(f"{'heuristic':9s} {'rate':>6s} {'ontime%':>8s} {'±ci':>6s} "
+          f"{'energy':>10s} {'waste%':>7s} {'cancel%':>8s} {'miss%':>6s} "
+          f"{'spread':>7s} {'jain':>6s}", file=file)
+    for row in result.summary_rows():
+        print(f"{row['heuristic']:9s} {row['rate']:6.2f} "
+              f"{100 * row['completion_rate']:8.2f} "
+              f"{100 * row['completion_rate_ci95']:6.2f} "
+              f"{row['energy']:10.1f} {row['wasted_pct']:7.2f} "
+              f"{row['cancelled_pct']:8.2f} {row['missed_pct']:6.2f} "
+              f"{row['fairness_spread']:7.4f} {row['jain_index']:6.4f}",
+              file=file)
+
+
+def main(argv=None) -> SweepResult:
+    spec, args = build_spec(argv)
+    n = spec.n_simulations
+    print(f"sweep: {len(spec.heuristics)} heuristics x "
+          f"{len(spec.rates)} rates x {spec.reps} reps "
+          f"({n} traces of {spec.n_tasks} tasks) on system={args.system}",
+          flush=True)
+    t0 = time.perf_counter()
+    result = run_sweep(spec)
+    dt = time.perf_counter() - t0
+    print(f"simulated {n} traces in {dt:.1f}s "
+          f"({1e3 * dt / n:.0f} ms/trace incl. compile)\n")
+    print_summary(result)
+    paths = result.save(args.out)
+    print(f"\nwrote {paths['csv']} and {paths['json']}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

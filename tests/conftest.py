@@ -1,0 +1,102 @@
+"""Test-suite bootstrap.
+
+The property-based tests use `hypothesis` (declared in requirements-dev.txt /
+the ``dev`` extra of pyproject.toml). Hermetic environments that cannot pip
+install get a deterministic miniature fallback instead: enough of the
+`hypothesis` API (``given``, ``settings``, ``strategies.integers / floats /
+sampled_from / lists``) to run every property test as a fixed, seeded sweep
+of examples. The fallback never shrinks and never explores adaptively — it
+is a safety net so the tier-1 suite always collects and runs, not a
+replacement for the real dependency.
+"""
+from __future__ import annotations
+
+import random
+import sys
+
+
+def _install_hypothesis_fallback() -> None:
+    import functools
+    import types
+
+    class _Strategy:
+        """A sampleable value source: ``sample(rng) -> value``."""
+
+        def __init__(self, sample):
+            self.sample = sample
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+        del allow_nan, allow_infinity  # bounded ranges are always finite
+        lo, hi = float(min_value), float(max_value)
+
+        def sample(rng):
+            # hit the boundaries occasionally — they are where Eq. 1/2's
+            # regime changes live.
+            r = rng.random()
+            if r < 0.05:
+                return lo
+            if r < 0.10:
+                return hi
+            return rng.uniform(lo, hi)
+
+        return _Strategy(sample)
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def lists(elements, min_size=0, max_size=10):
+        def sample(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(n)]
+
+        return _Strategy(sample)
+
+    def settings(max_examples=10, deadline=None, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(f):
+            max_examples = getattr(f, "_max_examples", 10)
+
+            @functools.wraps(f)
+            def wrapper(*call_args):  # () for functions, (self,) for methods
+                rng = random.Random(0xFE1A)
+                for _ in range(max_examples):
+                    args = tuple(s.sample(rng) for s in arg_strategies)
+                    kwargs = {k: s.sample(rng)
+                              for k, s in kw_strategies.items()}
+                    f(*call_args, *args, **kwargs)
+
+            # pytest must not see the original (parametrized) signature,
+            # or it would demand fixtures for every strategy argument.
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__is_fallback__ = True
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.floats = floats
+    strat.sampled_from = sampled_from
+    strat.lists = lists
+    hyp.strategies = strat
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat
+
+
+try:  # pragma: no cover - depends on the environment
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover
+    _install_hypothesis_fallback()

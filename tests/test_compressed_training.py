@@ -62,7 +62,7 @@ def test_compressed_dp_training_tracks_exact():
                 g, res = comp.crosspod_mean_compressed(g, res, "pod")
             else:
                 g = jax.tree.map(lambda x: jax.lax.pmean(x, "pod"), g)
-            p = jax.tree.map(lambda a, b: a - 0.5 * b, p, g)
+            p = jax.tree.map(lambda a, b: a - 5.0 * b, p, g)
             return p, res, jax.lax.pmean(l, "pod")
         return jax.jit(step)
 

@@ -1,0 +1,195 @@
+"""Tests for the batched Monte-Carlo sweep subsystem (repro.experiments)."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import experiments
+from repro.core import api, engine
+from repro.datapipe import synthetic
+from repro.experiments import sweep as sweep_cli
+
+MINI = experiments.SweepSpec(
+    rates=(2.0, 5.0), reps=3, n_tasks=80,
+    heuristics=("MM", "ELARE", "FELARE"), seed=7,
+)
+
+
+# --------------------------------------------------------------- rate parsing
+def test_parse_rates_comma_list():
+    assert experiments.parse_rates("1,2,4.5") == (1.0, 2.0, 4.5)
+
+
+def test_parse_rates_range_inclusive():
+    assert experiments.parse_rates("30:90:10") == (
+        30.0, 40.0, 50.0, 60.0, 70.0, 80.0, 90.0)
+    assert experiments.parse_rates("1:3") == (1.0, 2.0, 3.0)
+
+
+def test_parse_rates_rejects_bad_step():
+    with pytest.raises(ValueError):
+        experiments.parse_rates("1:5:0")
+
+
+# ---------------------------------------------------------------- trace stack
+def test_trace_stack_shapes():
+    spec = api.paper_system()
+    tr = synthetic.trace_stack(jax.random.PRNGKey(0), (1.0, 2.0, 4.0), 5,
+                               50, spec.eet)
+    assert tr.arrival.shape == (3, 5, 50)
+    assert tr.task_type.shape == (3, 5, 50)
+    assert tr.deadline.shape == (3, 5, 50)
+    assert tr.exec_actual.shape == (3, 5, 50, 4)
+
+
+def test_trace_stack_common_random_numbers():
+    """Replicate k reuses the same subkey at every rate: task types are
+    identical and arrival times scale as 1/rate."""
+    spec = api.paper_system()
+    tr = synthetic.trace_stack(jax.random.PRNGKey(3), (1.0, 4.0), 4, 60,
+                               spec.eet)
+    np.testing.assert_array_equal(np.asarray(tr.task_type[0]),
+                                  np.asarray(tr.task_type[1]))
+    np.testing.assert_array_equal(np.asarray(tr.exec_actual[0]),
+                                  np.asarray(tr.exec_actual[1]))
+    np.testing.assert_allclose(np.asarray(tr.arrival[0]),
+                               4.0 * np.asarray(tr.arrival[1]), rtol=1e-5)
+
+
+# ------------------------------------------------------- batched == sequential
+def test_batched_sweep_matches_sequential_loop():
+    """The one-jit vmapped sweep is bit-identical to simulating each trace
+    one at a time through engine.simulate (the pre-subsystem code path)."""
+    res = experiments.run_sweep(MINI)
+    system = MINI.resolve_system()
+    stacked = synthetic.trace_stack(
+        jax.random.PRNGKey(MINI.seed), MINI.rates, MINI.reps, MINI.n_tasks,
+        system.eet, cv_run=MINI.cv_run,
+    )
+    for h_i, h in enumerate(MINI.heuristics):
+        for r_i in range(len(MINI.rates)):
+            for k in range(MINI.reps):
+                single = engine.simulate(
+                    jax.tree.map(lambda x: x[r_i, k], stacked), system, h
+                )
+                batched = jax.tree.map(
+                    lambda x: x[h_i, r_i, k], res.metrics
+                )
+                for name in ("completed_by_type", "missed_by_type",
+                             "cancelled_by_type", "arrived_by_type"):
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(batched, name)),
+                        np.asarray(getattr(single, name)),
+                        err_msg=f"{h} rate[{r_i}] rep{k} {name}",
+                    )
+                for name in ("energy_dynamic", "energy_wasted",
+                             "energy_idle", "makespan"):
+                    assert float(getattr(batched, name)) == pytest.approx(
+                        float(getattr(single, name)), rel=1e-6
+                    ), f"{h} rate[{r_i}] rep{k} {name}"
+
+
+def test_run_study_is_thin_consumer_of_sweep():
+    """api.run_study must agree exactly with the sweep layer it wraps."""
+    spec = api.paper_system()
+    study = api.run_study("ELARE", [2.0, 5.0], spec, n_traces=3,
+                          n_tasks=80, seed=7)
+    res = experiments.run_sweep(
+        experiments.SweepSpec(system=spec, rates=(2.0, 5.0), reps=3,
+                              n_tasks=80, heuristics=("ELARE",), seed=7)
+    )
+    for r_i, sr in enumerate(study):
+        np.testing.assert_array_equal(
+            np.asarray(sr.metrics.completed_by_type),
+            res.metrics.completed_by_type[0, r_i],
+        )
+
+
+# -------------------------------------------------------------------- pallas
+def test_pallas_phase1_toggle_matches_jnp_path():
+    spec = experiments.SweepSpec(rates=(3.0,), reps=2, n_tasks=64,
+                                 heuristics=("ELARE", "FELARE"), seed=1)
+    ref = experiments.run_sweep(spec)
+    pal = experiments.run_sweep(
+        experiments.replace(spec, use_pallas_phase1=True))
+    for name in ("completed_by_type", "missed_by_type", "cancelled_by_type"):
+        np.testing.assert_array_equal(getattr(ref.metrics, name),
+                                      getattr(pal.metrics, name))
+
+
+# ------------------------------------------------------------------ fairness
+def test_felare_fairness_smoke():
+    """Fixed-seed mini sweep: FELARE's suffered-type (worst per-type)
+    completion rate must be >= ELARE's, with little collective loss."""
+    res = experiments.run_sweep(
+        experiments.SweepSpec(rates=(5.0,), reps=6, n_tasks=300,
+                              heuristics=("ELARE", "FELARE"), seed=0)
+    )
+    by_type = res.completion_rate_by_type   # (2, 1, 4)
+    worst_elare = float(by_type[0, 0].min())
+    worst_felare = float(by_type[1, 0].min())
+    assert worst_felare >= worst_elare
+    coll = res.completion_rate_pooled
+    assert float(coll[1, 0]) >= float(coll[0, 0]) - 0.05
+    # spread shrinks too (the Fig. 7 reading)
+    assert float(res.fairness_spread[1, 0]) <= float(
+        res.fairness_spread[0, 0]) + 1e-9
+
+
+# ------------------------------------------------------------------ results
+def test_summary_reductions_shapes_and_sanity():
+    res = experiments.run_sweep(MINI)
+    H, R, K = len(MINI.heuristics), len(MINI.rates), MINI.reps
+    assert res.completion_rate.shape == (H, R)
+    assert res.completion_rate_ci.shape == (H, R)
+    assert res.energy.shape == (H, R)
+    assert res.completion_rate_by_type.shape == (H, R, 4)
+    assert res.jain_index.shape == (H, R)
+    assert np.all(res.completion_rate >= 0) and np.all(
+        res.completion_rate <= 1)
+    assert np.all(res.jain_index > 0) and np.all(res.jain_index <= 1 + 1e-9)
+    assert np.all(res.energy > 0)
+    # completion falls as load rises (rate 5 vs rate 2), for every heuristic
+    assert np.all(res.completion_rate[:, 1] <= res.completion_rate[:, 0])
+
+
+def test_metrics_for_cell_view():
+    res = experiments.run_sweep(MINI)
+    m = res.metrics_for("FELARE", 5.0)
+    assert m.completed_by_type.shape == (MINI.reps, 4)
+    with pytest.raises(ValueError):
+        res.r_index(3.33)
+
+
+# ---------------------------------------------------------------------- CLI
+def test_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    result = sweep_cli.main([
+        "--rates", "2,5", "--reps", "2", "--tasks", "60",
+        "--heuristics", "MM,ELARE", "--out", str(out),
+    ])
+    csv_path = out / "sweep.csv"
+    json_path = out / "sweep.json"
+    assert csv_path.exists() and json_path.exists()
+    lines = csv_path.read_text().splitlines()
+    assert len(lines) == 1 + 2 * 2  # header + H*R rows
+    assert lines[0].startswith("heuristic,rate,reps,completion_rate")
+    payload = json.loads(json_path.read_text())
+    assert payload["heuristics"] == ["MM", "ELARE"]
+    assert payload["spec"]["reps"] == 2
+    assert len(payload["summary"]) == 4
+    # the returned result mirrors the artifacts
+    assert result.completion_rate.shape == (2, 2)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        experiments.SweepSpec(rates=())
+    with pytest.raises(ValueError):
+        experiments.SweepSpec(reps=0)
+    with pytest.raises(ValueError):
+        experiments.SweepSpec(system="nope").resolve_system()
+    spec = experiments.SweepSpec(queue_size=4, fairness_factor=2.0)
+    system = spec.resolve_system()
+    assert system.queue_size == 4 and system.fairness_factor == 2.0
