@@ -73,16 +73,19 @@ class StudyResult:
     """One (heuristic, arrival-rate) cell of a study.
 
     Attributes:
-      heuristic: the mapping heuristic name (e.g. ``"FELARE"``).
+      heuristic: the mapping policy name (e.g. ``"FELARE"``).
       arrival_rate: the Poisson arrival rate (tasks/sec) of this cell.
       metrics: raw per-trace :class:`Metrics`; every leaf carries a leading
         replicate dim (K traces): count leaves are (K, S) int arrays,
         energy/makespan leaves are (K,) floats.
+      p_dyn: (M,) per-machine dynamic power of the simulated system —
+        needed to normalize :attr:`wasted_energy_pct`.
     """
 
     heuristic: str
     arrival_rate: float
     metrics: Metrics  # batched over traces
+    p_dyn: np.ndarray = dataclasses.field(repr=False)
 
     @property
     def completion_rate(self) -> float:
@@ -125,10 +128,8 @@ class StudyResult:
         m = self.metrics
         cap = np.mean(
             np.asarray(m.makespan)
-        ) * float(np.sum(self._p_dyn))
+        ) * float(np.sum(self.p_dyn))
         return float(np.mean(np.asarray(m.energy_wasted))) / max(cap, 1e-9) * 100
-
-    _p_dyn: np.ndarray = dataclasses.field(default=None, repr=False)
 
 
 def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
@@ -142,7 +143,8 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
     (rate x replicate) grid in a single jitted batch.
 
     Args:
-      heuristic: one name from :data:`repro.core.heuristics.HEURISTICS`.
+      heuristic: any registered policy name
+        (:func:`repro.core.policy.list_policies`).
       arrival_rates: sequence of R Poisson arrival rates (tasks/sec).
       spec: the :class:`SystemSpec` to simulate (its queue size and
         fairness factor are used as-is).
@@ -166,11 +168,10 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
         cv_run=cv_run,
     )
     result = experiments.run_sweep(sweep_spec)
-    out = []
-    for rate in sweep_spec.rates:
-        res = StudyResult(
-            heuristic, float(rate), result.metrics_for(heuristic, rate)
+    return [
+        StudyResult(
+            heuristic, float(rate), result.metrics_for(heuristic, rate),
+            p_dyn=np.asarray(spec.p_dyn),
         )
-        res._p_dyn = np.asarray(spec.p_dyn)
-        out.append(res)
-    return out
+        for rate in sweep_spec.rates
+    ]

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fairness
-from repro.core.heuristics import MachineView
+from repro.core.policy import MachineView
 from repro.core.types import (
     CANCELLED,
     COMPLETED,
@@ -230,11 +230,12 @@ def _apply_action(st: SimState, trace: Trace, action, n_types: int):
 def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
                    queue_size: int, fairness_factor: float = 1.0,
                    max_steps: int | None = None) -> Callable:
-    """Build ``simulate(trace) -> Metrics`` for one heuristic.
+    """Build ``simulate(trace) -> Metrics`` for one mapping policy.
 
     ``select_fn(now, pending, task_type, deadline, view, sysarr, suffered)``
-    is one of repro.core.heuristics.*; it is closed over statically so jit
-    specializes per heuristic.
+    is any :class:`repro.core.policy.Policy` (e.g. from
+    ``policy.get(name)``) or a bare function with the same signature; it is
+    closed over statically so jit specializes per policy.
     """
     S, M = sysarr.eet.shape
 
@@ -294,28 +295,34 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
     return simulate
 
 
-@functools.partial(jax.jit, static_argnames=("select_name", "queue_size",
+@functools.partial(jax.jit, static_argnames=("select_fn", "queue_size",
                                              "fairness_factor", "max_steps"))
-def _simulate_jit(trace, eet, p_dyn, p_idle, select_name, queue_size,
+def _simulate_jit(trace, eet, p_dyn, p_idle, select_fn, queue_size,
                   fairness_factor, max_steps):
-    from repro.core import heuristics
-
     sysarr = SystemArrays(eet=eet, p_dyn=p_dyn, p_idle=p_idle)
     sim = make_simulator(
-        heuristics.get(select_name), sysarr, queue_size=queue_size,
+        select_fn, sysarr, queue_size=queue_size,
         fairness_factor=fairness_factor, max_steps=max_steps,
     )
     return sim(trace)
 
 
 def simulate(trace: Trace, spec, heuristic: str, *, max_steps=None) -> Metrics:
-    """Convenience entry point: one trace, one SystemSpec, one heuristic."""
+    """Convenience entry point: one trace, one SystemSpec, one heuristic.
+
+    The name is resolved through the policy registry *outside* the jit
+    boundary, and the (frozen, hashable) policy object is the static cache
+    key — so re-registering a name with ``overwrite=True`` takes effect
+    instead of silently hitting a stale name-keyed jit cache.
+    """
+    from repro.core import policy
+
     return _simulate_jit(
         trace,
         jnp.asarray(spec.eet, jnp.float32),
         jnp.asarray(spec.p_dyn, jnp.float32),
         jnp.asarray(spec.p_idle, jnp.float32),
-        heuristic.upper(),
+        policy.get(heuristic),
         spec.queue_size,
         float(spec.fairness_factor),
         max_steps,
@@ -325,10 +332,10 @@ def simulate(trace: Trace, spec, heuristic: str, *, max_steps=None) -> Metrics:
 def simulate_batch(traces: Trace, spec, heuristic: str, *, max_steps=None):
     """vmap over a stacked batch of traces (the paper's 30-trace studies)."""
     sysarr = spec.as_jax()
-    from repro.core import heuristics
+    from repro.core import policy
 
     sim = make_simulator(
-        heuristics.get(heuristic), sysarr, queue_size=spec.queue_size,
+        policy.get(heuristic), sysarr, queue_size=spec.queue_size,
         fairness_factor=float(spec.fairness_factor), max_steps=max_steps,
     )
     return jax.jit(jax.vmap(sim))(traces)

@@ -1,0 +1,143 @@
+"""Composable scheduling-policy API.
+
+The paper's whole contribution is a family of two-phase mapping heuristics;
+this package expresses them as *data* — compositions of three small pieces
+behind one typed surface:
+
+    Policy = Nominator (Phase-I) × Phase2Key (Phase-II) × DropRule
+             [× with_fairness  (Sec. V suffered-type priority + eviction)]
+
+All eight paper heuristics are one-to-three-line compositions (see the
+table in ``docs/heuristics.md``), registered by name in a mutable,
+case-insensitive registry consumed by the engine, the pyengine oracle, the
+experiments subsystem and the CLI. The Pallas ``phase1_map`` kernel plugs
+in as a first-class nominator implementation via ``with_pallas_phase1``.
+"""
+from __future__ import annotations
+
+from repro.core.policy.base import (
+    DropRule,
+    Nomination,
+    Nominator,
+    Phase2Key,
+    Policy,
+    PolicyDesc,
+    TwoPhasePolicy,
+    finalize,
+    phase2,
+)
+from repro.core.policy.components import (
+    DropStale,
+    DropStaleAndHopeless,
+    Fcfs,
+    MaxUrgency,
+    MinCompletion,
+    MinEnergyFeasible,
+    MinExecution,
+    NominationValue,
+    RandomMachine,
+    SoonestDeadline,
+)
+from repro.core.policy.context import (
+    BIG,
+    MachineView,
+    SchedContext,
+    avail_time,
+    queued_eet,
+)
+from repro.core.policy.fair import FairnessPolicy, with_fairness
+from repro.core.policy.registry import (
+    get,
+    is_registered,
+    list_policies,
+    register,
+    unregister,
+)
+
+__all__ = [
+    "BIG",
+    "DropRule",
+    "DropStale",
+    "DropStaleAndHopeless",
+    "FairnessPolicy",
+    "Fcfs",
+    "MachineView",
+    "MaxUrgency",
+    "MinCompletion",
+    "MinEnergyFeasible",
+    "MinExecution",
+    "Nomination",
+    "Nominator",
+    "NominationValue",
+    "Phase2Key",
+    "Policy",
+    "PolicyDesc",
+    "RandomMachine",
+    "SchedContext",
+    "SoonestDeadline",
+    "TwoPhasePolicy",
+    "avail_time",
+    "describe",
+    "finalize",
+    "get",
+    "is_registered",
+    "list_policies",
+    "phase2",
+    "queued_eet",
+    "register",
+    "unregister",
+    "with_fairness",
+    "with_pallas_phase1",
+]
+
+
+def describe(name_or_policy) -> PolicyDesc:
+    """The declarative (nominator, key, drop, fairness) description of a
+    policy — what the pure-Python oracle interprets.
+
+    Raises TypeError for opaque policies (custom callables without a
+    ``describe`` method): those run through the JAX engine but have no
+    oracle interpretation.
+    """
+    pol = get(name_or_policy) if isinstance(name_or_policy, str) else name_or_policy
+    fn = getattr(pol, "describe", None)
+    if fn is None:
+        raise TypeError(
+            f"policy {pol!r} is opaque (no .describe()); the pure-Python "
+            f"oracle can only interpret composed policies"
+        )
+    return fn()
+
+
+def with_pallas_phase1(pol: Policy) -> Policy:
+    """Swap a policy's Phase-I onto the fused Pallas ``phase1_map`` kernel.
+
+    No-op for policies whose nominator has no fused implementation hook
+    (matching the legacy behaviour where only ELARE/FELARE had one).
+    """
+    if not getattr(pol, "supports_phase1_impl", False):
+        return pol
+    from repro.kernels.phase1_map.ops import phase1_map
+
+    return pol.with_phase1_impl(phase1_map)
+
+
+# --------------------------------------------------------------------------
+# The eight paper heuristics as compositions (Secs. IV-VI).
+# --------------------------------------------------------------------------
+ELARE = TwoPhasePolicy(MinEnergyFeasible(), NominationValue(),
+                       DropStaleAndHopeless())
+FELARE = with_fairness(ELARE)
+MM = TwoPhasePolicy(MinCompletion(), NominationValue(), DropStale())
+MSD = TwoPhasePolicy(MinCompletion(), SoonestDeadline(), DropStale())
+MMU = TwoPhasePolicy(MinCompletion(), MaxUrgency(), DropStale())
+MET = TwoPhasePolicy(MinExecution(), NominationValue(), DropStale())
+MCT = TwoPhasePolicy(MinCompletion(), Fcfs(), DropStale())
+RANDOM = TwoPhasePolicy(RandomMachine(), Fcfs(), DropStale())
+
+for _name, _pol in [
+    ("ELARE", ELARE), ("FELARE", FELARE), ("MM", MM), ("MSD", MSD),
+    ("MMU", MMU), ("MET", MET), ("MCT", MCT), ("RANDOM", RANDOM),
+]:
+    register(_name, _pol)
+del _name, _pol

@@ -1,0 +1,173 @@
+"""The composable scheduling-policy algebra.
+
+A mapping policy is assembled from three small pieces plus optional
+wrappers, all speaking :class:`~repro.core.policy.context.SchedContext`:
+
+  * :class:`Nominator` — Phase-I (Alg. 2): each pending task nominates one
+    machine and reports the value it optimized (energy, completion, ...).
+  * :class:`Phase2Key` — Phase-II (Alg. 3): the per-machine tie-break key a
+    machine uses to pick among its nominees (lower = better).
+  * :class:`DropRule` — which pending tasks to cancel proactively this event.
+  * :func:`~repro.core.policy.fair.with_fairness` — Sec. V wrapper adding
+    suffered-type priority and queue eviction (FELARE = fairness over ELARE).
+
+:class:`TwoPhasePolicy` glues the three pieces together and is itself a
+drop-in ``select_fn`` for the engine: calling it with the legacy positional
+signature ``(now, pending, task_type, deadline, view, sysarr, suffered)``
+returns a :class:`~repro.core.types.MapAction`. The shared Phase-II /
+assigned-mask / drop epilogue lives exactly once, in :func:`phase2` and
+:func:`finalize`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Protocol
+
+import jax.numpy as jnp
+
+from repro.core.policy.context import BIG, MachineView, SchedContext
+from repro.core.types import MapAction, SystemArrays
+
+
+class Nomination(NamedTuple):
+    """Phase-I output: one nominated machine per task.
+
+    best_machine: (N,) int32 — the machine each task nominates (garbage
+      where ``valid`` is False).
+    value: (N,) f32 — the quantity Phase-I minimized (expected energy for
+      ELARE, completion time for MM/MSD/MMU, ...); ``BIG`` where invalid.
+    valid: (N,) bool — task produced a nomination this event.
+    """
+
+    best_machine: jnp.ndarray
+    value: jnp.ndarray
+    valid: jnp.ndarray
+
+    def grid(self, ctx: SchedContext) -> jnp.ndarray:
+        """(N, M) bool nominee grid: task i nominates machine j."""
+        return self.valid[:, None] & (
+            self.best_machine[:, None] == ctx.machine_arange
+        )
+
+
+class Nominator(Protocol):
+    """Phase-I: pick each task's machine. ``kind`` names the rule for the
+    pure-Python oracle and ``--list`` output."""
+
+    kind: str
+
+    def nominate(self, ctx: SchedContext) -> Nomination: ...
+
+
+class Phase2Key(Protocol):
+    """Phase-II tie-break key (lower = better), one value per task."""
+
+    kind: str
+
+    def key(self, ctx: SchedContext, nom: Nomination) -> jnp.ndarray: ...
+
+
+class DropRule(Protocol):
+    """Which pending tasks to cancel proactively at this mapping event."""
+
+    kind: str
+
+    def drop(self, ctx: SchedContext) -> jnp.ndarray: ...
+
+
+class PolicyDesc(NamedTuple):
+    """Declarative description of a composed policy.
+
+    This is how heuristics become *data*: the pure-Python oracle
+    (:mod:`repro.core.pyengine`) interprets the same four fields with plain
+    loops, so any composition of registered pieces is cross-checkable
+    without writing a second implementation.
+    """
+
+    nominator: str
+    phase2_key: str
+    drop_rule: str
+    fairness: bool = False
+
+
+class Policy(Protocol):
+    """A mapping policy: legacy-positional callable returning a MapAction."""
+
+    def __call__(self, now, pending, task_type, deadline, view, sysarr,
+                 suffered) -> MapAction: ...
+
+    def select(self, ctx: SchedContext) -> MapAction: ...
+
+
+def phase2(nominee: jnp.ndarray, key: jnp.ndarray, qfree: jnp.ndarray):
+    """Algorithm 3: per machine pick the nominee with the minimum key.
+
+    nominee: (N, M) bool, key: (N, M) float (lower = better).
+    Returns assign: (M,) int32 task index or -1.
+    """
+    masked = jnp.where(nominee, key, BIG)
+    best_task = jnp.argmin(masked, axis=0)                     # (M,)
+    has = (jnp.min(masked, axis=0) < BIG) & qfree
+    return jnp.where(has, best_task.astype(jnp.int32), -1)
+
+
+def finalize(ctx: SchedContext, assign: jnp.ndarray, drop: jnp.ndarray,
+             queue_drop: Optional[jnp.ndarray] = None) -> MapAction:
+    """Shared epilogue: never drop a task assigned this very event.
+
+    The assigned-task mask is scattered once here (the block every legacy
+    monolith used to copy) and the invariant ``assign ∩ drop = ∅`` holds by
+    construction — see ``tests/test_policy.py``.
+    """
+    assigned_mask = jnp.zeros_like(ctx.pending).at[
+        jnp.where(assign >= 0, assign, ctx.n_tasks)
+    ].set(True, mode="drop")
+    if queue_drop is None:
+        queue_drop = jnp.zeros(ctx.view.queue.shape, bool)
+    return MapAction(assign, drop & ~assigned_mask, queue_drop)
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoPhasePolicy:
+    """nominator × phase2_key × drop_rule — the paper's two-phase template.
+
+    Frozen (hashable) so jit can close over policies statically; swap a
+    piece with :func:`dataclasses.replace` or :meth:`with_phase1_impl`.
+    """
+
+    nominator: Nominator
+    phase2_key: Phase2Key
+    drop_rule: DropRule
+
+    def select(self, ctx: SchedContext) -> MapAction:
+        nom = self.nominator.nominate(ctx)
+        nominee = nom.grid(ctx)
+        key = jnp.broadcast_to(
+            self.phase2_key.key(ctx, nom)[:, None], nominee.shape
+        )
+        assign = phase2(nominee, key, ctx.qfree)
+        return finalize(ctx, assign, self.drop_rule.drop(ctx))
+
+    def __call__(self, now, pending, task_type, deadline, view: MachineView,
+                 sysarr: SystemArrays, suffered) -> MapAction:
+        return self.select(SchedContext(
+            now, pending, task_type, deadline, view, sysarr, suffered
+        ))
+
+    # -- introspection / variants ------------------------------------------
+    def describe(self) -> PolicyDesc:
+        return PolicyDesc(self.nominator.kind, self.phase2_key.kind,
+                          self.drop_rule.kind, fairness=False)
+
+    @property
+    def supports_phase1_impl(self) -> bool:
+        return hasattr(self.nominator, "with_impl")
+
+    def with_phase1_impl(self, impl) -> "TwoPhasePolicy":
+        """Swap the nominator's fused Phase-I implementation (e.g. the
+        Pallas ``phase1_map`` kernel). No-op if the nominator has no hook."""
+        if not self.supports_phase1_impl:
+            return self
+        return dataclasses.replace(
+            self, nominator=self.nominator.with_impl(impl)
+        )

@@ -1,0 +1,187 @@
+"""Concrete policy pieces: Phase-I nominators, Phase-II keys, drop rules.
+
+Every piece is a frozen (hashable) dataclass carrying a ``kind`` tag — the
+tag is what the pure-Python oracle (:mod:`repro.core.pyengine`) and the CLI
+``--list`` output key on, so a composition of these pieces is fully
+described by strings (see :class:`repro.core.policy.base.PolicyDesc`).
+
+All arithmetic deliberately mirrors the legacy monolithic heuristics op for
+op: the composed policies are bit-identical to their pre-refactor monoliths
+(property-tested in ``tests/test_policy.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.core import equations
+from repro.core.policy.base import Nomination
+from repro.core.policy.context import BIG, SchedContext
+
+
+# --------------------------------------------------------------------------
+# Phase-I nominators
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MinEnergyFeasible:
+    """ELARE Phase-I (Alg. 2): min-energy machine among *feasible* pairs.
+
+    ``impl`` optionally replaces the fused inner computation — the Pallas
+    kernel ``repro.kernels.phase1_map.ops.phase1_map`` plugs in here as a
+    first-class nominator implementation (contract:
+    ``impl(start, exec_grid, deadline, p_dyn, pending, qfree)
+    -> (best_machine, best_energy)``).
+    """
+
+    kind = "min_energy_feasible"
+    impl: Optional[Callable] = None
+
+    def with_impl(self, impl) -> "MinEnergyFeasible":
+        return dataclasses.replace(self, impl=impl)
+
+    def nominate(self, ctx: SchedContext) -> Nomination:
+        if self.impl is not None:
+            best_m, best_ec = self.impl(
+                ctx.start, ctx.exec_grid, ctx.deadline, ctx.sysarr.p_dyn,
+                ctx.pending, ctx.qfree,
+            )
+        else:
+            s, e, d = ctx.start_grid, ctx.exec_grid, ctx.deadline[:, None]
+            feas = (equations.feasible(s, e, d)
+                    & ctx.pending[:, None] & ctx.qfree[None, :])
+            ec = equations.expected_energy(s, e, d, ctx.sysarr.p_dyn[None, :])
+            ec_masked = jnp.where(feas, ec, BIG)
+            best_m = jnp.argmin(ec_masked, axis=1).astype(jnp.int32)
+            best_ec = jnp.min(ec_masked, axis=1)
+        return Nomination(best_m, best_ec, best_ec < BIG)
+
+
+@dataclasses.dataclass(frozen=True)
+class MinCompletion:
+    """Baseline Phase-I (MM/MSD/MMU/MCT): min expected completion time
+    (Eq. 1), no feasibility or energy awareness; stale tasks never nominate.
+    """
+
+    kind = "min_completion"
+
+    def nominate(self, ctx: SchedContext) -> Nomination:
+        c = equations.completion_time(
+            ctx.start_grid, ctx.exec_grid, ctx.deadline[:, None]
+        )
+        c_masked = jnp.where(
+            ctx.alive[:, None] & ctx.qfree[None, :], c, BIG
+        )
+        best_m = jnp.argmin(c_masked, axis=1).astype(jnp.int32)
+        best_c = jnp.min(c_masked, axis=1)
+        return Nomination(best_m, best_c, best_c < BIG)
+
+
+@dataclasses.dataclass(frozen=True)
+class MinExecution:
+    """MET Phase-I: ignore queue state entirely, nominate the machine with
+    the smallest raw EET entry."""
+
+    kind = "min_execution"
+
+    def nominate(self, ctx: SchedContext) -> Nomination:
+        e_masked = jnp.where(
+            ctx.alive[:, None] & ctx.qfree[None, :], ctx.exec_grid, BIG
+        )
+        best_m = jnp.argmin(e_masked, axis=1).astype(jnp.int32)
+        best_e = jnp.min(e_masked, axis=1)
+        return Nomination(best_m, best_e, best_e < BIG)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomMachine:
+    """Pseudo-random nomination (hash of task index × event time) — the
+    sanity-check lower bound. Full machines are filtered in Phase-II.
+
+    The nomination value is the task index (arrival-order proxy), so
+    composing with :class:`NominationValue` behaves like :class:`Fcfs`
+    rather than silently nominating nothing.
+    """
+
+    kind = "random_hash"
+
+    def nominate(self, ctx: SchedContext) -> Nomination:
+        n, M = ctx.n_tasks, ctx.n_machines
+        h = (jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761)
+             + (ctx.now * 1e3).astype(jnp.uint32)) % jnp.uint32(M)
+        return Nomination(
+            h.astype(jnp.int32), jnp.arange(n, dtype=jnp.float32), ctx.alive
+        )
+
+
+# --------------------------------------------------------------------------
+# Phase-II keys (lower = better)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NominationValue:
+    """Serve the nominee whose Phase-I value is smallest (ELARE: energy,
+    MM: completion time, MET: execution time)."""
+
+    kind = "value"
+
+    def key(self, ctx: SchedContext, nom: Nomination) -> jnp.ndarray:
+        return nom.value
+
+
+@dataclasses.dataclass(frozen=True)
+class SoonestDeadline:
+    """MSD: earliest-deadline nominee first, Phase-I value as tie-break."""
+
+    kind = "deadline"
+
+    def key(self, ctx: SchedContext, nom: Nomination) -> jnp.ndarray:
+        return ctx.deadline + 1e-6 * nom.value
+
+
+@dataclasses.dataclass(frozen=True)
+class MaxUrgency:
+    """MMU: most-urgent nominee first, urgency = 1/(δ − now − e)."""
+
+    kind = "urgency"
+
+    def key(self, ctx: SchedContext, nom: Nomination) -> jnp.ndarray:
+        e_best = jnp.take_along_axis(
+            ctx.exec_grid, nom.best_machine[:, None], axis=1
+        )[:, 0]
+        return -equations.urgency(ctx.deadline, e_best, ctx.now)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fcfs:
+    """First-come-first-served: lowest task index (arrival-sorted traces
+    make the index an arrival-order proxy)."""
+
+    kind = "fcfs"
+
+    def key(self, ctx: SchedContext, nom: Nomination) -> jnp.ndarray:
+        return jnp.arange(ctx.n_tasks, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Drop rules
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DropStale:
+    """Purge only tasks whose deadline already passed (the baselines)."""
+
+    kind = "stale"
+
+    def drop(self, ctx: SchedContext) -> jnp.ndarray:
+        return ctx.stale
+
+
+@dataclasses.dataclass(frozen=True)
+class DropStaleAndHopeless:
+    """ELARE's proactive cancellation (Alg. 1): also drop tasks that would
+    miss their deadline even on an instantly-free machine."""
+
+    kind = "stale_hopeless"
+
+    def drop(self, ctx: SchedContext) -> jnp.ndarray:
+        return ctx.stale | ctx.hopeless

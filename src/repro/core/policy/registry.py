@@ -1,0 +1,84 @@
+"""Mutable, case-insensitive policy registry.
+
+Policies are addressed by name everywhere — ``SweepSpec.heuristics``, the
+sweep CLI, ``engine.simulate``, the pyengine oracle — so registering a new
+policy here makes it flow through the entire one-jit sweep machinery
+untouched:
+
+    from repro.core import policy
+
+    my_policy = policy.TwoPhasePolicy(
+        policy.MinCompletion(), policy.SoonestDeadline(),
+        policy.DropStaleAndHopeless(),
+    )
+    policy.register("MSD+", my_policy)
+    # ... SweepSpec(heuristics=("MSD+", "FELARE")) now just works.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.policy.base import Policy
+
+_REGISTRY: Dict[str, Policy] = {}
+
+
+def _canon(name: str) -> str:
+    if not isinstance(name, str) or not name.strip():
+        raise ValueError(f"policy name must be a non-empty string, got {name!r}")
+    return name.strip().upper()
+
+
+def register(name: str, policy: Policy, *, overwrite: bool = False) -> Policy:
+    """Register ``policy`` under ``name`` (case-insensitive).
+
+    Re-registering an existing name raises unless ``overwrite=True`` —
+    silently shadowing a built-in (or a colleague's policy) is the kind of
+    spooky action a registry should refuse by default.
+
+    Returns the policy, so registration can be used expression-style.
+    """
+    key = _canon(name)
+    if not callable(policy):
+        raise TypeError(f"policy {name!r} must be callable, got {policy!r}")
+    if key in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"policy {name!r} is already registered; pass overwrite=True "
+            f"to replace it"
+        )
+    _REGISTRY[key] = policy
+    return policy
+
+
+def unregister(name: str) -> None:
+    """Remove a registered policy (KeyError if absent)."""
+    key = _canon(name)
+    if key not in _REGISTRY:
+        raise KeyError(f"policy {name!r} is not registered")
+    del _REGISTRY[key]
+
+
+def is_registered(name: str) -> bool:
+    try:
+        return _canon(name) in _REGISTRY
+    except ValueError:
+        return False
+
+
+def get(name: str) -> Policy:
+    """Resolve a policy by (case-insensitive) name.
+
+    Raises KeyError listing the available policies — the same error
+    surface the legacy ``heuristics.get`` had.
+    """
+    try:
+        return _REGISTRY[_canon(name)]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; choose from {list_policies()}"
+        ) from None
+
+
+def list_policies() -> List[str]:
+    """Sorted names of every registered policy."""
+    return sorted(_REGISTRY)

@@ -4,6 +4,13 @@ Deliberately written with plain loops and numpy (no shared code with the JAX
 engine beyond the dataclasses) so hypothesis property tests can cross-check
 the vectorized `repro.core.engine` implementation event-by-event.
 
+Policies are interpreted from their declarative description
+(:class:`repro.core.policy.PolicyDesc` — nominator × phase-2 key × drop rule
+× fairness flag) rather than hard-coded name branches, so any policy
+composed from the registered pieces is oracle-checkable, including
+user-registered compositions. Opaque policies (custom callables without a
+``describe()``) have no oracle interpretation and raise ``TypeError``.
+
 Precision note: trace times are dyadic (the tests round them), so event
 timestamps are exact in both engines. Everything derived from the EET table
 (availability sums, feasibility boundaries, energy keys, the fairness limit)
@@ -51,9 +58,21 @@ def _completion(s, e, d):
     return s
 
 
+def _lookup(table, kind, what):
+    """kind -> handler, with the guard and the dispatch one data structure."""
+    try:
+        return table[kind]
+    except KeyError:
+        raise NotImplementedError(
+            f"oracle has no interpretation for {what} {kind!r}"
+        ) from None
+
+
 def simulate(trace, spec, heuristic: str):
     """Run one trace; returns a dict mirroring Metrics."""
-    heuristic = heuristic.upper()
+    from repro.core import policy as policy_mod
+
+    desc = policy_mod.describe(heuristic)
     eet = np.asarray(spec.eet, np.float32)
     p_dyn = np.asarray(spec.p_dyn, np.float32)
     p_idle = np.asarray(spec.p_idle, np.float64)
@@ -107,6 +126,80 @@ def simulate(trace, spec, heuristic: str):
         eps = max(F(mu - F(fair_f * sigma)), F(0.0))
         return (cr <= eps) & (arrived >= 1)
 
+    def hopeless(k):
+        return F(F(now) + eet[ttype[k]].min()) > dl[k]
+
+    # --- Phase-I: one (task, machine, value) nomination per task -----------
+    def _nominate_min_energy_feasible(pend, free):
+        pairs = []
+        for k in pend:
+            best = None
+            for j in free:
+                s = avail(machines[j])
+                e = eet[ttype[k], j]
+                if F(s + e) <= dl[k]:
+                    ec = F(p_dyn[j] * e)
+                    if best is None or ec < best[2]:
+                        best = (k, j, ec)
+            if best:
+                pairs.append(best)
+        return pairs
+
+    def _nominate_min_completion(pend, free):
+        pairs = []
+        for k in pend:
+            best = None
+            for j in free:
+                s = avail(machines[j])
+                c = _completion(s, eet[ttype[k], j], dl[k])
+                if best is None or c < best[2]:
+                    best = (k, j, c)
+            if best:
+                pairs.append(best)
+        return pairs
+
+    def _nominate_min_execution(pend, free):
+        pairs = []
+        for k in pend:
+            best = None
+            for j in free:
+                e = eet[ttype[k], j]
+                if best is None or e < best[2]:
+                    best = (k, j, e)
+            if best:
+                pairs.append(best)
+        return pairs
+
+    def _nominate_random_hash(pend, free):
+        t32 = int(np.uint32(F(F(now) * F(1e3))))
+        return [(k, ((k * 2654435761 + t32) & 0xFFFFFFFF) % M, float(k))
+                for k in pend]
+
+    # --- Phase-II keys (lower = better), float32 with the engine's op order
+    # so tie-breaking is bit-identical --------------------------------------
+    def _key_urgency(k, j, val):
+        slack = F(F(F(dl[k]) - F(now)) - eet[ttype[k], j])
+        if abs(slack) < 1e-9:
+            slack = F(1e-9)
+        return F(-(F(1.0) / slack))
+
+    nominate = _lookup({
+        "min_energy_feasible": _nominate_min_energy_feasible,
+        "min_completion": _nominate_min_completion,
+        "min_execution": _nominate_min_execution,
+        "random_hash": _nominate_random_hash,
+    }, desc.nominator, "nominator")
+    phase2_key = _lookup({
+        "value": lambda k, j, val: F(val),
+        "deadline": lambda k, j, val: F(F(dl[k]) + F(F(1e-6) * F(val))),
+        "urgency": _key_urgency,
+        "fcfs": lambda k, j, val: float(k),
+    }, desc.phase2_key, "phase-2 key")
+    drop_hopeless = _lookup({
+        "stale": False,
+        "stale_hopeless": True,
+    }, desc.drop_rule, "drop rule")
+
     def phase2(pairs, machines_free):
         """pairs: list of (task, machine, key). One task per machine, min key."""
         assign = {}
@@ -122,25 +215,16 @@ def simulate(trace, spec, heuristic: str):
     def mapping_event():
         nonlocal status
         pend = [k for k in range(n) if status[k] == PENDING]
-        free = [j for j in range(M) if len(machines[j].queue) < Q]
         suffered = suffered_mask()
 
-        # stale purge (all heuristics)
+        # stale purge (all policies: stale tasks are never nominated)
         for k in list(pend):
             if now >= dl[k]:
                 status[k] = CANCELLED
                 cancelled[ttype[k]] += 1
                 pend.remove(k)
 
-        if heuristic in ("ELARE", "FELARE"):
-            # hopeless proactive drop
-            for k in list(pend):
-                if F(F(now) + eet[ttype[k]].min()) > dl[k]:
-                    status[k] = CANCELLED
-                    cancelled[ttype[k]] += 1
-                    pend.remove(k)
-
-        if heuristic == "FELARE":
+        if desc.fairness:
             # queue eviction for the earliest-deadline rescuable suffered task
             resc = [
                 k for k in pend
@@ -174,47 +258,14 @@ def simulate(trace, spec, heuristic: str):
                         t = m.queue.pop(qi)
                         status[t] = CANCELLED
                         cancelled[ttype[t]] += 1
-            free = [j for j in range(M) if len(machines[j].queue) < Q]
 
-        # Phase-I
-        pairs = []
-        if heuristic in ("ELARE", "FELARE"):
-            for k in pend:
-                best = None
-                for j in free:
-                    s = avail(machines[j])
-                    e = eet[ttype[k], j]
-                    if F(s + e) <= dl[k]:
-                        ec = F(p_dyn[j] * e)
-                        if best is None or ec < best[2]:
-                            best = (k, j, ec)
-                if best:
-                    pairs.append(best)
-        else:  # MM / MSD / MMU: min completion machine, no feasibility
-            for k in pend:
-                best = None
-                for j in free:
-                    s = avail(machines[j])
-                    c = _completion(s, eet[ttype[k], j], dl[k])
-                    if best is None or c < best[2]:
-                        best = (k, j, c)
-                if best:
-                    k, j, c = best
-                    # keys in float32 with the engine's op order, so
-                    # tie-breaking is bit-identical.
-                    if heuristic == "MM":
-                        key = F(c)
-                    elif heuristic == "MSD":
-                        key = F(F(dl[k]) + F(F(1e-6) * F(c)))
-                    else:  # MMU
-                        slack = F(F(F(dl[k]) - F(now)) - eet[ttype[k], j])
-                        if abs(slack) < 1e-9:
-                            slack = F(1e-9)
-                        key = F(-(F(1.0) / slack))
-                    pairs.append((k, j, key))
+        free = [j for j in range(M) if len(machines[j].queue) < Q]
 
-        # Phase-II (FELARE: suffered pairs first)
-        if heuristic == "FELARE":
+        # Phase-I + Phase-II (fairness: suffered-type pairs claim machines
+        # first, remaining machines serve the non-suffered pairs).
+        pairs = [(k, j, phase2_key(k, j, val))
+                 for (k, j, val) in nominate(pend, free)]
+        if desc.fairness:
             hi = [p for p in pairs if suffered[ttype[p[0]]]]
             lo = [p for p in pairs if not suffered[ttype[p[0]]]]
             assign = phase2(hi, free)
@@ -225,6 +276,15 @@ def simulate(trace, spec, heuristic: str):
             )
         else:
             assign = phase2(pairs, free)
+
+        # proactive drops: never drop a task assigned this very event
+        if drop_hopeless:
+            assigned = set(assign.values())
+            for k in list(pend):
+                if k not in assigned and hopeless(k):
+                    status[k] = CANCELLED
+                    cancelled[ttype[k]] += 1
+                    pend.remove(k)
 
         for j, k in assign.items():
             if status[k] == PENDING and len(machines[j].queue) < Q:

@@ -14,7 +14,6 @@ Scanned layer stacks carry one leading (layer) dim, never sharded.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # leaf-name -> spec for the *trailing* dims (scan dims padded with None).

@@ -12,37 +12,27 @@ whole experiment is a single XLA program and a single dispatch:
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.core import engine, heuristics
+from repro.core import engine, policy
 from repro.core.types import Metrics, SystemSpec, Trace
 from repro.datapipe import synthetic
 from repro.experiments.results import SweepResult
 from repro.experiments.spec import SweepSpec
 
-_PALLAS_HEURISTICS = ("ELARE", "FELARE")  # heuristics with a Phase-I hook
-
 
 def _select_fns(names, use_pallas: bool):
-    """Resolve heuristic names to select functions, with the Pallas toggle.
+    """Resolve policy names through the registry, with the Pallas toggle.
 
-    ELARE/FELARE Phase-I (the (N, M) feasibility/energy grid + masked
-    argmin) has a fused Pallas kernel; when ``use_pallas`` is set we close
-    it over the select function via the ``phase1_impl`` hook. Other
-    heuristics are unaffected by the toggle.
+    When ``use_pallas`` is set, every policy whose nominator has a fused
+    Phase-I hook (built-ins: ELARE/FELARE) is swapped onto the Pallas
+    ``phase1_map`` kernel nominator; other policies are unaffected.
     """
-    fns = []
-    for name in names:
-        fn = heuristics.get(name)
-        if use_pallas and name in _PALLAS_HEURISTICS:
-            from repro.kernels.phase1_map.ops import phase1_map
-
-            fn = functools.partial(fn, phase1_impl=phase1_map)
-        fns.append(fn)
-    return fns
+    pols = [policy.get(name) for name in names]
+    if use_pallas:
+        pols = [policy.with_pallas_phase1(p) for p in pols]
+    return pols
 
 
 def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,

@@ -56,16 +56,19 @@ class SweepSpec:
       rates: R Poisson arrival rates (tasks/sec).
       reps: K i.i.d. workload traces per rate (the paper uses 30).
       n_tasks: N tasks per trace (the paper uses 2000).
-      heuristics: mapping-heuristic names from
-        :data:`repro.core.heuristics.HEURISTICS`.
+      heuristics: mapping-policy names resolved through the
+        :mod:`repro.core.policy` registry — built-ins and any policy the
+        caller has ``policy.register``-ed.
       seed: PRNG seed; the sweep consumes exactly one
         ``jax.random.PRNGKey(seed)``.
       cv_run: coefficient of variation of actual runtimes around the EET.
       queue_size: per-machine local-queue slots; ``None`` keeps the
         system's own value.
       fairness_factor: Eq. 3's ``f``; ``None`` keeps the system's value.
-      use_pallas_phase1: route ELARE/FELARE Phase-I through the fused
-        Pallas kernel (`repro.kernels.phase1_map`) instead of the jnp path.
+      use_pallas_phase1: route Phase-I through the fused Pallas kernel
+        (`repro.kernels.phase1_map`) for every policy whose nominator has a
+        fused-implementation hook (built-ins: ELARE and FELARE); other
+        policies are unaffected.
       max_steps: optional hard cap on simulator events per trace (mostly
         for tests); ``None`` uses the engine default of ``8 * N + 64``.
     """
@@ -95,13 +98,14 @@ class SweepSpec:
             raise ValueError("rates must be non-empty")
         if not self.heuristics:
             raise ValueError("heuristics must be non-empty")
-        from repro.core.heuristics import HEURISTICS
+        from repro.core import policy
 
-        unknown = [h for h in self.heuristics if h not in HEURISTICS]
+        unknown = [h for h in self.heuristics if not policy.is_registered(h)]
         if unknown:
             raise ValueError(
                 f"unknown heuristics {unknown}; "
-                f"choose from {sorted(HEURISTICS)}"
+                f"choose from {policy.list_policies()} "
+                f"(or policy.register(...) your own)"
             )
 
     @property

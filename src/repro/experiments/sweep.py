@@ -9,6 +9,11 @@ Rates accept either a comma list (``2,3,4.5``) or an inclusive
 (rate x replicate x heuristic) simulations as one jitted batch, prints the
 per-cell summary table, and writes ``sweep.csv`` + ``sweep.json`` under
 ``--out``.
+
+``--heuristics`` accepts any name registered in the
+:mod:`repro.core.policy` registry (``--list`` prints them with their
+nominator x key x drop composition); unknown names fail fast with the
+available-policy list instead of deep inside jit tracing.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import argparse
 import sys
 import time
 
+from repro.core import policy
 from repro.experiments.results import SweepResult
 from repro.experiments.runner import run_sweep
 from repro.experiments.spec import (
@@ -45,8 +51,11 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
                     help="tasks per trace (default: 400; paper uses 2000)")
     ap.add_argument("--heuristics",
                     default=",".join(DEFAULT_HEURISTICS),
-                    help="comma list of heuristic names (default: "
-                         + ",".join(DEFAULT_HEURISTICS) + ")")
+                    help="comma list of registered policy names (default: "
+                         + ",".join(DEFAULT_HEURISTICS)
+                         + "; see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="list the registered scheduling policies and exit")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cv-run", type=float, default=0.1,
                     help="CV of actual runtimes around the EET (default 0.1)")
@@ -60,9 +69,22 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
                     help="artifact directory (default: artifacts/sweep)")
     args = ap.parse_args(argv)
 
+    if args.list:
+        print_policy_list()
+        raise SystemExit(0)
+
     heuristics = tuple(
         h.strip() for h in args.heuristics.split(",") if h.strip()
     )
+    # Fail fast on unknown names with the available-policy list, instead of
+    # erroring deep inside jit tracing.
+    unknown = [h for h in heuristics if not policy.is_registered(h)]
+    if unknown:
+        ap.error(
+            f"unknown heuristics {unknown}; registered policies: "
+            + ", ".join(policy.list_policies())
+            + " (run with --list for details)"
+        )
     try:
         rates = parse_rates(args.rates) if args.rates else DEFAULT_RATES
         spec = SweepSpec(
@@ -82,8 +104,24 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
     return spec, args
 
 
-def print_summary(result: SweepResult, file=sys.stdout) -> None:
+def print_policy_list(file=None) -> None:
+    """One line per registered policy: name + composition (or 'opaque')."""
+    file = file if file is not None else sys.stdout
+    print(f"{'name':10s} {'phase-1 nominator':20s} {'phase-2 key':12s} "
+          f"{'drop rule':15s} {'fairness':8s}", file=file)
+    for name in policy.list_policies():
+        try:
+            d = policy.describe(name)
+            print(f"{name:10s} {d.nominator:20s} {d.phase2_key:12s} "
+                  f"{d.drop_rule:15s} {'yes' if d.fairness else 'no':8s}",
+                  file=file)
+        except TypeError:
+            print(f"{name:10s} (opaque custom policy)", file=file)
+
+
+def print_summary(result: SweepResult, file=None) -> None:
     """Human-readable per-cell table (one line per heuristic x rate)."""
+    file = file if file is not None else sys.stdout
     print(f"{'heuristic':9s} {'rate':>6s} {'ontime%':>8s} {'±ci':>6s} "
           f"{'energy':>10s} {'waste%':>7s} {'cancel%':>8s} {'miss%':>6s} "
           f"{'spread':>7s} {'jain':>6s}", file=file)

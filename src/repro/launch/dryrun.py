@@ -29,7 +29,6 @@ import jax.numpy as jnp
 
 from repro.configs import registry, shapes as shp
 from repro.datapipe.synthetic import input_specs
-from repro.distributed import sharding as sh
 from repro.launch.mesh import make_production_mesh
 from repro.models import transformer as tf
 from repro.optim.adamw import AdamW

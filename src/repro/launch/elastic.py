@@ -11,7 +11,6 @@ machinery a fleet uses when a pod is added or lost between incarnations.
 """
 import argparse
 import os
-import sys
 import tempfile
 
 

@@ -19,8 +19,6 @@ materialized for a whole batch.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

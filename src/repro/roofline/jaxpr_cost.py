@@ -18,8 +18,6 @@ import math
 from functools import partial
 
 import jax
-import numpy as np
-from jax import core
 
 
 def _nbytes(aval) -> int:

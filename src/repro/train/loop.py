@@ -13,7 +13,6 @@ import time
 from typing import Callable
 
 import jax
-import numpy as np
 
 from repro.checkpoint import ckpt
 from repro.datapipe.synthetic import SyntheticLM

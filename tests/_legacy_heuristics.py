@@ -1,0 +1,401 @@
+"""Frozen pre-refactor snapshot of the monolithic heuristics (PR 1 state).
+
+DO NOT EDIT: this is the bit-exactness reference for the composed policy
+API. tests/test_policy.py property-tests that every policy composed from
+repro.core.policy reproduces these monoliths' MapActions and per-type
+counters exactly on random traces.
+
+Original module docstring:
+
+Mapping heuristics: ELARE / FELARE (the paper's contribution) + baselines.
+
+Everything is vectorized over the full arriving queue so one mapping event is
+a handful of masked reductions — jittable, vmappable, and (for Phase-I) a
+drop-in Pallas kernel (`repro.kernels.phase1_map`).
+
+Conventions (shapes):
+  N tasks in the trace, M machines, Q local-queue slots, S task types.
+  ``pending``: (N,) bool — task is in the arriving queue right now.
+  ``view``: MachineView — expected availability + queue contents.
+Mapping semantics follow the paper: at each mapping event every machine is
+assigned at most one task (Algorithm 3 returns one pair per machine).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import equations
+from repro.core.types import MapAction, SystemArrays
+
+BIG = jnp.float32(1e30)
+
+
+class MachineView(NamedTuple):
+    """Scheduler-visible machine state at a mapping event."""
+
+    avail_base: jnp.ndarray  # (M,) max(now, expected end of running task)
+    queue: jnp.ndarray       # (M, Q) int32 task idx, -1 = empty, FCFS order
+    qlen: jnp.ndarray        # (M,) int32
+
+
+def queued_eet(view: MachineView, task_type, sysarr: SystemArrays):
+    """(M, Q) expected execution time of each queued task on its machine."""
+    M, Q = view.queue.shape
+    occ = view.queue >= 0
+    ttype = jnp.where(occ, task_type[jnp.clip(view.queue, 0)], 0)
+    cols = jnp.arange(M)[:, None]
+    e = sysarr.eet[ttype, jnp.broadcast_to(cols, (M, Q))]
+    return jnp.where(occ, e, 0.0)
+
+
+def avail_time(view: MachineView, task_type, sysarr: SystemArrays):
+    """(M,) expected time each machine can start a newly-appended task."""
+    return view.avail_base + queued_eet(view, task_type, sysarr).sum(axis=1)
+
+
+def _pair_grid(now, task_type, deadline, view, sysarr):
+    """Common (N, M) grids: start, exec, completion."""
+    e = sysarr.eet[task_type]                      # (N, M)
+    s = jnp.broadcast_to(
+        jnp.maximum(avail_time(view, task_type, sysarr), now)[None, :], e.shape
+    )
+    return s, e
+
+
+def _phase2(nominee: jnp.ndarray, key: jnp.ndarray, qfree: jnp.ndarray):
+    """Algorithm 3: per machine pick the nominee with the minimum key.
+
+    nominee: (N, M) bool, key: (N, M) float (lower = better).
+    Returns assign: (M,) int32 task index or -1.
+    """
+    masked = jnp.where(nominee, key, BIG)
+    best_task = jnp.argmin(masked, axis=0)                     # (M,)
+    has = (jnp.min(masked, axis=0) < BIG) & qfree
+    return jnp.where(has, best_task.astype(jnp.int32), -1)
+
+
+def _stale(now, pending, deadline):
+    return pending & (now >= deadline)
+
+
+# --------------------------------------------------------------------------
+# ELARE (Algorithms 1-3)
+# --------------------------------------------------------------------------
+def elare_phase1(now, pending, task_type, deadline, view, sysarr, qfree,
+                 phase1_impl: Callable | None = None):
+    """Phase-I: feasible efficient pairs.
+
+    Returns (best_machine (N,), best_ec (N,), task_feasible (N,), s, e).
+    ``phase1_impl`` optionally replaces the fused inner computation with the
+    Pallas kernel (same contract as repro.kernels.phase1_map.ops.phase1_map).
+    """
+    s, e = _pair_grid(now, task_type, deadline, view, sysarr)
+    d = deadline[:, None]
+    if phase1_impl is not None:
+        # Fused Pallas path: same contract, computed in one VMEM-tiled pass.
+        best_m, best_ec = phase1_impl(
+            s[0], e, deadline, sysarr.p_dyn, pending, qfree
+        )
+    else:
+        feas = equations.feasible(s, e, d) & pending[:, None] & qfree[None, :]
+        ec = equations.expected_energy(s, e, d, sysarr.p_dyn[None, :])
+        ec_masked = jnp.where(feas, ec, BIG)
+        best_m = jnp.argmin(ec_masked, axis=1).astype(jnp.int32)   # (N,)
+        best_ec = jnp.min(ec_masked, axis=1)                       # (N,)
+    task_feasible = best_ec < BIG
+    return best_m, best_ec, task_feasible, s, e
+
+
+def _hopeless(now, pending, task_type, deadline, sysarr):
+    """Tasks that would miss their deadline even on an instantly-free machine.
+
+    ELARE's proactive cancellation: deferring them cannot help, so they are
+    dropped now instead of burning mapping events until staleness.
+    """
+    e_min = sysarr.eet[task_type].min(axis=1)
+    return pending & (now + e_min > deadline)
+
+
+def elare_select(now, pending, task_type, deadline, view, sysarr, suffered,
+                 *, phase1_impl=None) -> MapAction:
+    del suffered  # ELARE is fairness-blind
+    Q = view.queue.shape[1]
+    qfree = view.qlen < Q
+    best_m, best_ec, task_feas, _, _ = elare_phase1(
+        now, pending, task_type, deadline, view, sysarr, qfree, phase1_impl
+    )
+    nominee = (
+        task_feas[:, None]
+        & (best_m[:, None] == jnp.arange(sysarr.eet.shape[1])[None, :])
+    )
+    assign = _phase2(nominee, best_ec[:, None] * jnp.ones_like(nominee, jnp.float32),
+                     qfree)
+    drop = _stale(now, pending, deadline) | _hopeless(
+        now, pending, task_type, deadline, sysarr
+    )
+    # Never drop a task we are assigning this very event.
+    M = assign.shape[0]
+    assigned_mask = jnp.zeros_like(pending).at[
+        jnp.where(assign >= 0, assign, pending.shape[0])
+    ].set(True, mode="drop")
+    drop = drop & ~assigned_mask
+    qdrop = jnp.zeros(view.queue.shape, bool)
+    return MapAction(assign, drop, qdrop)
+
+
+# --------------------------------------------------------------------------
+# FELARE (Sec. V): suffered-type priority + queue eviction
+# --------------------------------------------------------------------------
+def felare_select(now, pending, task_type, deadline, view, sysarr, suffered,
+                  *, phase1_impl=None) -> MapAction:
+    """FELARE = ELARE + fairness.
+
+    1. Suffered-type pending tasks form high-priority pairs; Phase-II maps
+       them first.
+    2. The earliest-deadline *infeasible* suffered task triggers queue
+       eviction: non-suffered victims are dropped tail-first from its
+       best-matching (fastest) machine until the task becomes feasible there.
+    3. Machines left unassigned then serve the non-suffered pairs (keeps the
+       collective completion rate from collapsing — Fig. 7's "negligible
+       degradation").
+    """
+    M, Q = view.queue.shape
+    qfree = view.qlen < Q
+    suf_task = suffered[task_type] & pending                       # (N,)
+
+    s, e = _pair_grid(now, task_type, deadline, view, sysarr)
+    d = deadline[:, None]
+
+    # --- queue eviction for the most urgent infeasible suffered task -------
+    feas_now = equations.feasible(s, e, d) & pending[:, None]
+    task_feas_now = jnp.any(feas_now & qfree[None, :], axis=1)
+    # candidates: suffered, currently infeasible, not hopeless on an empty
+    # machine (eviction cannot beat an empty machine).
+    rescuable = (
+        suf_task
+        & ~task_feas_now
+        & (now + sysarr.eet[task_type].min(axis=1) <= deadline)
+    )
+    cand_key = jnp.where(rescuable, deadline, BIG)
+    tgt = jnp.argmin(cand_key).astype(jnp.int32)
+    have_tgt = cand_key[tgt] < BIG
+
+    # fastest (best-matching) machine for the target: min expected completion.
+    comp_tgt = view.avail_base + queued_eet(view, task_type, sysarr).sum(1) \
+        + sysarr.eet[task_type[tgt]]
+    mstar = jnp.argmin(comp_tgt).astype(jnp.int32)
+
+    # evict non-suffered victims tail-first until the target fits on mstar.
+    q_eet = queued_eet(view, task_type, sysarr)                    # (M, Q)
+    row = view.queue[mstar]                                        # (Q,)
+    occ = row >= 0
+    victim_ok = occ & ~suffered[task_type[jnp.clip(row, 0)]]
+    e_tgt = sysarr.eet[task_type[tgt], mstar]
+    base = jnp.maximum(view.avail_base[mstar], now)
+    # tail-first greedy: walk q = Q-1 .. 0, evicting while still infeasible.
+    evict = jnp.zeros((Q,), bool)
+    remaining = q_eet[mstar].sum()
+    for q in range(Q - 1, -1, -1):
+        start_if = base + remaining
+        need = start_if + e_tgt > deadline[tgt]
+        take = need & victim_ok[q]
+        evict = evict.at[q].set(take)
+        remaining = remaining - jnp.where(take, q_eet[mstar, q], 0.0)
+    feasible_after = base + remaining + e_tgt <= deadline[tgt]
+    evict = evict & feasible_after & have_tgt  # only evict if it rescues
+    qdrop = jnp.zeros((M, Q), bool).at[mstar].set(evict)
+
+    # --- recompute availability with evictions applied ---------------------
+    q_eet_after = jnp.where(qdrop, 0.0, q_eet)
+    avail_after = view.avail_base + q_eet_after.sum(axis=1)
+    qlen_after = view.qlen - qdrop.sum(axis=1).astype(view.qlen.dtype)
+    qfree_after = qlen_after < Q
+    s2 = jnp.broadcast_to(jnp.maximum(avail_after, now)[None, :], e.shape)
+
+    if phase1_impl is not None:
+        # Fused Pallas path over the post-eviction availability (same
+        # contract as elare_phase1's hook).
+        best_m, best_ec = phase1_impl(
+            s2[0], e, deadline, sysarr.p_dyn, pending, qfree_after
+        )
+    else:
+        feas = (equations.feasible(s2, e, d)
+                & pending[:, None] & qfree_after[None, :])
+        ec = equations.expected_energy(s2, e, d, sysarr.p_dyn[None, :])
+        ec_masked = jnp.where(feas, ec, BIG)
+        best_m = jnp.argmin(ec_masked, axis=1).astype(jnp.int32)
+        best_ec = jnp.min(ec_masked, axis=1)
+    task_feas = best_ec < BIG
+    marange = jnp.arange(M)[None, :]
+    nominee = task_feas[:, None] & (best_m[:, None] == marange)
+    key = jnp.broadcast_to(best_ec[:, None], nominee.shape)
+
+    # Phase-II, high-priority pairs first.
+    hi = nominee & suf_task[:, None]
+    assign_hi = _phase2(hi, key, qfree_after)
+    taken = assign_hi >= 0
+    lo = nominee & ~suf_task[:, None]
+    assign_lo = _phase2(lo, key, qfree_after & ~taken)
+    assign = jnp.where(taken, assign_hi, assign_lo)
+
+    drop = _stale(now, pending, deadline) | _hopeless(
+        now, pending, task_type, deadline, sysarr
+    )
+    assigned_mask = jnp.zeros_like(pending).at[
+        jnp.where(assign >= 0, assign, pending.shape[0])
+    ].set(True, mode="drop")
+    drop = drop & ~assigned_mask
+    return MapAction(assign, drop, qdrop)
+
+
+# --------------------------------------------------------------------------
+# Baselines: MM / MSD / MMU (Sec. VI-B)
+# --------------------------------------------------------------------------
+def _baseline_select(now, pending, task_type, deadline, view, sysarr, suffered,
+                     *, phase2_key: str) -> MapAction:
+    """Two-phase baselines. Phase-I: per-task min expected completion time
+    (no feasibility / energy awareness). Phase-II key distinguishes MM
+    (min completion), MSD (soonest deadline), MMU (max urgency).
+    """
+    del suffered
+    M, Q = view.queue.shape
+    qfree = view.qlen < Q
+    # Stale tasks (deadline already passed) are purged, never mapped — the
+    # baselines have no feasibility check, so without this mask a stale task
+    # could win a machine on the phase-2 key and burn the slot.
+    alive = pending & ~_stale(now, pending, deadline)
+    s, e = _pair_grid(now, task_type, deadline, view, sysarr)
+    c = equations.completion_time(s, e, deadline[:, None])
+    c_masked = jnp.where(alive[:, None] & qfree[None, :], c, BIG)
+    best_m = jnp.argmin(c_masked, axis=1).astype(jnp.int32)
+    best_c = jnp.min(c_masked, axis=1)
+    has = best_c < BIG
+    nominee = has[:, None] & (best_m[:, None] == jnp.arange(M)[None, :])
+
+    if phase2_key == "completion":        # MM
+        key = best_c[:, None]
+    elif phase2_key == "deadline":        # MSD (tie-break on completion)
+        key = deadline[:, None] + 1e-6 * best_c[:, None]
+    elif phase2_key == "urgency":         # MMU: maximize urgency = minimize -u
+        e_best = jnp.take_along_axis(e, best_m[:, None], axis=1)[:, 0]
+        u = equations.urgency(deadline, e_best, now)
+        key = -u[:, None]
+    else:  # pragma: no cover
+        raise ValueError(phase2_key)
+    key = jnp.broadcast_to(key, nominee.shape)
+    assign = _phase2(nominee, key, qfree)
+
+    drop = _stale(now, pending, deadline)  # baselines only purge stale tasks
+    assigned_mask = jnp.zeros_like(pending).at[
+        jnp.where(assign >= 0, assign, pending.shape[0])
+    ].set(True, mode="drop")
+    drop = drop & ~assigned_mask
+    qdrop = jnp.zeros((M, Q), bool)
+    return MapAction(assign, drop, qdrop)
+
+
+mm_select = functools.partial(_baseline_select, phase2_key="completion")
+msd_select = functools.partial(_baseline_select, phase2_key="deadline")
+mmu_select = functools.partial(_baseline_select, phase2_key="urgency")
+
+
+# --------------------------------------------------------------------------
+# Extra single-phase baselines from the heterogeneous-computing literature
+# (MET / MCT / RANDOM) — widen the comparison pool beyond the paper's three.
+# --------------------------------------------------------------------------
+def met_select(now, pending, task_type, deadline, view, sysarr, suffered
+               ) -> MapAction:
+    """Minimum Execution Time: ignore queue state, pick each task's fastest
+    machine; per machine serve the min-execution nominee."""
+    del suffered
+    M, Q = view.queue.shape
+    qfree = view.qlen < Q
+    alive = pending & ~_stale(now, pending, deadline)
+    e = sysarr.eet[task_type]                                   # (N, M)
+    e_masked = jnp.where(alive[:, None] & qfree[None, :], e, BIG)
+    best_m = jnp.argmin(e_masked, axis=1).astype(jnp.int32)
+    best_e = jnp.min(e_masked, axis=1)
+    nominee = (best_e < BIG)[:, None] & (
+        best_m[:, None] == jnp.arange(M)[None, :])
+    assign = _phase2(nominee, jnp.broadcast_to(best_e[:, None],
+                                               nominee.shape), qfree)
+    drop = _stale(now, pending, deadline)
+    assigned_mask = jnp.zeros_like(pending).at[
+        jnp.where(assign >= 0, assign, pending.shape[0])
+    ].set(True, mode="drop")
+    return MapAction(assign, drop & ~assigned_mask,
+                     jnp.zeros((M, Q), bool))
+
+
+def mct_select(now, pending, task_type, deadline, view, sysarr, suffered
+               ) -> MapAction:
+    """Minimum Completion Time with FCFS phase-2 (earliest arrival proxy =
+    lowest task index)."""
+    del suffered
+    M, Q = view.queue.shape
+    qfree = view.qlen < Q
+    alive = pending & ~_stale(now, pending, deadline)
+    s, e = _pair_grid(now, task_type, deadline, view, sysarr)
+    c = equations.completion_time(s, e, deadline[:, None])
+    c_masked = jnp.where(alive[:, None] & qfree[None, :], c, BIG)
+    best_m = jnp.argmin(c_masked, axis=1).astype(jnp.int32)
+    has = jnp.min(c_masked, axis=1) < BIG
+    nominee = has[:, None] & (best_m[:, None] == jnp.arange(M)[None, :])
+    fcfs_key = jnp.broadcast_to(
+        jnp.arange(pending.shape[0], dtype=jnp.float32)[:, None],
+        nominee.shape)
+    assign = _phase2(nominee, fcfs_key, qfree)
+    drop = _stale(now, pending, deadline)
+    assigned_mask = jnp.zeros_like(pending).at[
+        jnp.where(assign >= 0, assign, pending.shape[0])
+    ].set(True, mode="drop")
+    return MapAction(assign, drop & ~assigned_mask,
+                     jnp.zeros((M, Q), bool))
+
+
+def random_select(now, pending, task_type, deadline, view, sysarr, suffered
+                  ) -> MapAction:
+    """Pseudo-random mapping (hash of task index x event time) — the
+    sanity-check lower bound."""
+    del suffered
+    M, Q = view.queue.shape
+    qfree = view.qlen < Q
+    n = pending.shape[0]
+    alive = pending & ~_stale(now, pending, deadline)
+    h = (jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761)
+         + (now * 1e3).astype(jnp.uint32)) % jnp.uint32(M)
+    nominee = alive[:, None] & (
+        h[:, None].astype(jnp.int32) == jnp.arange(M)[None, :])
+    key = jnp.broadcast_to(
+        jnp.arange(n, dtype=jnp.float32)[:, None], nominee.shape)
+    assign = _phase2(nominee, key, qfree)
+    drop = _stale(now, pending, deadline)
+    assigned_mask = jnp.zeros_like(pending).at[
+        jnp.where(assign >= 0, assign, pending.shape[0])
+    ].set(True, mode="drop")
+    return MapAction(assign, drop & ~assigned_mask,
+                     jnp.zeros((M, Q), bool))
+
+
+HEURISTICS: dict[str, Callable] = {
+    "ELARE": elare_select,
+    "FELARE": felare_select,
+    "MM": mm_select,
+    "MSD": msd_select,
+    "MMU": mmu_select,
+    "MET": met_select,
+    "MCT": mct_select,
+    "RANDOM": random_select,
+}
+
+
+def get(name: str) -> Callable:
+    try:
+        return HEURISTICS[name.upper()]
+    except KeyError:
+        raise KeyError(
+            f"unknown heuristic {name!r}; choose from {sorted(HEURISTICS)}"
+        ) from None

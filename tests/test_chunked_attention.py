@@ -1,6 +1,5 @@
 """xla_chunked attention == dense attention (the XLA peak-memory option)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

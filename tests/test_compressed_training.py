@@ -76,8 +76,8 @@ def test_compressed_dp_training_tracks_exact():
         step = make_step(compressed)
         losses = []
         for b in data:
-            p, res, l = step(p, res, b)
-            losses.append(float(l))
+            p, res, loss = step(p, res, b)
+            losses.append(float(loss))
         if compressed:
             comp_losses = losses
         else:

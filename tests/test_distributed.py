@@ -11,8 +11,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
-
 _SCRIPT_PRELUDE = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -161,9 +159,7 @@ def test_sharded_decode_step_runs():
 def test_gradient_compression_preserves_convergence():
     """Error feedback: compressed optimization tracks uncompressed on a
     quadratic (single process math check, no mesh needed)."""
-    import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.distributed import compression as comp
 

@@ -8,10 +8,12 @@ import pytest
 from hypothesis import given, settings
 
 from repro.core import api, engine, pyengine, workload
-from repro.core.types import Trace
 
 SPEC = api.paper_system()
-HEURISTICS = ["MM", "MSD", "MMU", "ELARE", "FELARE"]
+# All 8 registered policies: since the oracle interprets PolicyDesc
+# compositions (not hard-coded names), MET/MCT/RANDOM are cross-checkable
+# against pyengine too.
+HEURISTICS = ["MM", "MSD", "MMU", "MET", "MCT", "RANDOM", "ELARE", "FELARE"]
 
 
 def _dyadic(x):

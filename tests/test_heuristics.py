@@ -1,7 +1,6 @@
 """Unit tests for the mapping heuristics at a single mapping event."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import heuristics
 from repro.core.heuristics import MachineView

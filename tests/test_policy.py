@@ -1,0 +1,366 @@
+"""Tests for the composable scheduling-policy API (repro.core.policy).
+
+Covers: registry round-trip, composed-vs-legacy-monolith bit-equivalence
+(event-level MapActions and full-trace counters, all 8 paper heuristics),
+the Pallas kernel as a pluggable nominator, the assigned-never-dropped
+invariant, and a custom registered policy flowing end-to-end through
+``run_sweep`` and the CLI without touching ``repro/experiments``.
+"""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+import _legacy_heuristics as legacy
+from repro.core import api, engine, policy, workload
+from repro.core.types import SystemArrays
+
+ALL_POLICIES = ("ELARE", "FELARE", "MM", "MSD", "MMU", "MET", "MCT", "RANDOM")
+
+LEGACY = {
+    "ELARE": legacy.elare_select,
+    "FELARE": legacy.felare_select,
+    "MM": legacy.mm_select,
+    "MSD": legacy.msd_select,
+    "MMU": legacy.mmu_select,
+    "MET": legacy.met_select,
+    "MCT": legacy.mct_select,
+    "RANDOM": legacy.random_select,
+}
+
+# 2 task types x 2 machines toy system for event-level tests.
+EET = jnp.array([[4.0, 1.0], [8.0, 2.0]], jnp.float32)
+SYS = SystemArrays(
+    eet=EET,
+    p_dyn=jnp.array([1.0, 5.0], jnp.float32),
+    p_idle=jnp.array([0.05, 0.05], jnp.float32),
+)
+SPEC = api.paper_system()
+
+
+def _random_event(seed: int, n: int = 16, M: int = 2, Q: int = 2):
+    """A random mapping-event state (pending/queued tasks, machine views)."""
+    rng = np.random.RandomState(seed)
+    now = np.float32(rng.uniform(0, 10))
+    pending = rng.rand(n) < 0.7
+    ttype = rng.randint(0, 2, n)
+    dl = (now + rng.uniform(-2, 15, n)).astype(np.float32)
+    avail = (now + rng.uniform(0, 5, M)).astype(np.float32)
+    queue = np.full((M, Q), -1, np.int32)
+    for j in range(M):
+        for s, t in enumerate(rng.choice(n, rng.randint(0, Q + 1),
+                                         replace=False)):
+            queue[j, s] = t
+            pending[t] = False
+    qlen = (queue >= 0).sum(1).astype(np.int32)
+    view = policy.MachineView(jnp.asarray(avail), jnp.asarray(queue),
+                              jnp.asarray(qlen))
+    suffered = rng.rand(2) < 0.5
+    return (jnp.float32(now), jnp.asarray(pending),
+            jnp.asarray(ttype, jnp.int32), jnp.asarray(dl), view, SYS,
+            jnp.asarray(suffered))
+
+
+def _trace(seed, n, rate):
+    return workload.poisson_trace(jax.random.PRNGKey(seed), n, rate, SPEC.eet)
+
+
+# --------------------------------------------------------------- registry
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert set(ALL_POLICIES) <= set(policy.list_policies())
+
+    def test_round_trip_and_case_insensitivity(self):
+        pol = policy.TwoPhasePolicy(policy.MinCompletion(), policy.Fcfs(),
+                                    policy.DropStale())
+        policy.register("my-policy", pol)
+        try:
+            assert policy.get("my-policy") is pol
+            assert policy.get("MY-POLICY") is pol
+            assert policy.get("My-Policy") is pol
+            assert policy.is_registered("mY-pOlIcY")
+            assert "MY-POLICY" in policy.list_policies()
+        finally:
+            policy.unregister("my-policy")
+        assert not policy.is_registered("my-policy")
+
+    def test_duplicate_name_rejected(self):
+        pol = policy.TwoPhasePolicy(policy.MinCompletion(), policy.Fcfs(),
+                                    policy.DropStale())
+        with pytest.raises(ValueError, match="already registered"):
+            policy.register("elare", pol)
+        # overwrite=True is the explicit escape hatch
+        policy.register("dup-test", pol)
+        try:
+            policy.register("dup-test", pol, overwrite=True)
+        finally:
+            policy.unregister("dup-test")
+
+    def test_unknown_name_lists_available(self):
+        with pytest.raises(KeyError, match="ELARE"):
+            policy.get("nope")
+        with pytest.raises(KeyError):
+            policy.unregister("nope")
+
+    def test_bad_registrations_rejected(self):
+        with pytest.raises(ValueError):
+            policy.register("", policy.MM)
+        with pytest.raises(TypeError):
+            policy.register("notcallable", object())
+
+    def test_describe(self):
+        d = policy.describe("FELARE")
+        assert d == policy.PolicyDesc("min_energy_feasible", "value",
+                                      "stale_hopeless", fairness=True)
+        assert not policy.describe("ELARE").fairness
+        with pytest.raises(TypeError, match="opaque"):
+            policy.describe(lambda *a: None)
+
+    def test_legacy_heuristics_shim_is_registry_view(self):
+        from repro.core import heuristics
+
+        assert heuristics.get("felare") is policy.get("FELARE")
+        assert set(ALL_POLICIES) <= set(heuristics.HEURISTICS)
+        pol = policy.TwoPhasePolicy(policy.MinExecution(), policy.Fcfs(),
+                                    policy.DropStale())
+        policy.register("shim-view", pol)
+        try:
+            # user registrations appear through the legacy dict surface
+            assert heuristics.HEURISTICS["shim-view"] is pol
+        finally:
+            policy.unregister("shim-view")
+
+
+# ------------------------------------------------- composed == legacy monolith
+@pytest.mark.parametrize("name", ALL_POLICIES)
+def test_composed_matches_legacy_event_actions(name):
+    """Every composed policy emits bit-identical MapActions to its
+    pre-refactor monolith on random mapping events."""
+    pol = policy.get(name)
+    leg = LEGACY[name]
+    for seed in range(60):
+        args = _random_event(seed)
+        a, b = pol(*args), leg(*args)
+        for field in ("assign", "drop", "queue_drop"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, field)), np.asarray(getattr(b, field)),
+                err_msg=f"{name} seed={seed} {field}",
+            )
+
+
+@given(seed=st.integers(0, 10_000), rate=st.sampled_from([2.0, 5.0, 8.0]),
+       name=st.sampled_from(ALL_POLICIES))
+@settings(max_examples=16, deadline=None)
+def test_composed_matches_legacy_trace_counters(seed, rate, name):
+    """Property: full-trace per-type counters of each composed policy are
+    bit-identical to the legacy monolith driven through the same engine."""
+    tr = _trace(seed, 60, rate)
+    sysarr = SPEC.as_jax()
+    sim_new = engine.make_simulator(
+        policy.get(name), sysarr, queue_size=SPEC.queue_size,
+        fairness_factor=float(SPEC.fairness_factor))
+    sim_old = engine.make_simulator(
+        LEGACY[name], sysarr, queue_size=SPEC.queue_size,
+        fairness_factor=float(SPEC.fairness_factor))
+    m_new, m_old = sim_new(tr), sim_old(tr)
+    for field in ("completed_by_type", "missed_by_type", "cancelled_by_type",
+                  "arrived_by_type"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(m_new, field)),
+            np.asarray(getattr(m_old, field)),
+            err_msg=f"{name} seed={seed} rate={rate} {field}",
+        )
+    for field in ("energy_dynamic", "energy_wasted", "makespan"):
+        assert float(getattr(m_new, field)) == float(getattr(m_old, field)), \
+            f"{name} seed={seed} rate={rate} {field}"
+
+
+# ------------------------------------------------------------ pallas nominator
+def test_pallas_kernel_plugs_in_as_nominator():
+    """`with_pallas_phase1` swaps the nominator implementation; the mapping
+    decisions are identical to the jnp Phase-I on random events."""
+    pal_elare = policy.with_pallas_phase1(policy.get("ELARE"))
+    pal_felare = policy.with_pallas_phase1(policy.get("FELARE"))
+    assert pal_elare.nominator.impl is not None
+    assert pal_felare.base.nominator.impl is not None
+    for seed in range(20):
+        args = _random_event(seed, n=24)
+        for ref_pol, pal_pol in ((policy.ELARE, pal_elare),
+                                 (policy.FELARE, pal_felare)):
+            a, b = ref_pol(*args), pal_pol(*args)
+            for field in ("assign", "drop", "queue_drop"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(a, field)),
+                    np.asarray(getattr(b, field)),
+                    err_msg=f"seed={seed} {field}",
+                )
+
+
+def test_pallas_toggle_noop_for_hookless_policies():
+    mm = policy.get("MM")
+    assert policy.with_pallas_phase1(mm) is mm
+
+
+# ----------------------------------------------------------- drop invariants
+@given(seed=st.integers(0, 10_000), name=st.sampled_from(ALL_POLICIES))
+@settings(max_examples=24, deadline=None)
+def test_assigned_task_never_dropped(seed, name):
+    """Regression for the shared epilogue: a task assigned to a machine at
+    this event must never simultaneously appear in the drop mask."""
+    args = _random_event(seed % 4096)
+    act = policy.get(name)(*args)
+    assign = np.asarray(act.assign)
+    drop = np.asarray(act.drop)
+    for j in range(assign.shape[0]):
+        if assign[j] >= 0:
+            assert not drop[assign[j]], (
+                f"{name}: task {assign[j]} assigned to machine {j} "
+                f"but also dropped"
+            )
+
+
+# -------------------------------------------------- custom policy end-to-end
+def test_custom_policy_through_run_sweep_and_cli(tmp_path):
+    """A user-registered composition runs through the whole one-jit sweep
+    machinery and the CLI without modifying repro/experiments."""
+    from repro import experiments
+    from repro.experiments import sweep as sweep_cli
+
+    custom = policy.with_fairness(
+        policy.TwoPhasePolicy(policy.MinCompletion(), policy.SoonestDeadline(),
+                              policy.DropStaleAndHopeless())
+    )
+    policy.register("FAIR-MSD", custom)
+    try:
+        spec = experiments.SweepSpec(
+            rates=(3.0,), reps=2, n_tasks=60,
+            heuristics=("fair-msd", "MSD"), seed=5,
+        )
+        res = experiments.run_sweep(spec)
+        assert res.completion_rate.shape == (2, 1)
+        assert spec.heuristics == ("FAIR-MSD", "MSD")
+
+        out = tmp_path / "artifacts"
+        result = sweep_cli.main([
+            "--rates", "3", "--reps", "1", "--tasks", "40",
+            "--heuristics", "FAIR-MSD,ELARE", "--out", str(out),
+        ])
+        assert (out / "sweep.csv").exists()
+        assert result.completion_rate.shape == (2, 1)
+    finally:
+        policy.unregister("FAIR-MSD")
+
+
+def test_custom_policy_oracle_interpretable():
+    """Composed custom policies get pyengine oracle coverage for free."""
+    from repro.core import pyengine
+
+    custom = policy.TwoPhasePolicy(policy.MinCompletion(), policy.Fcfs(),
+                                   policy.DropStaleAndHopeless())
+    policy.register("MCT-PRO", custom)
+    try:
+        tr = _trace(11, 80, 4.0)
+        tr = tr._replace(
+            arrival=jnp.asarray(
+                (np.round(np.asarray(tr.arrival) * 64) / 64), jnp.float32),
+            deadline=jnp.asarray(
+                (np.round(np.asarray(tr.deadline) * 64) / 64), jnp.float32),
+            exec_actual=jnp.asarray(
+                (np.round(np.asarray(tr.exec_actual) * 64) / 64), jnp.float32),
+        )
+        mj = engine.simulate(tr, SPEC, "MCT-PRO")
+        mp = pyengine.simulate(tr, SPEC, "MCT-PRO")
+        np.testing.assert_array_equal(
+            np.asarray(mj.completed_by_type), mp["completed_by_type"])
+        np.testing.assert_array_equal(
+            np.asarray(mj.cancelled_by_type), mp["cancelled_by_type"])
+    finally:
+        policy.unregister("MCT-PRO")
+
+
+def test_engine_simulate_sees_overwritten_registration():
+    """Regression: engine.simulate resolves the policy outside the jit
+    boundary, so overwrite=True re-registrations take effect instead of
+    hitting a stale name-keyed jit cache."""
+    tr = _trace(3, 60, 5.0)
+    policy.register("SWAP-TEST", policy.get("MM"))
+    try:
+        first = engine.simulate(tr, SPEC, "SWAP-TEST")
+        np.testing.assert_array_equal(
+            np.asarray(first.completed_by_type),
+            np.asarray(engine.simulate(tr, SPEC, "MM").completed_by_type))
+        policy.register("SWAP-TEST", policy.get("ELARE"), overwrite=True)
+        second = engine.simulate(tr, SPEC, "SWAP-TEST")
+        np.testing.assert_array_equal(
+            np.asarray(second.completed_by_type),
+            np.asarray(engine.simulate(tr, SPEC, "ELARE").completed_by_type))
+    finally:
+        policy.unregister("SWAP-TEST")
+
+
+def test_random_nominator_composes_with_value_key():
+    """Regression: RandomMachine reports a real nomination value, so
+    RandomMachine x NominationValue assigns tasks (and stays oracle-exact)
+    instead of silently nominating nothing."""
+    from repro.core import pyengine
+
+    pol = policy.TwoPhasePolicy(policy.RandomMachine(),
+                                policy.NominationValue(), policy.DropStale())
+    policy.register("RAND-VAL", pol)
+    try:
+        tr = _trace(9, 80, 3.0)
+        tr = tr._replace(
+            arrival=jnp.asarray(
+                np.round(np.asarray(tr.arrival) * 64) / 64, jnp.float32),
+            deadline=jnp.asarray(
+                np.round(np.asarray(tr.deadline) * 64) / 64, jnp.float32),
+            exec_actual=jnp.asarray(
+                np.round(np.asarray(tr.exec_actual) * 64) / 64, jnp.float32),
+        )
+        mj = engine.simulate(tr, SPEC, "RAND-VAL")
+        assert int(np.sum(mj.completed_by_type)) > 0
+        mp = pyengine.simulate(tr, SPEC, "RAND-VAL")
+        np.testing.assert_array_equal(
+            np.asarray(mj.completed_by_type), mp["completed_by_type"])
+        np.testing.assert_array_equal(
+            np.asarray(mj.cancelled_by_type), mp["cancelled_by_type"])
+    finally:
+        policy.unregister("RAND-VAL")
+
+
+# --------------------------------------------------------------- CLI surface
+def test_cli_list_flag(capsys):
+    from repro.experiments import sweep as sweep_cli
+
+    with pytest.raises(SystemExit) as e:
+        sweep_cli.build_spec(["--list"])
+    assert e.value.code == 0
+    out = capsys.readouterr().out
+    for name in ALL_POLICIES:
+        assert name in out
+    assert "min_energy_feasible" in out
+
+
+def test_cli_unknown_policy_fails_fast(capsys):
+    from repro.experiments import sweep as sweep_cli
+
+    with pytest.raises(SystemExit) as e:
+        sweep_cli.build_spec(["--heuristics", "ELARE,NOSUCH"])
+    assert e.value.code == 2
+    err = capsys.readouterr().err
+    assert "NOSUCH" in err and "ELARE" in err  # available list shown
+
+
+# ------------------------------------------------------------- StudyResult
+def test_study_result_p_dyn_is_constructor_argument():
+    """`wasted_energy_pct` works straight off the constructor (regression
+    for the post-construction `_p_dyn` mutation hack)."""
+    study = api.run_study("ELARE", [4.0], SPEC, n_traces=2, n_tasks=50)
+    res = study[0]
+    assert isinstance(res.p_dyn, np.ndarray)
+    assert np.isfinite(res.wasted_energy_pct)
+    rebuilt = api.StudyResult(res.heuristic, res.arrival_rate, res.metrics,
+                              p_dyn=np.asarray(SPEC.p_dyn))
+    assert rebuilt.wasted_energy_pct == res.wasted_energy_pct

@@ -2,7 +2,6 @@
 exactness) and the while-aware HLO collective parser."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.roofline import analysis, hlo_graph, jaxpr_cost
