@@ -7,12 +7,13 @@ miniature. The whole (heuristic x rate x trace) grid runs as ONE jitted
 batch via `repro.experiments`.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--tasks 1000] [--traces 8]
+      [--scenario bursty]   # any registered workload scenario
 """
 import argparse
 
 import numpy as np
 
-from repro import experiments
+from repro import experiments, scenarios
 
 
 def main():
@@ -21,11 +22,16 @@ def main():
     ap.add_argument("--traces", type=int, default=8)
     ap.add_argument("--rates", type=float, nargs="+",
                     default=[2.0, 4.0, 8.0])
+    ap.add_argument("--scenario", default="poisson",
+                    choices=scenarios.list_scenarios(),
+                    help="workload scenario (default: the paper's "
+                         "stationary Poisson)")
     args = ap.parse_args()
 
     heuristics = ("MM", "MSD", "MMU", "ELARE", "FELARE")
     spec = experiments.SweepSpec(
-        system="paper",
+        system=None,  # the scenario's own fleet, or the paper 4x4
+        scenario=args.scenario,
         rates=tuple(args.rates),
         reps=args.traces,
         n_tasks=args.tasks,

@@ -134,7 +134,7 @@ class StudyResult:
 
 def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
               n_traces: int = 30, n_tasks: int = 2000, seed: int = 0,
-              cv_run: float = 0.1):
+              cv_run: float = 0.1, scenario="poisson"):
     """The paper's experiment template for one heuristic.
 
     Thin wrapper over :func:`repro.experiments.run_sweep`: synthesizes
@@ -145,13 +145,17 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
     Args:
       heuristic: any registered policy name
         (:func:`repro.core.policy.list_policies`).
-      arrival_rates: sequence of R Poisson arrival rates (tasks/sec).
+      arrival_rates: sequence of R nominal arrival rates (tasks/sec).
       spec: the :class:`SystemSpec` to simulate (its queue size and
         fairness factor are used as-is).
       n_traces: K replicate traces per rate (paper: 30).
       n_tasks: N tasks per trace (paper: 2000).
       seed: PRNG seed for trace synthesis.
       cv_run: coefficient of variation of actual runtimes around the EET.
+      scenario: workload scenario — a registered name
+        (:func:`repro.scenarios.list_scenarios`) or a
+        :class:`repro.scenarios.Scenario`; default is the paper's
+        stationary Poisson workload.
 
     Returns:
       list[StudyResult] of length R, in ``arrival_rates`` order.
@@ -160,6 +164,7 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
 
     sweep_spec = experiments.SweepSpec(
         system=spec,
+        scenario=scenario,
         rates=tuple(float(r) for r in arrival_rates),
         reps=n_traces,
         n_tasks=n_tasks,

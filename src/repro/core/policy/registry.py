@@ -13,56 +13,43 @@ untouched:
     )
     policy.register("MSD+", my_policy)
     # ... SweepSpec(heuristics=("MSD+", "FELARE")) now just works.
+
+The mechanics (canonicalization, shadowing protection, unknown-name
+errors) live in the shared :class:`repro.core.registry.NameRegistry`,
+the same machinery behind the scenario and fleet registries.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 from repro.core.policy.base import Policy
+from repro.core.registry import NameRegistry
 
-_REGISTRY: Dict[str, Policy] = {}
+
+def _check(name, policy) -> None:
+    if not callable(policy):
+        raise TypeError(f"policy {name!r} must be callable, got {policy!r}")
 
 
-def _canon(name: str) -> str:
-    if not isinstance(name, str) or not name.strip():
-        raise ValueError(f"policy name must be a non-empty string, got {name!r}")
-    return name.strip().upper()
+_REGISTRY = NameRegistry("policy", case=str.upper, check=_check)
 
 
 def register(name: str, policy: Policy, *, overwrite: bool = False) -> Policy:
     """Register ``policy`` under ``name`` (case-insensitive).
 
-    Re-registering an existing name raises unless ``overwrite=True`` —
-    silently shadowing a built-in (or a colleague's policy) is the kind of
-    spooky action a registry should refuse by default.
-
+    Re-registering an existing name raises unless ``overwrite=True``.
     Returns the policy, so registration can be used expression-style.
     """
-    key = _canon(name)
-    if not callable(policy):
-        raise TypeError(f"policy {name!r} must be callable, got {policy!r}")
-    if key in _REGISTRY and not overwrite:
-        raise ValueError(
-            f"policy {name!r} is already registered; pass overwrite=True "
-            f"to replace it"
-        )
-    _REGISTRY[key] = policy
-    return policy
+    return _REGISTRY.register(name, policy, overwrite=overwrite)
 
 
 def unregister(name: str) -> None:
     """Remove a registered policy (KeyError if absent)."""
-    key = _canon(name)
-    if key not in _REGISTRY:
-        raise KeyError(f"policy {name!r} is not registered")
-    del _REGISTRY[key]
+    _REGISTRY.unregister(name)
 
 
 def is_registered(name: str) -> bool:
-    try:
-        return _canon(name) in _REGISTRY
-    except ValueError:
-        return False
+    return _REGISTRY.is_registered(name)
 
 
 def get(name: str) -> Policy:
@@ -71,14 +58,9 @@ def get(name: str) -> Policy:
     Raises KeyError listing the available policies — the same error
     surface the legacy ``heuristics.get`` had.
     """
-    try:
-        return _REGISTRY[_canon(name)]
-    except KeyError:
-        raise KeyError(
-            f"unknown policy {name!r}; choose from {list_policies()}"
-        ) from None
+    return _REGISTRY.get(name)
 
 
 def list_policies() -> List[str]:
     """Sorted names of every registered policy."""
-    return sorted(_REGISTRY)
+    return _REGISTRY.names()

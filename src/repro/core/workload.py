@@ -1,45 +1,66 @@
-"""Workload trace synthesis: Poisson arrivals, Eq. 4 deadlines."""
+"""Workload trace synthesis — thin wrappers over the scenario API.
+
+The actual synthesis logic lives in :mod:`repro.scenarios`: a composable
+``Scenario`` (arrival process × type mix × deadline model × runtime model)
+replaces the hard-coded Poisson recipe that used to live here.
+:func:`poisson_trace` remains the stable convenience entry point and is
+byte-identical to its pre-scenario implementation (pinned by
+``tests/test_scenario_regression.py``); :func:`trace_batch` is a
+deprecation shim over the CRN-capable ``trace_stack``.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import warnings
 
-from repro.core import eet as eet_mod
-from repro.core import equations
+import jax
+
 from repro.core.types import Trace
 
 
 def poisson_trace(key, n_tasks, arrival_rate, eet, *, n_task_types=None,
                   cv_run=0.1, type_probs=None) -> Trace:
-    """Synthesize one workload trace.
+    """Synthesize one workload trace under the paper's default scenario.
 
     Inter-arrival ~ Exp(rate) (Poisson process, Sec. VI-A); task types are
     drawn uniformly (or per ``type_probs``); deadlines follow Eq. 4; actual
     runtimes are Gamma-sampled around the EET entries.
+
+    Equivalent to ``scenarios.default_scenario().sample_trace(...)`` (with
+    ``type_probs`` swapping in a ``WeightedMix``); use a
+    :class:`repro.scenarios.Scenario` directly for anything richer.
     """
-    eet = jnp.asarray(eet)
-    if n_task_types is None:
-        n_task_types = eet.shape[0]
-    k_arr, k_type, k_exec = jax.random.split(key, 3)
+    from repro import scenarios
 
-    gaps = jax.random.exponential(k_arr, (n_tasks,)) / arrival_rate
-    arrival = jnp.cumsum(gaps).astype(jnp.float32)
-
-    if type_probs is None:
-        task_type = jax.random.randint(k_type, (n_tasks,), 0, n_task_types)
-    else:
-        task_type = jax.random.choice(
-            k_type, n_task_types, (n_tasks,), p=jnp.asarray(type_probs)
+    scenario = scenarios.DEFAULT
+    if type_probs is not None:
+        scenario = scenarios.replace(
+            scenario, mix=scenarios.mix_from_probs(tuple(type_probs))
         )
-    task_type = task_type.astype(jnp.int32)
-
-    deadline = equations.deadlines(arrival, task_type, eet)
-    exec_actual = eet_mod.sample_actual_exec(k_exec, eet, task_type, cv_run)
-    return Trace(arrival, task_type, deadline, exec_actual)
+    return scenario.sample_trace(key, n_tasks, arrival_rate, eet,
+                                 cv_run=cv_run, n_task_types=n_task_types)
 
 
 def trace_batch(key, n_traces, n_tasks, arrival_rate, eet, **kw):
-    """A batch of i.i.d. traces (stacked leading dim) for vmapped simulation."""
-    keys = jax.random.split(key, n_traces)
-    make = lambda k: poisson_trace(k, n_tasks, arrival_rate, eet, **kw)
-    return jax.vmap(make)(keys)
+    """Deprecated: a batch of i.i.d. traces (stacked leading dim).
+
+    .. deprecated::
+        ``trace_batch`` predates the CRN trace grids of
+        :func:`repro.datapipe.synthetic.trace_stack` and survives only as a
+        delegate: ``trace_batch(key, K, ...)`` is exactly
+        ``trace_stack(key, rates=(rate,), reps=K, ...)`` with the
+        single-rate axis squeezed (same key-split order, same bits). Call
+        ``trace_stack`` (or ``Scenario.stack``) directly.
+    """
+    warnings.warn(
+        "workload.trace_batch is deprecated; use "
+        "repro.datapipe.synthetic.trace_stack (rates=(rate,), reps=n_traces)"
+        " or Scenario.stack instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.datapipe import synthetic
+
+    stacked = synthetic.trace_stack(
+        key, (arrival_rate,), n_traces, n_tasks, eet, **kw
+    )
+    return jax.tree.map(lambda x: x[0], stacked)

@@ -7,8 +7,11 @@ Two producers live here:
     reproducible across restarts — checkpoint/restart tests rely on this).
   * ``trace_stack`` — batched scheduling-workload synthesis for the
     Monte-Carlo sweep subsystem (`repro.experiments`): a full
-    (arrival-rate x replicate) grid of Poisson traces under one PRNG key,
-    shaped for a single vmapped simulation.
+    (arrival-rate x replicate) grid of traces under one PRNG key, shaped
+    for a single vmapped simulation. Synthesis is delegated to a
+    :class:`repro.scenarios.Scenario` (default: the paper's Poisson
+    workload), so the same CRN grid machinery serves bursty, diurnal,
+    flash-crowd, drifting-mix, ... workloads unchanged.
 """
 from __future__ import annotations
 
@@ -21,26 +24,32 @@ import numpy as np
 
 
 def trace_stack(key, rates, reps, n_tasks, eet, *, cv_run: float = 0.1,
-                type_probs=None):
+                type_probs=None, scenario=None, n_task_types=None):
     """Synthesize the full sweep grid of workload traces under one PRNG key.
 
     Replicate ``k`` uses the same subkey at every arrival rate (common
-    random numbers): the exponential inter-arrival draws, task types, and
-    actual-runtime draws are shared across rates, with only the arrival
-    time scale changing. This couples the sweep's rate axis the way the
-    paper couples its heuristic axis (every heuristic sees identical
-    traces), which sharpens rate-to-rate comparisons at a given replicate
-    count.
+    random numbers): the task-type and actual-runtime draws are shared
+    across rates, with only the arrival process seeing the rate. This
+    couples the sweep's rate axis the way the paper couples its heuristic
+    axis (every heuristic sees identical traces), which sharpens
+    rate-to-rate comparisons at a given replicate count — and it holds for
+    every scenario, because the rate only ever enters the arrival
+    component.
 
     Args:
       key: a single ``jax.random.PRNGKey``; the only seed material used.
-      rates: sequence of R arrival rates (tasks/sec, Poisson).
+      rates: sequence of R nominal arrival rates (tasks/sec).
       reps: K i.i.d. replicates per rate.
       n_tasks: N tasks per trace.
-      eet: (S, M) expected-execution-time matrix (seconds); deadlines follow
-        Eq. 4 of the paper.
-      cv_run: coefficient of variation of the Gamma-sampled actual runtimes.
-      type_probs: optional (S,) task-type mix; uniform when omitted.
+      eet: (S, M) expected-execution-time matrix (seconds).
+      cv_run: sweep-level coefficient of variation of actual runtimes
+        (runtime models with their own dispersion parameters ignore it).
+      type_probs: optional (S,) task-type mix shorthand; swaps the
+        scenario's mix for a ``WeightedMix`` when given.
+      scenario: a :class:`repro.scenarios.Scenario`, a registered scenario
+        name, or ``None`` for the paper's Poisson default.
+      n_task_types: optional override of the type count (default: the
+        EET's row count S).
 
     Returns:
       A ``repro.core.types.Trace`` whose leaves carry leading dims (R, K):
@@ -48,18 +57,18 @@ def trace_stack(key, rates, reps, n_tasks, eet, *, cv_run: float = 0.1,
       (R, K, N, M). Flatten the first two dims for one big vmap, or index
       ``[r, k]`` for a single trace.
     """
-    from repro.core import workload
+    from repro import scenarios as scenarios_mod
 
-    rep_keys = jax.random.split(key, reps)                    # (K, 2)
-    rates_arr = jnp.asarray(rates, jnp.float32)               # (R,)
-
-    def one(rate, k):
-        return workload.poisson_trace(
-            k, n_tasks, rate, eet, cv_run=cv_run, type_probs=type_probs
+    if scenario is None:
+        scenario = scenarios_mod.DEFAULT
+    elif isinstance(scenario, str):
+        scenario = scenarios_mod.get(scenario)
+    if type_probs is not None:
+        scenario = scenarios_mod.replace(
+            scenario, mix=scenarios_mod.mix_from_probs(tuple(type_probs))
         )
-
-    over_reps = jax.vmap(one, in_axes=(None, 0))              # (K, ...)
-    return jax.vmap(over_reps, in_axes=(0, None))(rates_arr, rep_keys)
+    return scenario.stack(key, rates, reps, n_tasks, eet, cv_run=cv_run,
+                          n_task_types=n_task_types)
 
 
 class SyntheticLM:

@@ -5,9 +5,17 @@ traces per arrival rate, simulated under every mapping heuristic. This
 package turns that into one-dispatch batched computations:
 
   spec     — :class:`SweepSpec`, the full experiment configuration
+             (system fleet + workload scenario + grid), JSON round-trip
+             via ``to_json_dict``/``from_json_dict``
   runner   — :func:`run_sweep` / :func:`simulate_sweep`, one jit per sweep
   results  — :class:`SweepResult`, mean/CI reductions + CSV/JSON artifacts
   sweep    — the CLI: ``python -m repro.experiments.sweep``
+
+Workload synthesis is delegated to the composable scenario API
+(:mod:`repro.scenarios`): ``SweepSpec.scenario`` names any registered
+``Scenario`` (arrival process x type mix x deadline model x runtime model
+[x fleet]), all fixed-shape JAX, so every scenario runs inside the same
+single-jit vmapped sweep.
 
 `repro.core.api.run_study`, `benchmarks/`, and `examples/` are thin
 consumers of this layer.

@@ -1,11 +1,12 @@
 """Batched Monte-Carlo sweep execution.
 
 One sweep = one trace stack + one jitted computation. The trace stack is
-the full (rates x reps) grid from :func:`repro.datapipe.synthetic.trace_stack`
-(every heuristic sees identical traces — the paper's paired-comparison
-design). The jitted computation contains one vmapped
-``lax.while_loop`` simulator per heuristic over the flattened grid, so the
-whole experiment is a single XLA program and a single dispatch:
+the full (rates x reps) grid from ``Scenario.stack`` (every heuristic sees
+identical traces — the paper's paired-comparison design; the scenario
+resolves through the :mod:`repro.scenarios` registry). The jitted
+computation contains one vmapped ``lax.while_loop`` simulator per
+heuristic over the flattened grid, so the whole experiment is a single XLA
+program and a single dispatch:
 
     Metrics leaves come back with shape (H, R, K, ...) for H heuristics,
     R rates, K replicates.
@@ -17,9 +18,16 @@ import jax.numpy as jnp
 
 from repro.core import engine, policy
 from repro.core.types import Metrics, SystemSpec, Trace
-from repro.datapipe import synthetic
 from repro.experiments.results import SweepResult
 from repro.experiments.spec import SweepSpec
+
+# Trace-time observability: one (heuristic, label) entry is appended each
+# time a per-heuristic simulator body is *traced* (not dispatched). Tests
+# read this to pin the single-jit contract — every (policy, scenario) pair
+# of a sweep must trace exactly once inside one XLA program. Bounded to
+# the most recent entries so long-lived processes don't accumulate.
+_TRACE_LOG: list = []
+_TRACE_LOG_MAX = 256
 
 
 def _select_fns(names, use_pallas: bool):
@@ -37,16 +45,18 @@ def _select_fns(names, use_pallas: bool):
 
 def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
                    *, use_pallas_phase1: bool = False,
-                   max_steps=None) -> Metrics:
+                   max_steps=None, trace_label: str = "") -> Metrics:
     """Simulate a flat batch of traces under every heuristic, in one jit.
 
     Args:
       traces: a Trace whose leaves have one flat leading batch dim B
-        (e.g. the flattened (R*K) stack from ``trace_stack``).
+        (e.g. the flattened (R*K) stack from ``Scenario.stack``).
       system: the SystemSpec to simulate.
       heuristic_names: sequence of H heuristic names.
       use_pallas_phase1: route ELARE Phase-I through the Pallas kernel.
       max_steps: optional per-trace event cap (``None`` = engine default).
+      trace_label: annotation recorded next to each heuristic in the
+        module's trace log (``run_sweep`` passes the scenario name).
 
     Returns:
       Metrics with leaves of shape (H, B, ...): axis 0 follows
@@ -64,25 +74,33 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
 
     @jax.jit
     def run_all(tr):
-        per_h = [jax.vmap(sim)(tr) for sim in sims]
+        per_h = []
+        for name, sim in zip(heuristic_names, sims):
+            _TRACE_LOG.append((name, trace_label))  # trace-time only
+            per_h.append(jax.vmap(sim)(tr))
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_h)
 
-    return run_all(traces)
+    out = run_all(traces)
+    del _TRACE_LOG[:-_TRACE_LOG_MAX]
+    return out
 
 
 def run_sweep(spec: SweepSpec) -> SweepResult:
     """Execute a full batched Monte-Carlo sweep.
 
-    Builds the (rates x reps) trace stack under ``PRNGKey(spec.seed)``,
+    Resolves the spec's scenario and system through their registries,
+    builds the (rates x reps) trace stack under ``PRNGKey(spec.seed)``,
     simulates it under every heuristic in one jitted batch, and wraps the
-    raw per-trace Metrics in a :class:`SweepResult` with mean/CI reductions.
+    raw per-trace Metrics in a :class:`SweepResult` with mean/CI
+    reductions.
 
     Cost scales as H * R * K single-trace simulations of N tasks each;
     the paper-scale grid (5 x 7 x 30 x 2000) runs in one dispatch.
     """
     system = spec.resolve_system()
+    scenario = spec.resolve_scenario()
     key = jax.random.PRNGKey(spec.seed)
-    stacked = synthetic.trace_stack(
+    stacked = scenario.stack(
         key, spec.rates, spec.reps, spec.n_tasks, system.eet,
         cv_run=spec.cv_run,
     )
@@ -90,9 +108,12 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
     flat = jax.tree.map(
         lambda x: x.reshape((R * K,) + x.shape[2:]), stacked
     )
+    label = (spec.scenario if isinstance(spec.scenario, str)
+             else "<custom scenario>")
     metrics = simulate_sweep(
         flat, system, spec.heuristics,
         use_pallas_phase1=spec.use_pallas_phase1, max_steps=spec.max_steps,
+        trace_label=label,
     )
     H = len(spec.heuristics)
     metrics = jax.tree.map(

@@ -1,14 +1,23 @@
 """Sweep configuration: what to simulate, over which grid, with which engine.
 
 A :class:`SweepSpec` fully determines a batched Monte-Carlo experiment —
-(system, arrival rates, replicates, heuristics, seed) — so a sweep is
-reproducible from its spec alone and the spec can be serialized next to the
-result artifacts.
+(system, scenario, arrival rates, replicates, heuristics, seed) — so a
+sweep is reproducible from its spec alone and the spec can be serialized
+next to the result artifacts (and, via :meth:`SweepSpec.from_json_dict`,
+re-run *from* them).
+
+Both open-ended axes resolve through registries: heuristic names through
+:mod:`repro.core.policy`, scenario names through :mod:`repro.scenarios`,
+and system names through the fleet-builder registry
+(:func:`repro.scenarios.list_fleets`) — ``"paper"``/``"aws"`` are just the
+two built-in fleets, not special-cased literals.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Union
+
+import numpy as np
 
 from repro.core.types import SystemSpec
 
@@ -50,10 +59,18 @@ class SweepSpec:
     """A batched Monte-Carlo sweep over (rates x replicates x heuristics).
 
     Attributes:
-      system: ``"paper"`` (the Sec. VI-A synthetic 4x4 system), ``"aws"``
-        (the t2.xlarge/g3s.xlarge FaceNet/DeepSpeech scenario), or a custom
-        :class:`~repro.core.types.SystemSpec`.
-      rates: R Poisson arrival rates (tasks/sec).
+      system: which HEC system to simulate — a registered fleet-builder
+        name (built-ins: ``"paper"``, ``"aws"``, ``"cvb"``, ``"range"``;
+        see :func:`repro.scenarios.list_fleets`), a custom
+        :class:`~repro.core.types.SystemSpec`, or ``None`` to defer to the
+        scenario's own fleet (falling back to ``"paper"`` for scenarios
+        without one).
+      scenario: the workload recipe — a registered scenario name
+        (built-ins: ``"poisson"``, ``"bursty"``, ``"diurnal"``,
+        ``"flash-crowd"``, ...; see
+        :func:`repro.scenarios.list_scenarios`) or a custom
+        :class:`repro.scenarios.Scenario`.
+      rates: R nominal arrival rates (tasks/sec).
       reps: K i.i.d. workload traces per rate (the paper uses 30).
       n_tasks: N tasks per trace (the paper uses 2000).
       heuristics: mapping-policy names resolved through the
@@ -61,7 +78,8 @@ class SweepSpec:
         caller has ``policy.register``-ed.
       seed: PRNG seed; the sweep consumes exactly one
         ``jax.random.PRNGKey(seed)``.
-      cv_run: coefficient of variation of actual runtimes around the EET.
+      cv_run: coefficient of variation of actual runtimes around the EET
+        (scenario runtime models carrying their own dispersion ignore it).
       queue_size: per-machine local-queue slots; ``None`` keeps the
         system's own value.
       fairness_factor: Eq. 3's ``f``; ``None`` keeps the system's value.
@@ -73,7 +91,7 @@ class SweepSpec:
         for tests); ``None`` uses the engine default of ``8 * N + 64``.
     """
 
-    system: Union[str, SystemSpec] = "paper"
+    system: Union[str, SystemSpec, None] = None
     rates: tuple[float, ...] = DEFAULT_RATES
     reps: int = 8
     n_tasks: int = 400
@@ -84,6 +102,7 @@ class SweepSpec:
     fairness_factor: Optional[float] = None
     use_pallas_phase1: bool = False
     max_steps: Optional[int] = None
+    scenario: Union[str, "object"] = "poisson"  # name or scenarios.Scenario
 
     def __post_init__(self):
         object.__setattr__(self, "rates",
@@ -98,6 +117,7 @@ class SweepSpec:
             raise ValueError("rates must be non-empty")
         if not self.heuristics:
             raise ValueError("heuristics must be non-empty")
+        from repro import scenarios
         from repro.core import policy
 
         unknown = [h for h in self.heuristics if not policy.is_registered(h)]
@@ -107,26 +127,55 @@ class SweepSpec:
                 f"choose from {policy.list_policies()} "
                 f"(or policy.register(...) your own)"
             )
+        if isinstance(self.scenario, str):
+            if not scenarios.is_registered(self.scenario):
+                raise ValueError(
+                    f"unknown scenario {self.scenario!r}; "
+                    f"choose from {scenarios.list_scenarios()} "
+                    f"(or scenarios.register(...) your own)"
+                )
+        elif not isinstance(self.scenario, scenarios.Scenario):
+            raise ValueError(
+                f"scenario must be a registered name or a "
+                f"scenarios.Scenario, got {self.scenario!r}"
+            )
 
     @property
     def n_simulations(self) -> int:
         """Total single-trace simulations the sweep performs."""
         return len(self.heuristics) * len(self.rates) * self.reps
 
+    def resolve_scenario(self):
+        """Materialize the :class:`repro.scenarios.Scenario`."""
+        from repro import scenarios
+
+        if isinstance(self.scenario, scenarios.Scenario):
+            return self.scenario
+        return scenarios.get(str(self.scenario))
+
     def resolve_system(self) -> SystemSpec:
-        """Materialize the SystemSpec, applying queue/fairness overrides."""
+        """Materialize the SystemSpec, applying queue/fairness overrides.
+
+        Precedence: an explicit ``SystemSpec`` or fleet name always wins;
+        ``system=None`` uses the scenario's own fleet builder, or the
+        paper system when the scenario carries none.
+        """
+        from repro import scenarios
+
         if isinstance(self.system, SystemSpec):
             sys_spec = self.system
+        elif self.system is None:
+            fleet = self.resolve_scenario().fleet
+            if fleet is None:
+                fleet = scenarios.get_fleet("paper")
+            sys_spec = fleet.build()
         else:
-            from repro.core import api  # local import: api consumes us too
-
-            builders = {"paper": api.paper_system, "aws": api.aws_system}
             try:
-                sys_spec = builders[str(self.system).lower()]()
+                sys_spec = scenarios.get_fleet(str(self.system)).build()
             except KeyError:
                 raise ValueError(
-                    f"unknown system {self.system!r}; "
-                    f"choose from {sorted(builders)} or pass a SystemSpec"
+                    f"unknown system {self.system!r}; choose from "
+                    f"{scenarios.list_fleets()} or pass a SystemSpec"
                 ) from None
         overrides = {}
         if self.queue_size is not None:
@@ -138,7 +187,12 @@ class SweepSpec:
         return sys_spec
 
     def to_json_dict(self) -> dict:
-        """JSON-serializable form (custom SystemSpecs record their shape)."""
+        """JSON-serializable form; inverse of :meth:`from_json_dict`.
+
+        Custom SystemSpecs record their full shape; a scenario serializes
+        as its registry name when given by name, else as the structured
+        component form from ``Scenario.to_json_dict``.
+        """
         if isinstance(self.system, SystemSpec):
             system = {
                 "eet": [[float(x) for x in row] for row in self.system.eet],
@@ -149,8 +203,11 @@ class SweepSpec:
             }
         else:
             system = self.system
+        scenario = (self.scenario if isinstance(self.scenario, str)
+                    else self.scenario.to_json_dict())
         return {
             "system": system,
+            "scenario": scenario,
             "rates": list(self.rates),
             "reps": self.reps,
             "n_tasks": self.n_tasks,
@@ -162,6 +219,41 @@ class SweepSpec:
             "use_pallas_phase1": self.use_pallas_phase1,
             "max_steps": self.max_steps,
         }
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "SweepSpec":
+        """Rebuild a spec from :meth:`to_json_dict` output — i.e. from the
+        ``"spec"`` block of a saved ``sweep.json`` artifact, so any sweep
+        can be re-run from its own artifact."""
+        from repro import scenarios
+
+        d = dict(d)
+        system = d.get("system")
+        if isinstance(system, dict):
+            system = SystemSpec(
+                eet=np.asarray(system["eet"], np.float32),
+                p_dyn=np.asarray(system["p_dyn"], np.float32),
+                p_idle=np.asarray(system["p_idle"], np.float32),
+                queue_size=int(system.get("queue_size", 2)),
+                fairness_factor=float(system.get("fairness_factor", 1.0)),
+            )
+        scenario = d.get("scenario", "poisson")
+        if isinstance(scenario, dict):
+            scenario = scenarios.Scenario.from_json_dict(scenario)
+        return cls(
+            system=system,
+            scenario=scenario,
+            rates=tuple(d["rates"]),
+            reps=int(d["reps"]),
+            n_tasks=int(d["n_tasks"]),
+            heuristics=tuple(d["heuristics"]),
+            seed=int(d["seed"]),
+            cv_run=float(d["cv_run"]),
+            queue_size=d.get("queue_size"),
+            fairness_factor=d.get("fairness_factor"),
+            use_pallas_phase1=bool(d.get("use_pallas_phase1", False)),
+            max_steps=d.get("max_steps"),
+        )
 
 
 def replace(spec: SweepSpec, **kwargs) -> SweepSpec:

@@ -1,8 +1,9 @@
 """One-command batched Monte-Carlo sweep CLI.
 
     PYTHONPATH=src python -m repro.experiments.sweep \
-        --system paper --rates 2,3,4,6,8 --reps 8 --tasks 400 \
-        --heuristics MM,MSD,MMU,ELARE,FELARE --out artifacts/sweep
+        --system paper --scenario bursty --rates 2,3,4,6,8 --reps 8 \
+        --tasks 400 --heuristics MM,MSD,MMU,ELARE,FELARE \
+        --out artifacts/sweep
 
 Rates accept either a comma list (``2,3,4.5``) or an inclusive
 ``start:stop:step`` range (``30:90:10``). The sweep runs all
@@ -10,10 +11,12 @@ Rates accept either a comma list (``2,3,4.5``) or an inclusive
 per-cell summary table, and writes ``sweep.csv`` + ``sweep.json`` under
 ``--out``.
 
-``--heuristics`` accepts any name registered in the
-:mod:`repro.core.policy` registry (``--list`` prints them with their
-nominator x key x drop composition); unknown names fail fast with the
-available-policy list instead of deep inside jit tracing.
+Every open-ended axis resolves through a registry and fails fast on
+unknown names instead of deep inside jit tracing: ``--heuristics`` through
+:mod:`repro.core.policy` (``--list`` prints the nominator x key x drop
+compositions), ``--scenario`` through :mod:`repro.scenarios`
+(``--list-scenarios`` prints the arrival x mix x deadline x runtime x
+fleet compositions), and ``--system`` through the fleet-builder registry.
 """
 from __future__ import annotations
 
@@ -21,6 +24,7 @@ import argparse
 import sys
 import time
 
+from repro import scenarios
 from repro.core import policy
 from repro.experiments.results import SweepResult
 from repro.experiments.runner import run_sweep
@@ -39,8 +43,14 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
         description="Batched Monte-Carlo sweep over "
                     "(arrival rates x replicates x heuristics).",
     )
-    ap.add_argument("--system", default="paper", choices=["paper", "aws"],
-                    help="which HEC system to simulate (default: paper)")
+    ap.add_argument("--system", default=None,
+                    help="which HEC system to simulate: a registered fleet"
+                         " builder (see --list-scenarios for the fleet "
+                         "list). Default: the scenario's own fleet, or "
+                         "'paper'.")
+    ap.add_argument("--scenario", default="poisson",
+                    help="workload scenario name (default: poisson; see "
+                         "--list-scenarios)")
     ap.add_argument("--rates", default=None,
                     help="comma list '2,3,4' or inclusive range "
                          "'start:stop:step' (default: "
@@ -56,6 +66,9 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
                          + "; see --list)")
     ap.add_argument("--list", action="store_true",
                     help="list the registered scheduling policies and exit")
+    ap.add_argument("--list-scenarios", action="store_true",
+                    help="list the registered workload scenarios and fleet "
+                         "builders, then exit")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cv-run", type=float, default=0.1,
                     help="CV of actual runtimes around the EET (default 0.1)")
@@ -72,11 +85,14 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
     if args.list:
         print_policy_list()
         raise SystemExit(0)
+    if args.list_scenarios:
+        print_scenario_list()
+        raise SystemExit(0)
 
     heuristics = tuple(
         h.strip() for h in args.heuristics.split(",") if h.strip()
     )
-    # Fail fast on unknown names with the available-policy list, instead of
+    # Fail fast on unknown names with the available lists, instead of
     # erroring deep inside jit tracing.
     unknown = [h for h in heuristics if not policy.is_registered(h)]
     if unknown:
@@ -85,10 +101,23 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
             + ", ".join(policy.list_policies())
             + " (run with --list for details)"
         )
+    if not scenarios.is_registered(args.scenario):
+        ap.error(
+            f"unknown scenario {args.scenario!r}; registered scenarios: "
+            + ", ".join(scenarios.list_scenarios())
+            + " (run with --list-scenarios for details)"
+        )
+    if args.system is not None and not scenarios.is_registered_fleet(
+            args.system):
+        ap.error(
+            f"unknown system {args.system!r}; registered fleets: "
+            + ", ".join(scenarios.list_fleets())
+        )
     try:
         rates = parse_rates(args.rates) if args.rates else DEFAULT_RATES
         spec = SweepSpec(
             system=args.system,
+            scenario=args.scenario,
             rates=rates,
             reps=args.reps,
             n_tasks=args.tasks,
@@ -119,6 +148,20 @@ def print_policy_list(file=None) -> None:
             print(f"{name:10s} (opaque custom policy)", file=file)
 
 
+def print_scenario_list(file=None) -> None:
+    """One line per registered scenario: name + component composition,
+    then the registered fleet builders."""
+    file = file if file is not None else sys.stdout
+    print(f"{'scenario':18s} {'arrivals':12s} {'mix':10s} "
+          f"{'deadline':10s} {'runtime':11s} {'fleet':8s}", file=file)
+    for name in scenarios.list_scenarios():
+        d = scenarios.get(name).describe()
+        print(f"{name:18s} {d['arrivals']:12s} {d['mix']:10s} "
+              f"{d['deadline']:10s} {d['runtime']:11s} {d['fleet']:8s}",
+              file=file)
+    print(f"\nfleets: {', '.join(scenarios.list_fleets())}", file=file)
+
+
 def print_summary(result: SweepResult, file=None) -> None:
     """Human-readable per-cell table (one line per heuristic x rate)."""
     file = file if file is not None else sys.stdout
@@ -138,9 +181,14 @@ def print_summary(result: SweepResult, file=None) -> None:
 def main(argv=None) -> SweepResult:
     spec, args = build_spec(argv)
     n = spec.n_simulations
+    system_label = args.system or (
+        "scenario fleet" if spec.resolve_scenario().fleet is not None
+        else "paper"
+    )
     print(f"sweep: {len(spec.heuristics)} heuristics x "
           f"{len(spec.rates)} rates x {spec.reps} reps "
-          f"({n} traces of {spec.n_tasks} tasks) on system={args.system}",
+          f"({n} traces of {spec.n_tasks} tasks) "
+          f"on system={system_label} scenario={args.scenario}",
           flush=True)
     t0 = time.perf_counter()
     result = run_sweep(spec)

@@ -1,0 +1,142 @@
+"""Composable workload-scenario API.
+
+The paper evaluates under exactly one workload shape — stationary Poisson
+arrivals, uniform types, Eq. 4 deadlines, Gamma runtimes — on two fixed
+systems. This package turns each of those axes into a swappable component
+behind one typed surface, mirroring the policy algebra:
+
+    Scenario = ArrivalProcess × TypeMix × DeadlineModel × RuntimeModel
+               [× FleetBuilder]
+
+Every component is fixed-shape JAX, so any scenario drops into the
+single-jit vmapped sweep unchanged. Built-in scenarios are registered by
+name in a mutable, case-insensitive registry consumed by ``SweepSpec``,
+``run_sweep``, ``trace_stack``, and the sweep CLI (``--scenario`` /
+``--list-scenarios``); fleet builders get a parallel registry behind
+``SweepSpec.system``. See ``docs/scenarios.md`` for the component table.
+"""
+from __future__ import annotations
+
+from repro.scenarios.arrivals import (
+    DiurnalArrivals,
+    FlashCrowdArrivals,
+    MMPPArrivals,
+    PoissonArrivals,
+)
+from repro.scenarios.base import (
+    ArrivalProcess,
+    DeadlineModel,
+    RuntimeModel,
+    Scenario,
+    TypeMix,
+    component,
+    component_from_json,
+    component_to_json,
+    replace,
+)
+from repro.scenarios.deadlines import PaperDeadlines, ScaledDeadlines
+from repro.scenarios.fleets import (
+    AwsFleet,
+    CvbFleet,
+    FleetBuilder,
+    PaperFleet,
+    RangeFleet,
+    get_fleet,
+    is_registered_fleet,
+    list_fleets,
+    register_fleet,
+    unregister_fleet,
+)
+from repro.scenarios.mixes import DriftMix, UniformMix, WeightedMix, mix_from_probs
+from repro.scenarios.registry import (
+    get,
+    is_registered,
+    list_scenarios,
+    register,
+    unregister,
+)
+from repro.scenarios.runtimes import GammaRuntimes, LognormalRuntimes
+
+__all__ = [
+    "ArrivalProcess",
+    "AwsFleet",
+    "CvbFleet",
+    "DEFAULT",
+    "DeadlineModel",
+    "DiurnalArrivals",
+    "DriftMix",
+    "FlashCrowdArrivals",
+    "FleetBuilder",
+    "GammaRuntimes",
+    "LognormalRuntimes",
+    "MMPPArrivals",
+    "PaperDeadlines",
+    "PaperFleet",
+    "PoissonArrivals",
+    "RangeFleet",
+    "RuntimeModel",
+    "ScaledDeadlines",
+    "Scenario",
+    "TypeMix",
+    "UniformMix",
+    "WeightedMix",
+    "component",
+    "component_from_json",
+    "component_to_json",
+    "default_scenario",
+    "get",
+    "get_fleet",
+    "is_registered",
+    "is_registered_fleet",
+    "list_fleets",
+    "list_scenarios",
+    "mix_from_probs",
+    "register",
+    "register_fleet",
+    "replace",
+    "unregister",
+    "unregister_fleet",
+]
+
+
+# --------------------------------------------------------------------------
+# Built-in scenarios (Sec. VI-A default + the stress axes related work
+# highlights: burstiness, non-stationarity, mix drift, runtime tails,
+# deadline tightness, fleet heterogeneity).
+# --------------------------------------------------------------------------
+
+#: The paper's workload, byte-identical to the pre-scenario synthesis path.
+DEFAULT = Scenario(PoissonArrivals(), UniformMix(), PaperDeadlines(),
+                   GammaRuntimes())
+
+# A 4-type drift (vision-heavy -> speech-heavy) for the paper-sized fleets.
+_DRIFT_4 = DriftMix(start=(0.4, 0.3, 0.2, 0.1), end=(0.1, 0.2, 0.3, 0.4))
+
+for _name, _scn in [
+    ("poisson", DEFAULT),
+    ("bursty", Scenario(MMPPArrivals(), UniformMix(), PaperDeadlines(),
+                        GammaRuntimes())),
+    ("diurnal", Scenario(DiurnalArrivals(), UniformMix(), PaperDeadlines(),
+                         GammaRuntimes())),
+    ("flash-crowd", Scenario(FlashCrowdArrivals(), UniformMix(),
+                             PaperDeadlines(), GammaRuntimes())),
+    ("heavy-tail", Scenario(PoissonArrivals(), UniformMix(),
+                            PaperDeadlines(), LognormalRuntimes())),
+    ("drift", Scenario(PoissonArrivals(), _DRIFT_4, PaperDeadlines(),
+                       GammaRuntimes())),
+    ("tight-deadlines", Scenario(PoissonArrivals(), UniformMix(),
+                                 ScaledDeadlines(0.75), GammaRuntimes())),
+    ("bursty-heavy-tail", Scenario(MMPPArrivals(), UniformMix(),
+                                   PaperDeadlines(), LognormalRuntimes())),
+    ("wide-fleet", Scenario(PoissonArrivals(), UniformMix(),
+                            PaperDeadlines(), GammaRuntimes(),
+                            fleet=CvbFleet(n_task_types=8, n_machines=6))),
+]:
+    register(_name, _scn)
+del _name, _scn
+
+
+def default_scenario() -> Scenario:
+    """The paper's Poisson workload — what ``scenario='poisson'`` resolves
+    to, and what the legacy ``poisson_trace``/``trace_stack`` wrap."""
+    return DEFAULT

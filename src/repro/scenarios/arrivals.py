@@ -1,0 +1,182 @@
+"""Arrival processes: when tasks hit the edge system.
+
+All processes share one contract: ``sample(key, n_tasks, rate)`` returns
+``(N,)`` sorted, non-negative float32 arrival times whose *nominal* rate is
+``rate`` tasks/sec, computed with fixed-shape JAX only. Non-stationary
+processes are built by inverse-transform: draw a unit-rate Poisson stream
+``Γ_k = cumsum(Exp(1))`` once, then map it through the inverse of the
+integrated rate ``Λ(t) = ∫₀ᵗ λ(s) ds`` — closed-form where possible,
+a fixed number of Newton steps otherwise. No rejection, no data-dependent
+shapes, so every process runs inside the single-jit vmapped sweep.
+
+Time-scale convention: non-stationary structure (burst dwell, diurnal
+period, spike window) is parameterized as *fractions of the nominal
+horizon* ``n_tasks / rate``, so a scenario means the same thing at every
+arrival rate and the CRN trace grid stays comparable across the rate axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.scenarios.base import component
+
+_NEWTON_ITERS = 20  # fixed-count inversion of the integrated rate
+
+
+@component("arrivals")
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals:
+    """Stationary Poisson arrivals (the paper's Sec. VI-A workload)."""
+
+    kind: ClassVar[str] = "poisson"
+
+    def sample(self, key, n_tasks: int, rate) -> jnp.ndarray:
+        gaps = jax.random.exponential(key, (n_tasks,)) / rate
+        return jnp.cumsum(gaps).astype(jnp.float32)
+
+
+@component("arrivals")
+@dataclasses.dataclass(frozen=True)
+class MMPPArrivals:
+    """Bursty 2-phase Markov-modulated Poisson process (on–off).
+
+    A sticky two-state Markov chain over arrivals switches between a quiet
+    phase and a burst phase whose rate is ``rate_ratio``× higher; phase
+    rates are normalized so the long-run mean arrival rate equals the
+    nominal ``rate``. ``p_stay`` controls dwell (expected burst run length
+    ``1 / (1 - p_stay)`` arrivals), ``burst_frac`` the stationary fraction
+    of arrivals emitted in the burst phase. Inter-arrival CV² exceeds the
+    Poisson process's 1 — the burstiness the property tests pin.
+    """
+
+    kind: ClassVar[str] = "mmpp"
+    rate_ratio: float = 8.0
+    p_stay: float = 0.95
+    burst_frac: float = 0.3
+
+    def __post_init__(self):
+        if not self.rate_ratio > 1.0:
+            raise ValueError("rate_ratio must be > 1 (burst faster than quiet)")
+        if not 0.0 < self.burst_frac < 1.0:
+            raise ValueError("burst_frac must be in (0, 1)")
+        if not 0.0 <= self.p_stay < 1.0:
+            raise ValueError("p_stay must be in [0, 1)")
+        # Joint feasibility: detailed balance fixes the quiet-phase exit
+        # probability at (1 - p_stay) * burst_frac / (1 - burst_frac); if
+        # that exceeds 1 the chain cannot realize the assumed stationary
+        # distribution and the nominal-rate normalization silently breaks.
+        q_qb = (1.0 - self.p_stay) * self.burst_frac / (1.0 - self.burst_frac)
+        if q_qb > 1.0:
+            raise ValueError(
+                f"infeasible MMPP: quiet-phase exit probability "
+                f"(1 - p_stay) * burst_frac / (1 - burst_frac) = "
+                f"{q_qb:.3f} > 1; increase p_stay or lower burst_frac"
+            )
+
+    def sample(self, key, n_tasks: int, rate) -> jnp.ndarray:
+        k_exp, k_switch, k_init = jax.random.split(key, 3)
+        e = jax.random.exponential(k_exp, (n_tasks,))
+        u = jax.random.uniform(k_switch, (n_tasks,))
+        pi_b = self.burst_frac
+        pi_q = 1.0 - pi_b
+        # Exit probabilities with the stationary distribution (pi_q, pi_b):
+        # detailed balance pi_b * q_bq == pi_q * q_qb.
+        q_bq = 1.0 - self.p_stay
+        q_qb = q_bq * pi_b / pi_q
+        init_burst = jax.random.uniform(k_init, ()) < pi_b
+
+        def step(burst, u_k):
+            switch = jnp.where(burst, u_k < q_bq, u_k < q_qb)
+            burst = jnp.logical_xor(burst, switch)
+            return burst, burst
+
+        _, burst = jax.lax.scan(step, init_burst, u)
+        # Quiet-phase rate such that E[gap] = pi_q/r_q + pi_b/r_b = 1/rate.
+        r_quiet = rate * (pi_q + pi_b / self.rate_ratio)
+        rate_k = jnp.where(burst, self.rate_ratio * r_quiet, r_quiet)
+        return jnp.cumsum(e / rate_k).astype(jnp.float32)
+
+
+@component("arrivals")
+@dataclasses.dataclass(frozen=True)
+class DiurnalArrivals:
+    """Sinusoidal-rate arrivals: λ(t) = rate · (1 + a·sin(2πt/P)).
+
+    The period ``P`` spans ``1/cycles`` of the nominal horizon
+    ``n_tasks / rate``, so a trace sees ``cycles`` full day/night swings at
+    any arrival rate. Sampled by time-rescaling: a unit-rate Poisson stream
+    is pushed through Λ⁻¹ with a fixed number of Newton iterations (Λ is
+    strictly increasing for ``|a| < 1``), then ``cummax`` re-asserts
+    monotonicity against the last float32 ulp of Newton residue.
+    """
+
+    kind: ClassVar[str] = "diurnal"
+    amplitude: float = 0.8
+    cycles: float = 4.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.amplitude < 1.0:
+            raise ValueError("amplitude must be in [0, 1) so λ(t) > 0")
+        if not self.cycles > 0:
+            raise ValueError("cycles must be positive")
+
+    def sample(self, key, n_tasks: int, rate) -> jnp.ndarray:
+        gam = jnp.cumsum(jax.random.exponential(key, (n_tasks,)))
+        a = self.amplitude
+        period = n_tasks / (rate * self.cycles)
+        w = 2.0 * jnp.pi / period
+
+        def big_lambda(t):
+            return rate * t + rate * a / w * (1.0 - jnp.cos(w * t))
+
+        def small_lambda(t):
+            return rate * (1.0 + a * jnp.sin(w * t))
+
+        t = gam / rate  # stationary-Poisson initial guess
+        for _ in range(_NEWTON_ITERS):
+            t = t - (big_lambda(t) - gam) / small_lambda(t)
+        t = jax.lax.cummax(jnp.maximum(t, 0.0))
+        return t.astype(jnp.float32)
+
+
+@component("arrivals")
+@dataclasses.dataclass(frozen=True)
+class FlashCrowdArrivals:
+    """Baseline Poisson with a flash-crowd spike window.
+
+    The rate is ``rate`` everywhere except ``spike_mult × rate`` inside the
+    window ``[spike_start, spike_start + spike_frac]`` (fractions of the
+    nominal horizon ``n_tasks / rate``). The piecewise-linear integrated
+    rate inverts in closed form — three ``where`` branches, fixed shape.
+    """
+
+    kind: ClassVar[str] = "flash-crowd"
+    spike_start: float = 0.4
+    spike_frac: float = 0.15
+    spike_mult: float = 6.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.spike_start < 1.0:
+            raise ValueError("spike_start must be in [0, 1)")
+        if not self.spike_frac > 0:
+            raise ValueError("spike_frac must be positive")
+        if not self.spike_mult >= 1.0:
+            raise ValueError("spike_mult must be >= 1")
+
+    def sample(self, key, n_tasks: int, rate) -> jnp.ndarray:
+        gam = jnp.cumsum(jax.random.exponential(key, (n_tasks,)))
+        horizon = n_tasks / rate
+        t0 = self.spike_start * horizon
+        dur = self.spike_frac * horizon
+        mult = self.spike_mult
+        g0 = rate * t0                       # Λ mass before the spike
+        g1 = g0 + rate * mult * dur          # Λ mass through the spike
+        t_pre = gam / rate
+        t_in = t0 + (gam - g0) / (rate * mult)
+        t_post = t0 + dur + (gam - g1) / rate
+        t = jnp.where(gam <= g0, t_pre, jnp.where(gam <= g1, t_in, t_post))
+        return t.astype(jnp.float32)

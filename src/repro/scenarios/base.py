@@ -1,0 +1,238 @@
+"""The composable workload-scenario algebra.
+
+A :class:`Scenario` is to workload synthesis what
+:class:`~repro.core.policy.base.TwoPhasePolicy` is to mapping policies —
+a frozen composition of small, independently swappable pieces:
+
+  * :class:`ArrivalProcess` — *when* tasks arrive (stationary Poisson,
+    bursty MMPP, diurnal sinusoidal-rate, flash-crowd spike, ...).
+  * :class:`TypeMix` — *which* task types arrive (uniform, weighted,
+    time-varying drift).
+  * :class:`DeadlineModel` — how deadlines follow from arrivals (Eq. 4 and
+    tightness-scaled variants).
+  * :class:`RuntimeModel` — how actual runtimes scatter around the EET
+    (Gamma with scalar or per-type CV, heavy-tail lognormal).
+  * :class:`~repro.scenarios.fleets.FleetBuilder` (optional) — which
+    system the scenario is *meant* to run on; ``None`` defers to the
+    caller's system choice.
+
+Every component is fixed-shape JAX: sampling is inverse-transform over a
+pre-drawn ``(N,)`` block of randomness (Newton inversion of the integrated
+rate for non-stationary processes), never rejection with data-dependent
+shapes. That keeps a :class:`Scenario` usable inside ``vmap`` + one
+``jax.jit`` — the single-dispatch sweep design of ``repro.experiments``
+works for every scenario, not just the paper's Poisson default.
+
+Components are frozen dataclasses with a ``kind`` class attribute, so a
+scenario is hashable (jit can close over it statically) and serializes to
+JSON by recording each component's kind + parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Protocol, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Trace
+
+# --------------------------------------------------------------------------
+# Component protocols
+# --------------------------------------------------------------------------
+
+
+class ArrivalProcess(Protocol):
+    """Samples N sorted, non-negative arrival times at a nominal rate."""
+
+    kind: str
+
+    def sample(self, key, n_tasks: int, rate) -> jnp.ndarray: ...
+
+
+class TypeMix(Protocol):
+    """Samples N task-type indices in ``[0, n_types)``."""
+
+    kind: str
+
+    def sample(self, key, n_tasks: int, n_types: int) -> jnp.ndarray: ...
+
+
+class DeadlineModel(Protocol):
+    """Maps (arrival, task_type, eet) to per-task deadlines."""
+
+    kind: str
+
+    def deadlines(self, arrival, task_type, eet) -> jnp.ndarray: ...
+
+
+class RuntimeModel(Protocol):
+    """Samples (N, M) actual runtimes around the EET rows.
+
+    ``cv_run`` is the sweep-level coefficient of variation
+    (``SweepSpec.cv_run``); models with their own dispersion parameters are
+    free to ignore it.
+    """
+
+    kind: str
+
+    def sample(self, key, eet, task_type, cv_run) -> jnp.ndarray: ...
+
+
+# --------------------------------------------------------------------------
+# Component (de)serialization: kind-keyed class registry
+# --------------------------------------------------------------------------
+
+_COMPONENTS: Dict[Tuple[str, str], Type] = {}
+
+
+def component(category: str):
+    """Class decorator registering a component for JSON round-tripping.
+
+    ``category`` is the Scenario field family (``"arrivals"``, ``"mix"``,
+    ``"deadline"``, ``"runtime"``, ``"fleet"``); together with the class's
+    ``kind`` it keys the class for :func:`component_from_json`.
+    """
+
+    def deco(cls):
+        key = (category, cls.kind)
+        if key in _COMPONENTS and _COMPONENTS[key] is not cls:
+            raise ValueError(f"duplicate component kind {key!r}")
+        _COMPONENTS[key] = cls
+        return cls
+
+    return deco
+
+
+def component_to_json(comp) -> dict:
+    """``{"kind": ..., <param>: ...}`` for a registered component."""
+    out = {"kind": comp.kind}
+    for f in dataclasses.fields(comp):
+        v = getattr(comp, f.name)
+        out[f.name] = list(v) if isinstance(v, tuple) else v
+    return out
+
+
+def component_from_json(category: str, d: dict):
+    """Inverse of :func:`component_to_json` (tuples restored from lists)."""
+    try:
+        cls = _COMPONENTS[(category, d["kind"])]
+    except KeyError:
+        known = sorted(k for c, k in _COMPONENTS if c == category)
+        raise ValueError(
+            f"unknown {category} component kind {d.get('kind')!r}; "
+            f"choose from {known}"
+        ) from None
+    kwargs = {
+        k: tuple(v) if isinstance(v, list) else v
+        for k, v in d.items() if k != "kind"
+    }
+    return cls(**kwargs)
+
+
+# --------------------------------------------------------------------------
+# Scenario
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """arrivals × mix × deadline × runtime [× fleet] — one workload recipe.
+
+    Frozen and hashable, so jit can specialize on a scenario the same way
+    it specializes on a policy, and ``SweepSpec`` (itself frozen) can embed
+    one directly.
+
+    Attributes:
+      arrivals: the :class:`ArrivalProcess`.
+      mix: the :class:`TypeMix`.
+      deadline: the :class:`DeadlineModel`.
+      runtime: the :class:`RuntimeModel`.
+      fleet: optional :class:`~repro.scenarios.fleets.FleetBuilder` naming
+        the system this scenario is designed for. ``None`` (the default)
+        means "whatever system the spec chose" — scenarios that only vary
+        the workload leave it unset.
+    """
+
+    arrivals: ArrivalProcess
+    mix: TypeMix
+    deadline: DeadlineModel
+    runtime: RuntimeModel
+    fleet: Optional[object] = None  # FleetBuilder; typed loosely to avoid a cycle
+
+    def sample_trace(self, key, n_tasks: int, rate, eet, *,
+                     cv_run: float = 0.1, n_task_types=None) -> Trace:
+        """Synthesize one workload trace under this scenario.
+
+        The key-split discipline (one 3-way split: arrivals, types,
+        runtimes) is pinned: the default Poisson scenario reproduces the
+        pre-scenario-API ``poisson_trace`` byte-for-byte under the same
+        key (see ``tests/test_scenario_regression.py``).
+        """
+        eet = jnp.asarray(eet)
+        if n_task_types is None:
+            n_task_types = eet.shape[0]
+        k_arr, k_type, k_exec = jax.random.split(key, 3)
+        arrival = self.arrivals.sample(k_arr, n_tasks, rate)
+        task_type = self.mix.sample(k_type, n_tasks, n_task_types)
+        deadline = self.deadline.deadlines(arrival, task_type, eet)
+        exec_actual = self.runtime.sample(k_exec, eet, task_type, cv_run)
+        return Trace(arrival, task_type, deadline, exec_actual)
+
+    def stack(self, key, rates, reps: int, n_tasks: int, eet, *,
+              cv_run: float = 0.1, n_task_types=None) -> Trace:
+        """The full (R rates × K replicates) CRN trace grid under one key.
+
+        Replicate ``k`` reuses the same subkey at every rate (common random
+        numbers): type and runtime draws are rate-independent by
+        construction (the rate only enters the arrival process), so the
+        sweep's rate axis stays paired for every scenario.
+
+        Returns a Trace whose leaves carry leading dims (R, K).
+        """
+        rep_keys = jax.random.split(key, reps)                    # (K, 2)
+        rates_arr = jnp.asarray(rates, jnp.float32)               # (R,)
+
+        def one(rate, k):
+            return self.sample_trace(k, n_tasks, rate, eet, cv_run=cv_run,
+                                     n_task_types=n_task_types)
+
+        over_reps = jax.vmap(one, in_axes=(None, 0))              # (K, ...)
+        return jax.vmap(over_reps, in_axes=(0, None))(rates_arr, rep_keys)
+
+    # -- introspection / serialization -------------------------------------
+    def describe(self) -> dict:
+        """Component kinds by field, for ``--list-scenarios`` output."""
+        return {
+            "arrivals": self.arrivals.kind,
+            "mix": self.mix.kind,
+            "deadline": self.deadline.kind,
+            "runtime": self.runtime.kind,
+            "fleet": self.fleet.kind if self.fleet is not None else "-",
+        }
+
+    def to_json_dict(self) -> dict:
+        return {
+            "arrivals": component_to_json(self.arrivals),
+            "mix": component_to_json(self.mix),
+            "deadline": component_to_json(self.deadline),
+            "runtime": component_to_json(self.runtime),
+            "fleet": (component_to_json(self.fleet)
+                      if self.fleet is not None else None),
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "Scenario":
+        return cls(
+            arrivals=component_from_json("arrivals", d["arrivals"]),
+            mix=component_from_json("mix", d["mix"]),
+            deadline=component_from_json("deadline", d["deadline"]),
+            runtime=component_from_json("runtime", d["runtime"]),
+            fleet=(component_from_json("fleet", d["fleet"])
+                   if d.get("fleet") is not None else None),
+        )
+
+
+def replace(scenario: Scenario, **kwargs) -> Scenario:
+    """``dataclasses.replace`` re-exported for fluent scenario tweaking."""
+    return dataclasses.replace(scenario, **kwargs)

@@ -1,0 +1,49 @@
+"""Deadline models: how deadlines follow from arrivals.
+
+Contract: ``deadlines(arrival, task_type, eet)`` returns ``(N,)`` float32
+absolute deadlines, strictly after the arrivals for sensible parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax.numpy as jnp
+
+from repro.core import equations
+from repro.scenarios.base import component
+
+
+@component("deadline")
+@dataclasses.dataclass(frozen=True)
+class PaperDeadlines:
+    """Eq. 4 verbatim: δ_k = arr_k + ē_i + ē."""
+
+    kind: ClassVar[str] = "paper"
+
+    def deadlines(self, arrival, task_type, eet) -> jnp.ndarray:
+        return equations.deadlines(arrival, task_type, eet)
+
+
+@component("deadline")
+@dataclasses.dataclass(frozen=True)
+class ScaledDeadlines:
+    """Eq. 4 with a tightness knob: δ_k = arr_k + tightness · (ē_i + ē).
+
+    ``tightness=1`` reproduces :class:`PaperDeadlines`; ``< 1`` squeezes
+    the slack (harder traces — the regime where proactive dropping pays),
+    ``> 1`` relaxes it.
+    """
+
+    kind: ClassVar[str] = "scaled"
+    tightness: float = 0.75
+
+    def __post_init__(self):
+        if not self.tightness > 0:
+            raise ValueError("tightness must be positive")
+
+    def deadlines(self, arrival, task_type, eet) -> jnp.ndarray:
+        arrival = jnp.asarray(arrival, jnp.float32)
+        # Eq. 4 at arrival 0 is exactly the slack term e_bar_i + e_bar.
+        slack = equations.deadlines(jnp.zeros_like(arrival), task_type, eet)
+        return arrival + self.tightness * slack

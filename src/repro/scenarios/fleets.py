@@ -1,0 +1,216 @@
+"""Fleet builders: which heterogeneous edge system a scenario runs on.
+
+A :class:`FleetBuilder` turns a handful of parameters into a full
+:class:`~repro.core.types.SystemSpec` — (S, M) EET matrix, power profiles,
+queue depth, fairness factor. The two paper systems are builders, and the
+parameterized generators (:class:`CvbFleet`, :class:`RangeFleet`) produce
+fleets of arbitrary size and heterogeneity from a seed, so heterogeneity
+itself becomes a sweepable axis.
+
+Builders are addressed by name through a registry mirroring the policy
+registry; ``SweepSpec.system`` resolves any registered name (``"paper"``
+and ``"aws"`` stop being special-cased string literals).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, List, Protocol, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import eet as eet_mod
+from repro.core.registry import NameRegistry
+from repro.core.types import SystemSpec
+from repro.scenarios.base import component
+
+
+class FleetBuilder(Protocol):
+    """Builds the SystemSpec a scenario simulates."""
+
+    kind: str
+
+    def build(self) -> SystemSpec: ...
+
+
+def _sample_powers(k_dyn, k_idle, n_machines: int, p_dyn_range, p_idle_range):
+    """Uniform per-machine dynamic/idle power profiles from the ranges."""
+    p_dyn = np.asarray(jax.random.uniform(
+        k_dyn, (n_machines,),
+        minval=p_dyn_range[0], maxval=p_dyn_range[1],
+    ), np.float32)
+    p_idle = np.asarray(jax.random.uniform(
+        k_idle, (n_machines,),
+        minval=p_idle_range[0], maxval=p_idle_range[1],
+    ), np.float32)
+    return p_dyn, p_idle
+
+
+@component("fleet")
+@dataclasses.dataclass(frozen=True)
+class PaperFleet:
+    """The Sec. VI-A synthetic 4×4 system (Table I + power profile)."""
+
+    kind: ClassVar[str] = "paper"
+    queue_size: int = 2
+    fairness_factor: float = 1.0
+
+    def build(self) -> SystemSpec:
+        from repro.core import api
+
+        return api.paper_system(self.queue_size, self.fairness_factor)
+
+
+@component("fleet")
+@dataclasses.dataclass(frozen=True)
+class AwsFleet:
+    """The AWS 2×2 scenario: t2.xlarge/g3s.xlarge × FaceNet/DeepSpeech."""
+
+    kind: ClassVar[str] = "aws"
+    queue_size: int = 2
+    fairness_factor: float = 1.0
+
+    def build(self) -> SystemSpec:
+        from repro.core import api
+
+        return api.aws_system(self.queue_size, self.fairness_factor)
+
+
+@component("fleet")
+@dataclasses.dataclass(frozen=True)
+class CvbFleet:
+    """Coefficient-of-Variation-Based synthetic fleet of arbitrary size.
+
+    The (S, M) EET comes from the CVB method the paper used to generate
+    Table I (``eet.cvb_eet``): ``cv_task`` controls task heterogeneity,
+    ``cv_mach`` machine heterogeneity. Dynamic/idle powers are uniform
+    draws from the given ranges. Deterministic in ``seed``.
+    """
+
+    kind: ClassVar[str] = "cvb"
+    n_task_types: int = 8
+    n_machines: int = 6
+    seed: int = 0
+    mean_task: float = 3.0
+    cv_task: float = 0.6
+    cv_mach: float = 0.6
+    p_dyn_range: Tuple[float, float] = (1.0, 3.0)
+    p_idle_range: Tuple[float, float] = (0.03, 0.08)
+    queue_size: int = 2
+    fairness_factor: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "p_dyn_range",
+                           tuple(float(x) for x in self.p_dyn_range))
+        object.__setattr__(self, "p_idle_range",
+                           tuple(float(x) for x in self.p_idle_range))
+        if self.n_task_types < 1 or self.n_machines < 1:
+            raise ValueError("fleet must have >= 1 task type and machine")
+
+    def build(self) -> SystemSpec:
+        key = jax.random.PRNGKey(self.seed)
+        k_eet, k_dyn, k_idle = jax.random.split(key, 3)
+        eet = np.asarray(eet_mod.cvb_eet(
+            k_eet, self.n_task_types, self.n_machines,
+            mean_task=self.mean_task, cv_task=self.cv_task,
+            cv_mach=self.cv_mach,
+        ))
+        p_dyn, p_idle = _sample_powers(
+            k_dyn, k_idle, self.n_machines,
+            self.p_dyn_range, self.p_idle_range)
+        return SystemSpec(eet=eet, p_dyn=p_dyn, p_idle=p_idle,
+                          queue_size=self.queue_size,
+                          fairness_factor=self.fairness_factor)
+
+
+@component("fleet")
+@dataclasses.dataclass(frozen=True)
+class RangeFleet:
+    """Uniform-range synthetic fleet: EET entries i.i.d. in ``eet_range``.
+
+    The flattest possible heterogeneity model (no task/machine structure at
+    all) — a useful null against :class:`CvbFleet`'s structured rows.
+    Deterministic in ``seed``.
+    """
+
+    kind: ClassVar[str] = "range"
+    n_task_types: int = 6
+    n_machines: int = 6
+    seed: int = 0
+    eet_range: Tuple[float, float] = (0.5, 5.0)
+    p_dyn_range: Tuple[float, float] = (1.0, 3.0)
+    p_idle_range: Tuple[float, float] = (0.03, 0.08)
+    queue_size: int = 2
+    fairness_factor: float = 1.0
+
+    def __post_init__(self):
+        for name in ("eet_range", "p_dyn_range", "p_idle_range"):
+            rng = tuple(float(x) for x in getattr(self, name))
+            object.__setattr__(self, name, rng)
+            if not 0 < rng[0] <= rng[1]:
+                raise ValueError(f"{name} must satisfy 0 < lo <= hi, "
+                                 f"got {rng}")
+        if self.n_task_types < 1 or self.n_machines < 1:
+            raise ValueError("fleet must have >= 1 task type and machine")
+
+    def build(self) -> SystemSpec:
+        key = jax.random.PRNGKey(self.seed)
+        k_eet, k_dyn, k_idle = jax.random.split(key, 3)
+        eet = np.asarray(jax.random.uniform(
+            k_eet, (self.n_task_types, self.n_machines),
+            minval=self.eet_range[0], maxval=self.eet_range[1],
+        ), np.float32)
+        p_dyn, p_idle = _sample_powers(
+            k_dyn, k_idle, self.n_machines,
+            self.p_dyn_range, self.p_idle_range)
+        return SystemSpec(eet=eet, p_dyn=p_dyn, p_idle=p_idle,
+                          queue_size=self.queue_size,
+                          fairness_factor=self.fairness_factor)
+
+
+# --------------------------------------------------------------------------
+# Fleet registry (shared NameRegistry mechanics, like policies/scenarios)
+# --------------------------------------------------------------------------
+
+
+def _check(name, fleet) -> None:
+    if not hasattr(fleet, "build"):
+        raise TypeError(f"fleet {name!r} must have a .build() method")
+
+
+_REGISTRY = NameRegistry("fleet", case=str.lower, check=_check)
+
+
+def register_fleet(name: str, fleet: FleetBuilder, *,
+                   overwrite: bool = False) -> FleetBuilder:
+    """Register a fleet builder under ``name`` (case-insensitive)."""
+    return _REGISTRY.register(name, fleet, overwrite=overwrite)
+
+
+def unregister_fleet(name: str) -> None:
+    """Remove a registered fleet builder (KeyError if absent)."""
+    _REGISTRY.unregister(name)
+
+
+def is_registered_fleet(name: str) -> bool:
+    return _REGISTRY.is_registered(name)
+
+
+def get_fleet(name: str) -> FleetBuilder:
+    """Resolve a fleet builder by (case-insensitive) name."""
+    return _REGISTRY.get(name)
+
+
+def list_fleets() -> List[str]:
+    """Sorted names of every registered fleet builder."""
+    return _REGISTRY.names()
+
+
+for _name, _fleet in [
+    ("paper", PaperFleet()),
+    ("aws", AwsFleet()),
+    ("cvb", CvbFleet()),
+    ("range", RangeFleet()),
+]:
+    register_fleet(_name, _fleet)
+del _name, _fleet

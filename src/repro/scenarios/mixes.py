@@ -1,0 +1,112 @@
+"""Task-type mixes: which application types the arrivals carry.
+
+Contract: ``sample(key, n_tasks, n_types)`` returns ``(N,)`` int32 type
+indices in ``[0, n_types)``. The mix never sees arrival *times* — drifting
+mixes key off the arrival *index* (position in the trace), which is both
+fixed-shape and rate-invariant, so the CRN grid draws identical types at
+every arrival rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.scenarios.base import component
+
+
+@component("mix")
+@dataclasses.dataclass(frozen=True)
+class UniformMix:
+    """Uniform over the task types (the paper's Sec. VI-A workload)."""
+
+    kind: ClassVar[str] = "uniform"
+
+    def sample(self, key, n_tasks: int, n_types: int) -> jnp.ndarray:
+        return jax.random.randint(
+            key, (n_tasks,), 0, n_types
+        ).astype(jnp.int32)
+
+
+@component("mix")
+@dataclasses.dataclass(frozen=True)
+class WeightedMix:
+    """Fixed categorical type mix (``probs`` need not be normalized)."""
+
+    kind: ClassVar[str] = "weighted"
+    probs: Tuple[float, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "probs", tuple(float(p) for p in self.probs)
+        )
+        if not self.probs:
+            raise ValueError("WeightedMix needs a non-empty probs tuple")
+        if any(p < 0 for p in self.probs) or sum(self.probs) <= 0:
+            raise ValueError(f"probs must be non-negative and sum > 0, "
+                             f"got {self.probs}")
+
+    def sample(self, key, n_tasks: int, n_types: int) -> jnp.ndarray:
+        if len(self.probs) != n_types:
+            raise ValueError(
+                f"WeightedMix has {len(self.probs)} probs but the system "
+                f"has {n_types} task types"
+            )
+        return jax.random.choice(
+            key, n_types, (n_tasks,), p=jnp.asarray(self.probs)
+        ).astype(jnp.int32)
+
+
+@component("mix")
+@dataclasses.dataclass(frozen=True)
+class DriftMix:
+    """Time-varying mix: linearly drifts from ``start`` to ``end`` probs.
+
+    Task ``k`` of ``N`` draws from ``(1 - k/(N-1))·start + k/(N-1)·end`` —
+    e.g. a workload that begins face-recognition-heavy and ends
+    speech-heavy. Sampled with one ``categorical`` over an (N, S) logit
+    grid: fixed shape, one key.
+    """
+
+    kind: ClassVar[str] = "drift"
+    start: Tuple[float, ...] = ()
+    end: Tuple[float, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "start",
+                           tuple(float(p) for p in self.start))
+        object.__setattr__(self, "end", tuple(float(p) for p in self.end))
+        for name, probs in (("start", self.start), ("end", self.end)):
+            if not probs or any(p < 0 for p in probs) or sum(probs) <= 0:
+                raise ValueError(
+                    f"DriftMix.{name} must be non-empty, non-negative, "
+                    f"sum > 0; got {probs}"
+                )
+        if len(self.start) != len(self.end):
+            raise ValueError("DriftMix start/end must have equal lengths")
+
+    def sample(self, key, n_tasks: int, n_types: int) -> jnp.ndarray:
+        if len(self.start) != n_types:
+            raise ValueError(
+                f"DriftMix has {len(self.start)} probs but the system has "
+                f"{n_types} task types"
+            )
+        p0 = jnp.asarray(self.start, jnp.float32)
+        p0 = p0 / p0.sum()
+        p1 = jnp.asarray(self.end, jnp.float32)
+        p1 = p1 / p1.sum()
+        w = jnp.linspace(0.0, 1.0, n_tasks)[:, None]       # (N, 1)
+        probs = (1.0 - w) * p0 + w * p1                    # (N, S)
+        return jax.random.categorical(
+            key, jnp.log(probs), axis=-1
+        ).astype(jnp.int32)
+
+
+def mix_from_probs(type_probs: Optional[Tuple[float, ...]]):
+    """``None`` → :class:`UniformMix`, else :class:`WeightedMix` — the
+    legacy ``type_probs=`` convention as a mix component."""
+    if type_probs is None:
+        return UniformMix()
+    return WeightedMix(tuple(float(p) for p in type_probs))

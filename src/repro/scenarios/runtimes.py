@@ -1,0 +1,88 @@
+"""Runtime models: how actual execution times scatter around the EET.
+
+Contract: ``sample(key, eet, task_type, cv_run)`` returns ``(N, M)``
+float32 actual runtimes whose row means track ``eet[task_type]``.
+``cv_run`` is the sweep-level dispersion (``SweepSpec.cv_run``); models
+with their own dispersion parameters ignore it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import eet as eet_mod
+from repro.scenarios.base import component
+
+
+@component("runtime")
+@dataclasses.dataclass(frozen=True)
+class GammaRuntimes:
+    """Gamma-distributed runtimes around the EET (the paper's model).
+
+    ``cv=None`` defers to the sweep-level ``cv_run`` and delegates to
+    ``eet.sample_actual_exec`` — byte-identical to the pre-scenario path.
+    ``cv_by_type`` instead gives each task type its own CV (e.g. a stable
+    vision model next to a high-variance speech model); it overrides both.
+    """
+
+    kind: ClassVar[str] = "gamma"
+    cv: Optional[float] = None
+    cv_by_type: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.cv_by_type is not None:
+            object.__setattr__(
+                self, "cv_by_type",
+                tuple(float(c) for c in self.cv_by_type),
+            )
+            if any(c <= 0 for c in self.cv_by_type):
+                raise ValueError("cv_by_type entries must be positive")
+        if self.cv is not None and not self.cv > 0:
+            raise ValueError("cv must be positive")
+
+    def sample(self, key, eet, task_type, cv_run) -> jnp.ndarray:
+        eet = jnp.asarray(eet)
+        if self.cv_by_type is None:
+            cv = self.cv if self.cv is not None else cv_run
+            return eet_mod.sample_actual_exec(key, eet, task_type, cv)
+        cvs = jnp.asarray(self.cv_by_type, jnp.float32)
+        if cvs.shape[0] != eet.shape[0]:
+            raise ValueError(
+                f"cv_by_type has {cvs.shape[0]} entries but the system "
+                f"has {eet.shape[0]} task types"
+            )
+        means = eet[task_type]                       # (N, M)
+        cv_k = cvs[task_type][:, None]               # (N, 1)
+        shape = 1.0 / cv_k**2
+        draw = jax.random.gamma(key, jnp.broadcast_to(shape, means.shape))
+        return (draw * (means * cv_k**2)).astype(jnp.float32)
+
+
+@component("runtime")
+@dataclasses.dataclass(frozen=True)
+class LognormalRuntimes:
+    """Heavy-tailed lognormal runtimes, mean-preserving around the EET.
+
+    ``X = EET · exp(σZ − σ²/2)`` with ``Z ~ N(0, 1)``: E[X] = EET exactly,
+    but the right tail is far heavier than the Gamma model's — stragglers
+    that blow through deadlines even on the right machine.
+    """
+
+    kind: ClassVar[str] = "lognormal"
+    sigma: float = 0.6
+
+    def __post_init__(self):
+        if not self.sigma > 0:
+            raise ValueError("sigma must be positive")
+
+    def sample(self, key, eet, task_type, cv_run) -> jnp.ndarray:
+        del cv_run  # dispersion is governed by sigma
+        eet = jnp.asarray(eet)
+        means = eet[task_type]                       # (N, M)
+        z = jax.random.normal(key, means.shape)
+        return (
+            means * jnp.exp(self.sigma * z - 0.5 * self.sigma**2)
+        ).astype(jnp.float32)

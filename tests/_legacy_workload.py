@@ -1,0 +1,57 @@
+"""Frozen pre-scenario-API workload synthesis (PR 1/2 state). DO NOT EDIT.
+
+Verbatim copies of ``repro.core.workload.poisson_trace`` and
+``repro.datapipe.synthetic.trace_stack`` as they existed before the
+composable Scenario API landed. ``tests/test_scenario_regression.py`` pins
+the default ``scenario="poisson"`` path to be *byte-identical* to these —
+the same PRNG key must yield the same split order, the same sampling ops in
+the same dtype, and therefore the same bits in every ``Trace`` leaf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import eet as eet_mod
+from repro.core import equations
+from repro.core.types import Trace
+
+
+def legacy_poisson_trace(key, n_tasks, arrival_rate, eet, *,
+                         n_task_types=None, cv_run=0.1,
+                         type_probs=None) -> Trace:
+    """Pre-refactor ``workload.poisson_trace``, frozen."""
+    eet = jnp.asarray(eet)
+    if n_task_types is None:
+        n_task_types = eet.shape[0]
+    k_arr, k_type, k_exec = jax.random.split(key, 3)
+
+    gaps = jax.random.exponential(k_arr, (n_tasks,)) / arrival_rate
+    arrival = jnp.cumsum(gaps).astype(jnp.float32)
+
+    if type_probs is None:
+        task_type = jax.random.randint(k_type, (n_tasks,), 0, n_task_types)
+    else:
+        task_type = jax.random.choice(
+            k_type, n_task_types, (n_tasks,), p=jnp.asarray(type_probs)
+        )
+    task_type = task_type.astype(jnp.int32)
+
+    deadline = equations.deadlines(arrival, task_type, eet)
+    exec_actual = eet_mod.sample_actual_exec(k_exec, eet, task_type, cv_run)
+    return Trace(arrival, task_type, deadline, exec_actual)
+
+
+def legacy_trace_stack(key, rates, reps, n_tasks, eet, *, cv_run=0.1,
+                       type_probs=None):
+    """Pre-refactor ``synthetic.trace_stack``, frozen."""
+    rep_keys = jax.random.split(key, reps)                    # (K, 2)
+    rates_arr = jnp.asarray(rates, jnp.float32)               # (R,)
+
+    def one(rate, k):
+        return legacy_poisson_trace(
+            k, n_tasks, rate, eet, cv_run=cv_run, type_probs=type_probs
+        )
+
+    over_reps = jax.vmap(one, in_axes=(None, 0))              # (K, ...)
+    return jax.vmap(over_reps, in_axes=(0, None))(rates_arr, rep_keys)

@@ -183,6 +183,14 @@ def test_cli_writes_artifacts(tmp_path):
     assert result.completion_rate.shape == (2, 2)
 
 
+def test_cli_list_scenarios_exits_clean(capsys):
+    with pytest.raises(SystemExit) as e:
+        sweep_cli.build_spec(["--list-scenarios"])
+    assert e.value.code == 0
+    out = capsys.readouterr().out
+    assert "bursty" in out and "flash-crowd" in out and "fleets:" in out
+
+
 def test_spec_validation():
     with pytest.raises(ValueError):
         experiments.SweepSpec(rates=())

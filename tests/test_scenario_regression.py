@@ -1,0 +1,257 @@
+"""Regression pins for the scenario-API refactor.
+
+Two contracts guard the redesign:
+
+  1. **Bit-exactness** — the default ``scenario="poisson"`` path must
+     reproduce the pre-refactor synthesis *byte for byte* under the same
+     seed (``tests/_legacy_workload.py`` holds the frozen originals), and
+     ``run_sweep`` on a default-scenario spec must match a frozen metrics
+     snapshot.
+  2. **Single-jit** — every (policy, scenario) pair must run inside ONE
+     jitted sweep computation: exactly one trace of each per-policy
+     simulator body per ``run_sweep`` call, observed through the
+     runner's trace-time log.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from _legacy_workload import legacy_poisson_trace, legacy_trace_stack
+from repro import experiments, scenarios
+from repro.core import api, workload
+from repro.core.types import SystemSpec
+from repro.datapipe import synthetic
+from repro.experiments import runner
+
+SPEC = api.paper_system()
+
+
+def _assert_traces_byte_identical(a, b):
+    for leaf_a, leaf_b, name in zip(a, b, type(a)._fields):
+        na, nb = np.asarray(leaf_a), np.asarray(leaf_b)
+        assert na.dtype == nb.dtype and na.shape == nb.shape, name
+        assert na.tobytes() == nb.tobytes(), f"{name} differs bitwise"
+
+
+# ----------------------------------------------------------- bit-exactness
+def test_poisson_trace_bit_exact_vs_prerefactor():
+    key = jax.random.PRNGKey(42)
+    _assert_traces_byte_identical(
+        workload.poisson_trace(key, 200, 3.0, SPEC.eet),
+        legacy_poisson_trace(key, 200, 3.0, SPEC.eet),
+    )
+
+
+def test_poisson_trace_type_probs_bit_exact_vs_prerefactor():
+    key = jax.random.PRNGKey(17)
+    probs = (0.4, 0.3, 0.2, 0.1)
+    _assert_traces_byte_identical(
+        workload.poisson_trace(key, 150, 2.0, SPEC.eet, type_probs=probs,
+                               cv_run=0.2),
+        legacy_poisson_trace(key, 150, 2.0, SPEC.eet, type_probs=probs,
+                             cv_run=0.2),
+    )
+
+
+def test_trace_stack_bit_exact_vs_prerefactor():
+    key = jax.random.PRNGKey(7)
+    _assert_traces_byte_identical(
+        synthetic.trace_stack(key, (2.0, 5.0), 3, 80, SPEC.eet),
+        legacy_trace_stack(key, (2.0, 5.0), 3, 80, SPEC.eet),
+    )
+
+
+def test_default_scenario_object_is_the_poisson_registration():
+    assert scenarios.get("poisson") == scenarios.default_scenario()
+    _assert_traces_byte_identical(
+        scenarios.default_scenario().sample_trace(
+            jax.random.PRNGKey(5), 100, 4.0, SPEC.eet),
+        legacy_poisson_trace(jax.random.PRNGKey(5), 100, 4.0, SPEC.eet),
+    )
+
+
+def test_trace_batch_deprecated_delegate_bit_exact():
+    """The shim = trace_stack's single-rate slice, warning included."""
+    key = jax.random.PRNGKey(3)
+    with pytest.warns(DeprecationWarning):
+        got = workload.trace_batch(key, 4, 100, 3.0, SPEC.eet)
+    want = jax.tree.map(
+        lambda x: x[0], legacy_trace_stack(key, (3.0,), 4, 100, SPEC.eet)
+    )
+    _assert_traces_byte_identical(got, want)
+
+
+def test_trace_batch_still_accepts_legacy_kwargs():
+    """The pre-refactor **kw surface (n_task_types, type_probs, cv_run)
+    keeps working through the delegate."""
+    key = jax.random.PRNGKey(8)
+    with pytest.warns(DeprecationWarning):
+        got = workload.trace_batch(key, 3, 50, 2.0, SPEC.eet,
+                                   n_task_types=2, cv_run=0.2)
+    assert int(np.asarray(got.task_type).max()) <= 1
+    want = jax.vmap(
+        lambda k: legacy_poisson_trace(k, 50, 2.0, SPEC.eet,
+                                       n_task_types=2, cv_run=0.2)
+    )(jax.random.split(key, 3))
+    _assert_traces_byte_identical(got, want)
+
+
+# ----------------------------------------------- frozen metrics snapshot
+# run_sweep under the default scenario, all five default heuristics,
+# seed 0 — (H=5, R=2, K=3) cells of 120-task traces. Counts are exact
+# integers; energies/makespans are pinned to float32-roundoff tolerance.
+_SNAP_SPEC = dict(rates=(2.0, 5.0), reps=3, n_tasks=120, seed=0)
+_SNAP_COMPLETED = [
+    [[101, 112, 114], [34, 32, 42]],
+    [[102, 113, 114], [29, 26, 38]],
+    [[102, 113, 114], [27, 26, 36]],
+    [[101, 114, 112], [57, 58, 60]],
+    [[102, 111, 111], [53, 53, 56]],
+]
+_SNAP_MISSED = [
+    [[19, 8, 6], [86, 88, 78]],
+    [[18, 7, 6], [91, 94, 82]],
+    [[18, 7, 6], [83, 85, 80]],
+    [[9, 2, 5], [7, 4, 10]],
+    [[9, 3, 5], [8, 7, 11]],
+]
+_SNAP_CANCELLED = [
+    [[0, 0, 0], [0, 0, 0]],
+    [[0, 0, 0], [0, 0, 0]],
+    [[0, 0, 0], [10, 9, 4]],
+    [[10, 4, 3], [56, 58, 50]],
+    [[9, 6, 4], [59, 60, 53]],
+]
+_SNAP_ENERGY_DYN = [
+    [[311.9492, 317.2926, 307.6210], [187.4637, 186.4356, 207.6998]],
+    [[308.8663, 317.1258, 307.6210], [184.0592, 187.5843, 212.3773]],
+    [[308.8663, 317.1258, 307.6210], [186.6375, 185.6721, 209.1500]],
+    [[290.0843, 309.5700, 295.9440], [183.1120, 180.6104, 197.9615]],
+    [[301.3672, 306.4947, 292.9674], [182.5677, 174.3736, 198.6190]],
+]
+_SNAP_MAKESPAN = [
+    [[58.2737, 53.3255, 65.7734], [26.5943, 24.8032, 30.3022]],
+    [[58.2737, 53.3348, 65.7734], [26.5943, 24.8032, 30.3022]],
+    [[58.2737, 53.3348, 65.7734], [26.9428, 24.8032, 29.9745]],
+    [[57.9869, 53.1413, 66.5726], [26.2742, 24.0358, 29.6243]],
+    [[57.9869, 53.5615, 66.5726], [26.2742, 24.4908, 29.3760]],
+]
+
+
+def test_run_sweep_default_scenario_matches_frozen_snapshot():
+    res = experiments.run_sweep(experiments.SweepSpec(**_SNAP_SPEC))
+    m = res.metrics
+    np.testing.assert_array_equal(
+        np.asarray(m.completed_by_type).sum(-1), np.asarray(_SNAP_COMPLETED))
+    np.testing.assert_array_equal(
+        np.asarray(m.missed_by_type).sum(-1), np.asarray(_SNAP_MISSED))
+    np.testing.assert_array_equal(
+        np.asarray(m.cancelled_by_type).sum(-1),
+        np.asarray(_SNAP_CANCELLED))
+    np.testing.assert_allclose(
+        np.asarray(m.energy_dynamic), np.asarray(_SNAP_ENERGY_DYN),
+        rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(m.makespan), np.asarray(_SNAP_MAKESPAN), rtol=1e-5)
+
+
+# ------------------------------------------------------------- single jit
+def test_one_jit_trace_per_policy_scenario_pair():
+    """All policies of a sweep trace exactly once inside one XLA program,
+    for the default scenario and for a non-Poisson one alike."""
+    heuristics = ("MM", "ELARE", "FELARE")
+    runner._TRACE_LOG.clear()
+    for scn in ("poisson", "bursty"):
+        experiments.run_sweep(experiments.SweepSpec(
+            rates=(3.0,), reps=2, n_tasks=60, heuristics=heuristics,
+            scenario=scn, seed=1,
+        ))
+    expected = {(h, s) for h in heuristics for s in ("poisson", "bursty")}
+    assert set(runner._TRACE_LOG) == expected
+    # exactly once each: 3 policies x 2 scenarios = 6 trace events total
+    assert len(runner._TRACE_LOG) == len(expected)
+    runner._TRACE_LOG.clear()
+
+
+# ------------------------------------------------------ spec round-tripping
+def test_spec_json_roundtrip_default():
+    spec = experiments.SweepSpec(**_SNAP_SPEC)
+    back = experiments.SweepSpec.from_json_dict(
+        json.loads(json.dumps(spec.to_json_dict())))
+    assert back == spec
+
+
+def test_spec_json_roundtrip_named_axes():
+    spec = experiments.SweepSpec(
+        system="aws", scenario="bursty", rates=(1.0, 2.0), reps=2,
+        n_tasks=50, heuristics=("ELARE",), seed=3, cv_run=0.2,
+        queue_size=4, fairness_factor=2.0, use_pallas_phase1=True,
+        max_steps=500,
+    )
+    back = experiments.SweepSpec.from_json_dict(
+        json.loads(json.dumps(spec.to_json_dict())))
+    assert back == spec
+
+
+def test_spec_json_roundtrip_custom_system_and_scenario():
+    system = SystemSpec(
+        eet=np.asarray([[1.0, 2.0], [3.0, 4.0]], np.float32),
+        p_dyn=np.asarray([1.5, 2.5], np.float32),
+        p_idle=np.asarray([0.05, 0.05], np.float32),
+        queue_size=3, fairness_factor=1.5,
+    )
+    scenario = scenarios.Scenario(
+        scenarios.MMPPArrivals(rate_ratio=4.0),
+        scenarios.WeightedMix((0.6, 0.4)),
+        scenarios.ScaledDeadlines(0.9),
+        scenarios.LognormalRuntimes(sigma=0.4),
+    )
+    spec = experiments.SweepSpec(system=system, scenario=scenario,
+                                 rates=(2.0,), reps=2, n_tasks=40,
+                                 heuristics=("MM",))
+    back = experiments.SweepSpec.from_json_dict(
+        json.loads(json.dumps(spec.to_json_dict())))
+    assert back.scenario == scenario
+    np.testing.assert_array_equal(back.system.eet, system.eet)
+    np.testing.assert_array_equal(back.system.p_dyn, system.p_dyn)
+    assert back.system.queue_size == 3
+    assert back.system.fairness_factor == 1.5
+    assert back.rates == spec.rates and back.heuristics == spec.heuristics
+
+
+def test_sweep_rerunnable_from_saved_artifact(tmp_path):
+    """A sweep re-run from its own sweep.json reproduces the metrics."""
+    spec = experiments.SweepSpec(rates=(3.0,), reps=2, n_tasks=60,
+                                 heuristics=("MM", "ELARE"),
+                                 scenario="flash-crowd", seed=9)
+    res = experiments.run_sweep(spec)
+    paths = res.save(tmp_path / "artifacts")
+    payload = json.loads(paths["json"].read_text())
+    respec = experiments.SweepSpec.from_json_dict(payload["spec"])
+    assert respec == spec
+    res2 = experiments.run_sweep(respec)
+    for name in ("completed_by_type", "missed_by_type",
+                 "cancelled_by_type", "arrived_by_type"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res.metrics, name)),
+            np.asarray(getattr(res2.metrics, name)))
+
+
+# ------------------------------------------------------- spec validation
+def test_spec_rejects_unknown_scenario():
+    with pytest.raises(ValueError):
+        experiments.SweepSpec(scenario="nope")
+    with pytest.raises(ValueError):
+        experiments.SweepSpec(scenario=42)
+
+
+def test_spec_scenario_fleet_precedence():
+    """Explicit system wins; system=None defers to the scenario's fleet."""
+    wide = experiments.SweepSpec(scenario="wide-fleet")
+    assert wide.resolve_system().eet.shape == (8, 6)
+    paper = experiments.SweepSpec(scenario="wide-fleet", system="paper")
+    assert paper.resolve_system().eet.shape == (4, 4)
+    default = experiments.SweepSpec()  # poisson scenario has no fleet
+    np.testing.assert_array_equal(default.resolve_system().eet, SPEC.eet)

@@ -1,0 +1,347 @@
+"""Tests for the composable workload-scenario API (repro.scenarios)."""
+import dataclasses
+
+import hypothesis.strategies as st
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro import scenarios
+from repro.core import api
+
+SPEC = api.paper_system()
+
+ALL_ARRIVALS = [
+    scenarios.PoissonArrivals(),
+    scenarios.MMPPArrivals(),
+    scenarios.DiurnalArrivals(),
+    scenarios.FlashCrowdArrivals(),
+]
+
+
+def _gaps_cv2(arrivals: np.ndarray) -> float:
+    g = np.diff(arrivals)
+    return float(g.var() / g.mean() ** 2)
+
+
+# ------------------------------------------------------ arrival properties
+@given(seed=st.integers(0, 1000), rate=st.floats(0.5, 12.0))
+@settings(max_examples=12, deadline=None)
+def test_arrivals_sorted_nonnegative_finite(seed, rate):
+    """Every arrival process emits sorted, non-negative, finite times."""
+    key = jax.random.PRNGKey(seed)
+    for proc in ALL_ARRIVALS:
+        a = np.asarray(proc.sample(key, 512, rate))
+        assert a.shape == (512,), proc.kind
+        assert np.all(np.isfinite(a)), proc.kind
+        assert np.all(a >= 0), proc.kind
+        assert np.all(np.diff(a) >= 0), proc.kind
+
+
+@given(seed=st.integers(0, 1000), rate=st.floats(1.0, 10.0))
+@settings(max_examples=10, deadline=None)
+def test_empirical_rate_matches_nominal(seed, rate):
+    """Rate-normalized processes hit the nominal rate within CI bounds.
+
+    For n arrivals at rate λ the horizon t_n concentrates around n/λ with
+    relative sd ~ sqrt(CV²/n); 8 sigma of margin (plus MMPP's phase
+    correlation) keeps this deterministic-in-practice across seeds.
+    """
+    n = 4000
+    key = jax.random.PRNGKey(seed)
+    for proc, cv2_bound in [(scenarios.PoissonArrivals(), 1.0),
+                            (scenarios.MMPPArrivals(), 12.0),
+                            (scenarios.DiurnalArrivals(), 2.0)]:
+        t_n = float(np.asarray(proc.sample(key, n, rate))[-1])
+        emp = n / t_n
+        tol = 8.0 * rate * np.sqrt(cv2_bound / n)
+        assert abs(emp - rate) < tol, (proc.kind, emp, rate)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_mmpp_burstier_than_poisson(seed):
+    """MMPP inter-arrival CV² exceeds the Poisson process's (same key)."""
+    key = jax.random.PRNGKey(seed)
+    cv2_poisson = _gaps_cv2(
+        np.asarray(scenarios.PoissonArrivals().sample(key, 4000, 3.0)))
+    cv2_mmpp = _gaps_cv2(
+        np.asarray(scenarios.MMPPArrivals().sample(key, 4000, 3.0)))
+    assert cv2_mmpp > cv2_poisson + 0.1
+    assert cv2_mmpp > 1.15  # analytically ~1.6 for the default parameters
+    assert 0.6 < cv2_poisson < 1.5  # exponential gaps: CV² = 1
+
+
+@given(seed=st.integers(0, 1000), rate=st.floats(1.0, 8.0))
+@settings(max_examples=10, deadline=None)
+def test_crn_invariance_across_rates(seed, rate):
+    """Same replicate key ⇒ identical type and runtime draws across rates,
+    for every registered scenario (the rate only enters arrivals)."""
+    key = jax.random.PRNGKey(seed)
+    for name in scenarios.list_scenarios():
+        scn = scenarios.get(name)
+        eet = (scn.fleet.build() if scn.fleet is not None else SPEC).eet
+        st_ = scn.stack(key, (rate, 4.0 * rate), 2, 64, eet)
+        np.testing.assert_array_equal(
+            np.asarray(st_.task_type[0]), np.asarray(st_.task_type[1]),
+            err_msg=name)
+        np.testing.assert_array_equal(
+            np.asarray(st_.exec_actual[0]), np.asarray(st_.exec_actual[1]),
+            err_msg=name)
+
+
+def test_poisson_crn_arrivals_scale_inversely():
+    """Poisson arrivals under CRN scale exactly as 1/rate."""
+    scn = scenarios.get("poisson")
+    st_ = scn.stack(jax.random.PRNGKey(3), (1.0, 4.0), 4, 60, SPEC.eet)
+    np.testing.assert_allclose(np.asarray(st_.arrival[0]),
+                               4.0 * np.asarray(st_.arrival[1]), rtol=1e-5)
+
+
+def test_flash_crowd_concentrates_mass_in_window():
+    """The spike window holds far more arrivals than a Poisson window."""
+    proc = scenarios.FlashCrowdArrivals(spike_start=0.4, spike_frac=0.15,
+                                        spike_mult=6.0)
+    n, rate = 4000, 3.0
+    a = np.asarray(proc.sample(jax.random.PRNGKey(0), n, rate))
+    horizon = n / rate
+    t0, t1 = 0.4 * horizon, (0.4 + 0.15) * horizon
+    in_window = int(np.sum((a >= t0) & (a <= t1)))
+    poisson_expect = rate * (t1 - t0)
+    assert in_window > 3.0 * poisson_expect
+
+
+def test_diurnal_rate_oscillates():
+    """Arrival density alternates between above- and below-nominal across
+    the configured cycles."""
+    proc = scenarios.DiurnalArrivals(amplitude=0.8, cycles=4.0)
+    n, rate = 8000, 3.0
+    a = np.asarray(proc.sample(jax.random.PRNGKey(1), n, rate))
+    horizon = n / rate
+    edges = np.linspace(0.0, horizon, 33)
+    counts, _ = np.histogram(a, bins=edges)
+    per_bin = n / 32
+    assert counts.max() > 1.3 * per_bin
+    assert counts.min() < 0.7 * per_bin
+
+
+# ----------------------------------------------------------------- mixes
+def test_weighted_mix_respects_probs():
+    mix = scenarios.WeightedMix((0.7, 0.1, 0.1, 0.1))
+    t = np.asarray(mix.sample(jax.random.PRNGKey(0), 4000, 4))
+    freq = np.bincount(t, minlength=4) / 4000
+    assert abs(freq[0] - 0.7) < 0.05
+    assert np.all(t >= 0) and np.all(t < 4)
+
+
+def test_weighted_mix_validates_length():
+    mix = scenarios.WeightedMix((0.5, 0.5))
+    with pytest.raises(ValueError):
+        mix.sample(jax.random.PRNGKey(0), 10, 4)
+    with pytest.raises(ValueError):
+        scenarios.WeightedMix(())
+    with pytest.raises(ValueError):
+        scenarios.WeightedMix((-1.0, 2.0))
+
+
+def test_drift_mix_drifts():
+    """Early tasks follow the start mix, late tasks the end mix."""
+    mix = scenarios.DriftMix(start=(0.9, 0.1, 0.0, 0.0),
+                             end=(0.0, 0.0, 0.1, 0.9))
+    t = np.asarray(mix.sample(jax.random.PRNGKey(0), 4000, 4))
+    head, tail = t[:1000], t[-1000:]
+    assert np.mean(head == 0) > 0.5
+    assert np.mean(tail == 3) > 0.5
+    with pytest.raises(ValueError):
+        scenarios.DriftMix(start=(0.5, 0.5), end=(1.0,))
+
+
+# --------------------------------------------------------------- deadlines
+def test_scaled_deadlines_interpolate_paper():
+    scn = scenarios.get("poisson")
+    tr = scn.sample_trace(jax.random.PRNGKey(0), 64, 3.0, SPEC.eet)
+    paper = scenarios.PaperDeadlines().deadlines(
+        tr.arrival, tr.task_type, SPEC.eet)
+    tight = scenarios.ScaledDeadlines(0.75).deadlines(
+        tr.arrival, tr.task_type, SPEC.eet)
+    loose = scenarios.ScaledDeadlines(1.5).deadlines(
+        tr.arrival, tr.task_type, SPEC.eet)
+    unit = scenarios.ScaledDeadlines(1.0).deadlines(
+        tr.arrival, tr.task_type, SPEC.eet)
+    assert np.all(np.asarray(tight) < np.asarray(paper))
+    assert np.all(np.asarray(loose) > np.asarray(paper))
+    np.testing.assert_allclose(np.asarray(unit), np.asarray(paper),
+                               rtol=1e-6)
+    assert np.all(np.asarray(tight) > np.asarray(tr.arrival))
+
+
+# ---------------------------------------------------------------- runtimes
+def test_gamma_runtimes_default_matches_legacy_sampler():
+    """cv=None delegates to eet.sample_actual_exec byte-for-byte."""
+    from repro.core import eet as eet_mod
+
+    key = jax.random.PRNGKey(5)
+    ttype = np.zeros(32, np.int32)
+    ours = scenarios.GammaRuntimes().sample(key, SPEC.eet, ttype, 0.1)
+    ref = eet_mod.sample_actual_exec(key, SPEC.eet, ttype, 0.1)
+    assert np.asarray(ours).tobytes() == np.asarray(ref).tobytes()
+
+
+def test_gamma_runtimes_per_type_cv():
+    """Per-type CVs produce per-type dispersion around unchanged means."""
+    key = jax.random.PRNGKey(2)
+    n = 6000
+    ttype = np.asarray([0, 1] * (n // 2), np.int32)
+    model = scenarios.GammaRuntimes(cv_by_type=(0.05, 0.5, 0.1, 0.1))
+    draws = np.asarray(model.sample(key, SPEC.eet, ttype, 0.1))
+    for s, cv in [(0, 0.05), (1, 0.5)]:
+        rel = draws[ttype == s, 0] / float(SPEC.eet[s, 0])
+        assert abs(rel.mean() - 1.0) < 0.05
+        assert abs(rel.std() - cv) < 0.25 * cv + 0.01
+    with pytest.raises(ValueError):
+        scenarios.GammaRuntimes(cv_by_type=(0.1, 0.1)).sample(
+            key, SPEC.eet, ttype, 0.1)
+
+
+def test_lognormal_runtimes_mean_preserving_heavy_tail():
+    key = jax.random.PRNGKey(4)
+    n = 8000
+    ttype = np.zeros(n, np.int32)
+    ln = np.asarray(scenarios.LognormalRuntimes(sigma=0.6).sample(
+        key, SPEC.eet, ttype, 0.1))
+    gm = np.asarray(scenarios.GammaRuntimes().sample(
+        key, SPEC.eet, ttype, 0.1))
+    rel_ln = ln[:, 0] / float(SPEC.eet[0, 0])
+    rel_gm = gm[:, 0] / float(SPEC.eet[0, 0])
+    assert abs(rel_ln.mean() - 1.0) < 0.05
+    # heavier right tail than the paper's Gamma model
+    assert np.quantile(rel_ln, 0.999) > np.quantile(rel_gm, 0.999) * 1.5
+
+
+# ------------------------------------------------------------------ fleets
+def test_builtin_fleets_match_api_systems():
+    paper = scenarios.get_fleet("paper").build()
+    np.testing.assert_array_equal(paper.eet, api.paper_system().eet)
+    aws = scenarios.get_fleet("aws").build()
+    np.testing.assert_array_equal(aws.eet, api.aws_system().eet)
+
+
+def test_parameterized_fleets_shape_determinism_ranges():
+    f = scenarios.CvbFleet(n_task_types=5, n_machines=7, seed=3)
+    s1, s2 = f.build(), f.build()
+    assert s1.eet.shape == (5, 7)
+    np.testing.assert_array_equal(s1.eet, s2.eet)  # deterministic in seed
+    assert not np.array_equal(
+        s1.eet, scenarios.CvbFleet(n_task_types=5, n_machines=7,
+                                   seed=4).build().eet)
+
+    r = scenarios.RangeFleet(n_task_types=3, n_machines=4, seed=0,
+                             eet_range=(0.5, 5.0)).build()
+    assert r.eet.shape == (3, 4)
+    assert np.all(r.eet >= 0.5) and np.all(r.eet <= 5.0)
+    assert np.all(r.p_dyn >= 1.0) and np.all(r.p_dyn <= 3.0)
+
+    with pytest.raises(ValueError):
+        scenarios.RangeFleet(eet_range=(5.0, 0.5))
+
+
+def test_fleet_registry_roundtrip():
+    fleet = scenarios.RangeFleet(n_task_types=2, n_machines=2, seed=9)
+    scenarios.register_fleet("tiny-test-fleet", fleet)
+    try:
+        assert scenarios.is_registered_fleet("TINY-TEST-FLEET")
+        assert scenarios.get_fleet("tiny-test-fleet") is fleet
+        with pytest.raises(ValueError):
+            scenarios.register_fleet("tiny-test-fleet", fleet)
+    finally:
+        scenarios.unregister_fleet("tiny-test-fleet")
+    assert not scenarios.is_registered_fleet("tiny-test-fleet")
+    with pytest.raises(KeyError):
+        scenarios.get_fleet("tiny-test-fleet")
+
+
+# ---------------------------------------------------------------- registry
+def test_scenario_registry_roundtrip():
+    scn = scenarios.Scenario(scenarios.PoissonArrivals(),
+                             scenarios.UniformMix(),
+                             scenarios.ScaledDeadlines(0.5),
+                             scenarios.GammaRuntimes())
+    scenarios.register("test-tight", scn)
+    try:
+        assert scenarios.is_registered("TEST-TIGHT")  # case-insensitive
+        assert scenarios.get("test-tight") is scn
+        with pytest.raises(ValueError):
+            scenarios.register("test-tight", scn)  # no silent shadowing
+        scenarios.register("test-tight", scn, overwrite=True)
+    finally:
+        scenarios.unregister("test-tight")
+    assert not scenarios.is_registered("test-tight")
+    with pytest.raises(KeyError):
+        scenarios.get("test-tight")
+    with pytest.raises(TypeError):
+        scenarios.register("not-a-scenario", object())  # type: ignore
+
+
+def test_builtin_registry_contents():
+    """The registry ships the stress axes the issue names: >= 4 arrival
+    processes and >= 2 fleet builders."""
+    names = scenarios.list_scenarios()
+    kinds = {scenarios.get(n).arrivals.kind for n in names}
+    assert {"poisson", "mmpp", "diurnal", "flash-crowd"} <= kinds
+    assert {"paper", "aws"} <= set(scenarios.list_fleets())
+    assert "poisson" in names
+
+
+# ------------------------------------------------------------ serialization
+def test_scenario_json_roundtrip_all_builtins():
+    for name in scenarios.list_scenarios():
+        scn = scenarios.get(name)
+        back = scenarios.Scenario.from_json_dict(scn.to_json_dict())
+        assert back == scn, name
+
+
+def test_scenario_json_roundtrip_custom():
+    scn = scenarios.Scenario(
+        scenarios.MMPPArrivals(rate_ratio=4.0, p_stay=0.9),
+        scenarios.DriftMix(start=(0.7, 0.3), end=(0.2, 0.8)),
+        scenarios.ScaledDeadlines(0.8),
+        scenarios.GammaRuntimes(cv_by_type=(0.05, 0.4)),
+        fleet=scenarios.RangeFleet(n_task_types=2, n_machines=3, seed=1),
+    )
+    back = scenarios.Scenario.from_json_dict(scn.to_json_dict())
+    assert back == scn
+    assert back.fleet.build().eet.shape == (2, 3)
+
+
+def test_component_from_json_unknown_kind():
+    with pytest.raises(ValueError):
+        scenarios.component_from_json("arrivals", {"kind": "nope"})
+
+
+def test_scenario_hashable_and_replace():
+    scn = scenarios.get("bursty")
+    assert hash(scn) == hash(scenarios.get("bursty"))
+    tweaked = scenarios.replace(
+        scn, arrivals=dataclasses.replace(scn.arrivals, rate_ratio=16.0))
+    assert tweaked != scn and tweaked.arrivals.rate_ratio == 16.0
+
+
+# ------------------------------------------------------- parameter checking
+def test_component_parameter_validation():
+    with pytest.raises(ValueError):
+        scenarios.MMPPArrivals(rate_ratio=0.5)
+    with pytest.raises(ValueError):
+        scenarios.MMPPArrivals(burst_frac=1.5)
+    with pytest.raises(ValueError):
+        # jointly infeasible: quiet-phase exit probability 4.5 > 1 would
+        # silently break the nominal-rate normalization
+        scenarios.MMPPArrivals(p_stay=0.5, burst_frac=0.9)
+    with pytest.raises(ValueError):
+        scenarios.DiurnalArrivals(amplitude=1.2)
+    with pytest.raises(ValueError):
+        scenarios.FlashCrowdArrivals(spike_mult=0.5)
+    with pytest.raises(ValueError):
+        scenarios.ScaledDeadlines(0.0)
+    with pytest.raises(ValueError):
+        scenarios.LognormalRuntimes(sigma=-1.0)
