@@ -24,14 +24,15 @@ _SWEEP_CACHE: dict = {}
 
 
 def _sweep(heuristics, rates, system, full, *, reps=None, tasks=None,
-           seed=0, scenario="poisson"):
+           seed=0, scenario="poisson", observers=()):
     """One batched sweep: the whole figure's grid in one jit+vmap.
 
     Memoized on the full grid key — figures that read different reductions
     of the same grid (e.g. Figs. 3 and 4) share one simulation. The
     ``scenario`` axis (registered name from :mod:`repro.scenarios`) lets
     beyond-paper benchmarks reuse the same machinery under bursty /
-    diurnal / heavy-tail workloads.
+    diurnal / heavy-tail workloads; the ``observers`` axis
+    (:mod:`repro.core.observe`) attaches time-resolved telemetry.
     """
     spec = experiments.SweepSpec(
         system=system,
@@ -41,6 +42,7 @@ def _sweep(heuristics, rates, system, full, *, reps=None, tasks=None,
         n_tasks=tasks if tasks is not None else (2000 if full else 600),
         heuristics=tuple(heuristics),
         seed=seed,
+        observers=tuple(observers),
     )
     if spec not in _SWEEP_CACHE:  # frozen dataclass: hashable, collision-proof
         _SWEEP_CACHE[spec] = experiments.run_sweep(spec)
@@ -305,6 +307,53 @@ def scenario_stress(full=False):
     return rows, derived
 
 
+def fairness_trajectory(full=False):
+    """Beyond-paper: the Fig. 7 fairness picture resolved *over time*.
+
+    Attaches the ``fairness_trajectory`` + ``timeline`` observers to the
+    ELARE-vs-FELARE comparison at the Fig. 7 operating point and reads the
+    suffered-type indicator per time bucket: how long each policy leaves
+    some task type below the fairness limit ε = μ − f·σ (Alg. 4). Also a
+    consistency check that the time series really is the engine's own
+    state: the final timeline bucket must equal the end-of-trace Metrics.
+    """
+    hs = ("ELARE", "FELARE")
+    res = _sweep(hs, [5.0], "paper", full,
+                 reps=30 if full else 8, tasks=2000 if full else 600,
+                 observers=("fairness_trajectory", "timeline"))
+    suffered = res.aux["fairness_trajectory"]["suffered"]  # (H,1,K,B,S)
+    tl_completed = res.aux["timeline"]["completed"]        # (H,1,K,B,S)
+    rows, frac = [], {}
+    B = suffered.shape[3]
+    for h_i, h in enumerate(hs):
+        # fraction of (replicate, bucket) samples with >= 1 suffered type,
+        # and the mean number of suffered types per bucket
+        any_suffered = suffered[h_i, 0].any(-1)            # (K, B)
+        frac[h] = float(any_suffered.mean())
+        per_quarter = any_suffered.reshape(
+            any_suffered.shape[0], 4, B // 4).mean((0, 2))
+        rows.append({
+            "fig": "fairness-trajectory", "heuristic": h,
+            "suffered_frac": round(frac[h], 4),
+            **{f"q{i+1}": round(float(x), 4)
+               for i, x in enumerate(per_quarter)},
+            "mean_suffered_types": round(
+                float(suffered[h_i, 0].sum(-1).mean()), 4),
+        })
+    consistent = bool(
+        np.array_equal(tl_completed[:, :, :, -1],
+                       np.asarray(res.metrics.completed_by_type)))
+    derived = {
+        "claim": "time-resolved telemetry is engine state (final bucket == "
+                 "Metrics); FELARE's suffered-type exposure reported",
+        "elare_suffered_frac": round(frac["ELARE"], 4),
+        "felare_suffered_frac": round(frac["FELARE"], 4),
+        "timeline_consistent": consistent,
+        "pass": consistent,
+    }
+    return rows, derived
+
+
 ALL = {
     "fig3_pareto": fig3_pareto,
     "fig4_wasted_energy": fig4_wasted_energy,
@@ -314,4 +363,5 @@ ALL = {
     "fig8_aws_fairness": fig8_aws_fairness,
     "table_overhead": table_overhead,
     "scenario_stress": scenario_stress,
+    "fairness_trajectory": fairness_trajectory,
 }

@@ -4,14 +4,96 @@ Prints ``name,us_per_call,derived`` CSV per the harness contract, then a
 human-readable block per figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig4] [--full]
+
+``--perf-out DIR`` instead runs the engine perf benchmark (the hot
+vmapped sweep, observers off/on) and appends a ``BENCH_<n>.json``
+artifact under DIR — one numbered file per run, so the directory
+accumulates the project's wall-clock/compile-time trajectory over time.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import pathlib
+import re
 import time
 
-from benchmarks import ablations, paper_figures, roofline_report
+
+def perf_vmapped_sweep(*, reps: int = 4, n_tasks: int = 300,
+                       rates=(2.0, 4.0)) -> dict:
+    """Wall-clock + compile time of the hot vmapped-sweep path.
+
+    Measures ``engine.simulate_batch`` (the cached ``_simulate_jit``
+    entry: cold call = trace+compile+run, warm call = run only) for
+    ELARE over a (rates x reps) CRN trace stack, with observers off and
+    with the timeline+task_log observers attached, plus one end-to-end
+    ``run_sweep`` wall-clock for scale.
+    """
+    import jax
+
+    from repro import experiments
+    from repro.core import api, engine
+    from repro.datapipe import synthetic
+
+    system = api.paper_system()
+    stacked = synthetic.trace_stack(
+        jax.random.PRNGKey(0), tuple(rates), reps, n_tasks, system.eet
+    )
+    flat = jax.tree.map(
+        lambda x: x.reshape((len(rates) * reps,) + x.shape[2:]), stacked
+    )
+
+    results = []
+    for observers in ((), ("timeline", "task_log")):
+        # fresh observer instances would share the jit cache across rounds;
+        # the cache key includes the observers tuple, so off/on differ.
+        t0 = time.perf_counter()
+        out = engine.simulate_batch(flat, system, "ELARE",
+                                    observers=observers)
+        jax.block_until_ready(out)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out = engine.simulate_batch(flat, system, "ELARE",
+                                    observers=observers)
+        jax.block_until_ready(out)
+        warm_s = time.perf_counter() - t0
+        results.append({
+            "observers": list(observers),
+            "cold_s": round(cold_s, 4),
+            "warm_s": round(warm_s, 4),
+            "compile_s": round(cold_s - warm_s, 4),
+        })
+
+    spec = experiments.SweepSpec(
+        rates=tuple(rates), reps=reps, n_tasks=n_tasks,
+        heuristics=("MM", "ELARE", "FELARE"), seed=0,
+    )
+    t0 = time.perf_counter()
+    experiments.run_sweep(spec)
+    sweep_s = time.perf_counter() - t0
+
+    return {
+        "bench": "vmapped_sweep",
+        "unix_time": round(time.time(), 1),
+        "config": {"reps": reps, "n_tasks": n_tasks, "rates": list(rates),
+                   "heuristic": "ELARE"},
+        "simulate_batch": results,
+        "run_sweep_3heuristics_s": round(sweep_s, 4),
+    }
+
+
+def write_perf_artifact(outdir) -> pathlib.Path:
+    """Run the perf bench and write the next ``BENCH_<n>.json`` in outdir."""
+    outdir = pathlib.Path(outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    seen = [int(m.group(1)) for p in outdir.glob("BENCH_*.json")
+            if (m := re.fullmatch(r"BENCH_(\d+)\.json", p.name))]
+    path = outdir / f"BENCH_{max(seen, default=0) + 1}.json"
+    payload = perf_vmapped_sweep()
+    path.write_text(json.dumps(payload, indent=2))
+    print(json.dumps(payload, indent=2))
+    print(f"wrote {path}")
+    return path
 
 
 def main() -> None:
@@ -19,7 +101,16 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale (30 traces x 2000 tasks)")
+    ap.add_argument("--perf-out", default=None, metavar="DIR",
+                    help="run only the engine perf benchmark and append a "
+                         "BENCH_<n>.json artifact under DIR")
     args = ap.parse_args()
+
+    if args.perf_out:
+        write_perf_artifact(args.perf_out)
+        return
+
+    from benchmarks import ablations, paper_figures, roofline_report
 
     benches = dict(paper_figures.ALL)
     benches.update(ablations.ALL)

@@ -8,12 +8,14 @@ batch via `repro.experiments`.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--tasks 1000] [--traces 8]
       [--scenario bursty]   # any registered workload scenario
+      [--observers timeline,fairness_trajectory]  # engine telemetry
 """
 import argparse
 
 import numpy as np
 
 from repro import experiments, scenarios
+from repro.core import observe
 
 
 def main():
@@ -26,7 +28,13 @@ def main():
                     choices=scenarios.list_scenarios(),
                     help="workload scenario (default: the paper's "
                          "stationary Poisson)")
+    ap.add_argument("--observers", default="",
+                    help="comma list of engine observers to attach "
+                         f"(registered: {','.join(observe.list_observers())})")
     args = ap.parse_args()
+    observers = tuple(
+        o.strip() for o in args.observers.split(",") if o.strip()
+    )
 
     heuristics = ("MM", "MSD", "MMU", "ELARE", "FELARE")
     spec = experiments.SweepSpec(
@@ -36,6 +44,7 @@ def main():
         reps=args.traces,
         n_tasks=args.tasks,
         heuristics=heuristics,
+        observers=observers,
     )
     res = experiments.run_sweep(spec)
 
@@ -51,6 +60,25 @@ def main():
                   f"{res.wasted_pct[h_i, r_i]:7.2f} "
                   f"{int(np.sum(m.cancelled_by_type)):7d} "
                   f"{int(np.sum(m.missed_by_type)):6d}  [{per_type}]")
+        print()
+
+    if "timeline" in res.aux:
+        # a terminal-width sparkline of queue pressure over time, per
+        # heuristic at the highest rate (replicate 0)
+        blocks = " ▁▂▃▄▅▆▇█"
+        print("queue occupancy over time (last rate, replicate 0):")
+        for h_i, h in enumerate(heuristics):
+            q = res.aux["timeline"]["qlen"][h_i, -1, 0]
+            top = max(1, int(q.max()))
+            line = "".join(
+                blocks[min(8, int(8 * v / top))] for v in q)
+            print(f"  {h:9s} |{line}| peak {int(q.max())}")
+        print()
+    if "fairness_trajectory" in res.aux:
+        print("share of time with >=1 suffered task type (last rate):")
+        for h_i, h in enumerate(heuristics):
+            s = res.aux["fairness_trajectory"]["suffered"][h_i, -1]
+            print(f"  {h:9s} {100 * float(s.any(-1).mean()):5.1f}%")
         print()
 
     print("Expected pattern (the paper's claims):")

@@ -7,14 +7,16 @@ Public surface:
   heuristics — ELARE / FELARE / MM / MSD / MMU
   fairness   — completion rates, suffered task types (Alg. 4)
   engine     — jittable/vmappable discrete-event simulator
+  observe    — composable engine observers (timeline, task_log,
+               fairness_trajectory, energy_budget) behind a registry
   pyengine   — independent pure-Python oracle
   api        — experiment-level helpers (paper_system, run_study)
 """
 from repro.core import api, eet, engine, equations, fairness, heuristics
-from repro.core import pyengine, workload
+from repro.core import observe, pyengine, workload
 from repro.core.types import Metrics, SystemSpec, Trace
 
 __all__ = [
     "api", "eet", "engine", "equations", "fairness", "heuristics",
-    "pyengine", "workload", "Metrics", "SystemSpec", "Trace",
+    "observe", "pyengine", "workload", "Metrics", "SystemSpec", "Trace",
 ]

@@ -80,12 +80,16 @@ class StudyResult:
         energy/makespan leaves are (K,) floats.
       p_dyn: (M,) per-machine dynamic power of the simulated system —
         needed to normalize :attr:`wasted_energy_pct`.
+      aux: observer outputs for this cell, keyed by observer name (every
+        leaf carries the leading K-replicate dim); ``None`` when the study
+        attached no observers.
     """
 
     heuristic: str
     arrival_rate: float
     metrics: Metrics  # batched over traces
     p_dyn: np.ndarray = dataclasses.field(repr=False)
+    aux: dict | None = dataclasses.field(default=None, repr=False)
 
     @property
     def completion_rate(self) -> float:
@@ -134,7 +138,7 @@ class StudyResult:
 
 def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
               n_traces: int = 30, n_tasks: int = 2000, seed: int = 0,
-              cv_run: float = 0.1, scenario="poisson"):
+              cv_run: float = 0.1, scenario="poisson", observers=()):
     """The paper's experiment template for one heuristic.
 
     Thin wrapper over :func:`repro.experiments.run_sweep`: synthesizes
@@ -156,6 +160,10 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
         (:func:`repro.scenarios.list_scenarios`) or a
         :class:`repro.scenarios.Scenario`; default is the paper's
         stationary Poisson workload.
+      observers: engine observers to attach — registered names
+        (:func:`repro.core.observe.list_observers`) or
+        :class:`repro.core.observe.Observer` instances. Their per-cell
+        outputs land on :attr:`StudyResult.aux`.
 
     Returns:
       list[StudyResult] of length R, in ``arrival_rates`` order.
@@ -171,12 +179,26 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
         heuristics=(heuristic,),
         seed=seed,
         cv_run=cv_run,
+        observers=tuple(observers),
     )
     result = experiments.run_sweep(sweep_spec)
+
+    def cell_aux(r_i):
+        if not result.aux:
+            return None
+
+        def take(x):
+            if isinstance(x, dict):
+                return {k: take(v) for k, v in x.items()}
+            return x[0, r_i]
+
+        return take(result.aux)
+
     return [
         StudyResult(
             heuristic, float(rate), result.metrics_for(heuristic, rate),
             p_dyn=np.asarray(spec.p_dyn),
+            aux=cell_aux(r_i),
         )
-        for rate in sweep_spec.rates
+        for r_i, rate in enumerate(sweep_spec.rates)
     ]

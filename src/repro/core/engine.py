@@ -12,11 +12,25 @@ traces is one ``vmap``. Semantics follow Sec. III of the paper:
   * a queued task whose deadline passed before it starts is dropped with zero
     energy (Eq. 2 row 3);
   * per-type completion counters feed the fairness monitor continuously.
+
+Each event is processed as four named stages, threading an
+:class:`~repro.core.types.EngineState` = ``(SimState, aux)``:
+
+  ``finalize`` -> ``admit`` -> ``map`` -> ``start``
+
+After every stage, each attached :class:`~repro.core.observe.Observer`
+folds the stage name and the fresh :class:`~repro.core.types.SimState`
+into its own fixed-shape ``aux`` pytree, so time-resolved telemetry
+(queue/energy/fairness trajectories, per-task logs) rides inside the same
+single jitted ``while_loop`` — and *dynamic* observers (the energy
+budget) can expose a ``halted`` flag the engine consults to stop
+admitting work (Eq. 2's energy-limited regime). With no observers the
+loop is structurally and bit-for-bit identical to the bare engine.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,32 +45,17 @@ from repro.core.types import (
     QUEUED,
     RUNNING,
     UNARRIVED,
+    EngineState,
     Metrics,
+    SimState,
     SystemArrays,
     Trace,
 )
 
 INF = jnp.float32(jnp.inf)
 
-
-class SimState(NamedTuple):
-    now: jnp.ndarray            # ()
-    status: jnp.ndarray         # (N,) int32
-    run_task: jnp.ndarray       # (M,) int32, -1 idle
-    run_start: jnp.ndarray      # (M,)
-    run_end_act: jnp.ndarray    # (M,) actual completion (inf if idle)
-    run_end_exp: jnp.ndarray    # (M,) expected completion (for the mapper)
-    run_success: jnp.ndarray    # (M,) bool
-    queue: jnp.ndarray          # (M, Q) int32, -1 empty
-    qlen: jnp.ndarray           # (M,) int32
-    busy_time: jnp.ndarray      # (M,)
-    e_dyn: jnp.ndarray          # ()
-    e_wasted: jnp.ndarray       # ()
-    completed: jnp.ndarray      # (S,) int32
-    missed: jnp.ndarray         # (S,) int32
-    cancelled: jnp.ndarray      # (S,) int32
-    arrived: jnp.ndarray        # (S,) int32
-    steps: jnp.ndarray          # () int32
+#: Stage names, in event order. Observers receive each after it ran.
+STAGES = ("finalize", "admit", "map", "start")
 
 
 def _init_state(trace: Trace, n_machines: int, queue_size: int,
@@ -85,10 +84,15 @@ def _init_state(trace: Trace, n_machines: int, queue_size: int,
     )
 
 
-def _next_event_time(st: SimState, trace: Trace) -> jnp.ndarray:
+def _next_event_time(st: SimState, trace: Trace,
+                     halted: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     pending = st.status == PENDING
     unarrived = st.status == UNARRIVED
     t_arr = jnp.min(jnp.where(unarrived, trace.arrival, jnp.inf))
+    if halted is not None:
+        # energy-limited shutdown: un-admitted arrivals no longer drive
+        # events (they would otherwise pin the next-event time forever).
+        t_arr = jnp.where(halted, jnp.inf, t_arr)
     t_comp = jnp.min(st.run_end_act)
     # progress guard: earliest pending deadline (so stale tasks get purged
     # even when no machine is busy and no arrivals remain).
@@ -96,7 +100,11 @@ def _next_event_time(st: SimState, trace: Trace) -> jnp.ndarray:
     return jnp.minimum(jnp.minimum(t_arr, t_comp), t_dead)
 
 
-def _finalize_completions(st: SimState, trace: Trace, sysarr: SystemArrays):
+# ---------------------------------------------------------------------------
+# Event stages. Each is a pure SimState -> SimState map; the loop body runs
+# them in STAGES order and hands the result to every observer in between.
+# ---------------------------------------------------------------------------
+def _stage_finalize(st: SimState, trace: Trace, sysarr: SystemArrays):
     """Close out machines whose running task's actual end <= now."""
     done = (st.run_task >= 0) & (st.run_end_act <= st.now)
     idx = jnp.where(done, st.run_task, 0)
@@ -130,16 +138,122 @@ def _finalize_completions(st: SimState, trace: Trace, sysarr: SystemArrays):
     )
 
 
-def _admit_arrivals(st: SimState, trace: Trace):
+def _stage_admit(st: SimState, trace: Trace,
+                 halted: Optional[jnp.ndarray] = None):
+    """Admit newly-arrived tasks to the arriving queue.
+
+    When a dynamic observer reports ``halted`` (battery exhausted), the
+    system stops taking work: nothing is admitted, every pending task is
+    cancelled, and local queues are flushed (their tasks cancelled with
+    zero energy). Tasks already running finish normally — the one-event
+    slack the energy-budget contract allows.
+    """
     newly = (st.status == UNARRIVED) & (trace.arrival <= st.now)
+    if halted is not None:
+        newly = newly & ~halted
     status = jnp.where(newly, PENDING, st.status)
     arrived = st.arrived + jax.ops.segment_sum(
         newly.astype(jnp.int32), trace.task_type, st.arrived.shape[0]
     )
-    return st._replace(status=status, arrived=arrived)
+    st = st._replace(status=status, arrived=arrived)
+    if halted is None:
+        return st
+    return _halt_shutdown(st, trace, halted)
 
 
-def _start_tasks(st: SimState, trace: Trace, sysarr: SystemArrays):
+def _halt_shutdown(st: SimState, trace: Trace, halted: jnp.ndarray):
+    """Cancel pending tasks and flush local queues once ``halted``."""
+    n, n_types = st.status.shape[0], st.cancelled.shape[0]
+    drop = halted & (st.status == PENDING)
+    status = jnp.where(drop, CANCELLED, st.status)
+    cancelled = st.cancelled + jax.ops.segment_sum(
+        drop.astype(jnp.int32), trace.task_type, n_types
+    )
+    victim = halted & (st.queue >= 0)
+    vidx = jnp.where(victim, st.queue, n)  # OOB sentinel -> dropped
+    status = status.at[vidx.reshape(-1)].set(CANCELLED, mode="drop")
+    cancelled = cancelled + jax.ops.segment_sum(
+        victim.reshape(-1).astype(jnp.int32),
+        trace.task_type[jnp.clip(vidx, 0, n - 1)].reshape(-1),
+        n_types,
+    )
+    return st._replace(
+        status=status,
+        cancelled=cancelled,
+        queue=jnp.where(victim, -1, st.queue),
+        qlen=jnp.where(halted, 0, st.qlen),
+    )
+
+
+def _stage_map(st: SimState, trace: Trace, sysarr: SystemArrays,
+               select_fn: Callable, fairness_factor: float, n_types: int):
+    """Run the mapping policy and apply its MapAction."""
+    suffered = fairness.suffered_types(
+        st.completed, st.arrived, fairness_factor
+    )
+    view = MachineView(
+        avail_base=jnp.maximum(
+            jnp.where(st.run_task >= 0, st.run_end_exp, st.now),
+            st.now,
+        ),
+        queue=st.queue,
+        qlen=st.qlen,
+    )
+    action = select_fn(
+        st.now,
+        st.status == PENDING,
+        trace.task_type,
+        trace.deadline,
+        view,
+        sysarr,
+        suffered,
+    )
+    return _apply_action(st, trace, action, n_types)
+
+
+def _apply_action(st: SimState, trace: Trace, action, n_types: int):
+    """Apply a MapAction: queue evictions, proactive drops, assignments."""
+    M, Q = st.queue.shape
+    # --- queue evictions (FELARE victims) -> CANCELLED ----------------------
+    victim = action.queue_drop & (st.queue >= 0)
+    vidx = jnp.where(victim, st.queue, st.status.shape[0])
+    status = st.status.at[vidx.reshape(-1)].set(CANCELLED, mode="drop")
+    cancelled = st.cancelled + jax.ops.segment_sum(
+        victim.reshape(-1).astype(jnp.int32),
+        trace.task_type[jnp.clip(vidx, 0, st.status.shape[0] - 1)].reshape(-1),
+        n_types,
+    )
+    # compact queues (stable: keep FCFS order of survivors)
+    keep = ~victim & (st.queue >= 0)
+    order = jnp.argsort(~keep, axis=1, stable=True)  # survivors first
+    queue = jnp.take_along_axis(jnp.where(keep, st.queue, -1), order, axis=1)
+    qlen = keep.sum(axis=1).astype(jnp.int32)
+
+    # --- proactive drops from the arriving queue ----------------------------
+    drop = action.drop & (status == PENDING)
+    status = jnp.where(drop, CANCELLED, status)
+    cancelled = cancelled + jax.ops.segment_sum(
+        drop.astype(jnp.int32), trace.task_type, n_types
+    )
+
+    # --- assignments: append to queue tails ---------------------------------
+    assign = action.assign  # (M,)
+    # guard: task must still be PENDING (not dropped above) and slot free
+    tstat = status[jnp.clip(assign, 0)]
+    ok = (assign >= 0) & (tstat == PENDING) & (qlen < Q)
+    slot = jnp.clip(qlen, 0, Q - 1)
+    queue = queue.at[jnp.arange(M), slot].set(
+        jnp.where(ok, assign, queue[jnp.arange(M), slot])
+    )
+    qlen = jnp.where(ok, qlen + 1, qlen)
+    status = status.at[jnp.where(ok, assign, st.status.shape[0])].set(
+        QUEUED, mode="drop"
+    )
+    return st._replace(status=status, queue=queue, qlen=qlen,
+                       cancelled=cancelled)
+
+
+def _stage_start(st: SimState, trace: Trace, sysarr: SystemArrays):
     """Idle machines pop their queue head (one pop per machine per event).
 
     A popped task whose deadline already passed "runs" for zero time with
@@ -185,103 +299,85 @@ def _start_tasks(st: SimState, trace: Trace, sysarr: SystemArrays):
     )
 
 
-def _apply_action(st: SimState, trace: Trace, action, n_types: int):
-    """Apply a MapAction: queue evictions, proactive drops, assignments."""
-    M, Q = st.queue.shape
-    # --- queue evictions (FELARE victims) -> CANCELLED ----------------------
-    victim = action.queue_drop & (st.queue >= 0)
-    vidx = jnp.where(victim, st.queue, st.status.shape[0])
-    status = st.status.at[vidx.reshape(-1)].set(CANCELLED, mode="drop")
-    cancelled = st.cancelled + jax.ops.segment_sum(
-        victim.reshape(-1).astype(jnp.int32),
-        trace.task_type[jnp.clip(vidx, 0, st.status.shape[0] - 1)].reshape(-1),
-        n_types,
-    )
-    # compact queues (stable: keep FCFS order of survivors)
-    keep = ~victim & (st.queue >= 0)
-    order = jnp.argsort(~keep, axis=1, stable=True)  # survivors first
-    queue = jnp.take_along_axis(jnp.where(keep, st.queue, -1), order, axis=1)
-    qlen = keep.sum(axis=1).astype(jnp.int32)
-
-    # --- proactive drops from the arriving queue ----------------------------
-    drop = action.drop & (status == PENDING)
-    status = jnp.where(drop, CANCELLED, status)
-    cancelled = cancelled + jax.ops.segment_sum(
-        drop.astype(jnp.int32), trace.task_type, n_types
-    )
-
-    # --- assignments: append to queue tails ---------------------------------
-    assign = action.assign  # (M,)
-    # guard: task must still be PENDING (not dropped above) and slot free
-    tstat = status[jnp.clip(assign, 0)]
-    ok = (assign >= 0) & (tstat == PENDING) & (qlen < Q)
-    slot = jnp.clip(qlen, 0, Q - 1)
-    queue = queue.at[jnp.arange(M), slot].set(
-        jnp.where(ok, assign, queue[jnp.arange(M), slot])
-    )
-    qlen = jnp.where(ok, qlen + 1, qlen)
-    status = status.at[jnp.where(ok, assign, st.status.shape[0])].set(
-        QUEUED, mode="drop"
-    )
-    return st._replace(status=status, queue=queue, qlen=qlen,
-                       cancelled=cancelled)
+# Backwards-compatible aliases for the pre-stage-split helper names.
+_finalize_completions = _stage_finalize
+_admit_arrivals = _stage_admit
+_start_tasks = _stage_start
 
 
 def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
                    queue_size: int, fairness_factor: float = 1.0,
-                   max_steps: int | None = None) -> Callable:
-    """Build ``simulate(trace) -> Metrics`` for one mapping policy.
+                   max_steps: int | None = None,
+                   observers: tuple = ()) -> Callable:
+    """Build ``simulate(trace)`` for one mapping policy.
 
     ``select_fn(now, pending, task_type, deadline, view, sysarr, suffered)``
     is any :class:`repro.core.policy.Policy` (e.g. from
     ``policy.get(name)``) or a bare function with the same signature; it is
     closed over statically so jit specializes per policy.
+
+    ``observers`` is a tuple of :class:`repro.core.observe.Observer`
+    instances (hashable, closed over statically — attaching observers
+    never retraces per call). With ``observers=()`` the simulator returns
+    bare :class:`Metrics`, bit-identical to the pre-observer engine; with
+    observers it returns ``(Metrics, aux)`` where ``aux`` maps each
+    observer's name to its finalized pytree.
     """
     S, M = sysarr.eet.shape
+    observers = tuple(
+        ob.with_engine_config(fairness_factor=fairness_factor,
+                              queue_size=queue_size)
+        if hasattr(ob, "with_engine_config") else ob
+        for ob in observers
+    )
+    names = [ob.name for ob in observers]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate observer names {names}")
+    gaters = tuple(ob for ob in observers if getattr(ob, "is_dynamic", False))
 
-    def simulate(trace: Trace) -> Metrics:
+    def _halt(st, aux):
+        h = jnp.bool_(False)
+        for ob in gaters:
+            h = h | ob.halted(aux[ob.name], st)
+        return h
+
+    def simulate(trace: Trace):
         n = trace.arrival.shape[0]
         steps_cap = max_steps if max_steps is not None else 8 * n + 64
         st = _init_state(trace, M, queue_size, S)
+        aux = {ob.name: ob.init(trace, sysarr) for ob in observers}
 
-        def cond(st: SimState):
-            return (jnp.isfinite(_next_event_time(st, trace))
+        def cond(est: EngineState):
+            st, aux = est
+            halted = _halt(st, aux) if gaters else None
+            return (jnp.isfinite(_next_event_time(st, trace, halted))
                     & (st.steps < steps_cap))
 
-        def body(st: SimState):
-            t = _next_event_time(st, trace)
+        def notify(stage, aux, st):
+            return {
+                ob.name: ob.on_event(stage, aux[ob.name], st, trace, sysarr)
+                for ob in observers
+            }
+
+        def body(est: EngineState):
+            st, aux = est
+            halted = _halt(st, aux) if gaters else None
+            t = _next_event_time(st, trace, halted)
             st = st._replace(now=jnp.maximum(t, st.now))
-            st = _finalize_completions(st, trace, sysarr)
-            st = _admit_arrivals(st, trace)
+            st = _stage_finalize(st, trace, sysarr)
+            aux = notify("finalize", aux, st)
+            st = _stage_admit(st, trace, halted)
+            aux = notify("admit", aux, st)
+            st = _stage_map(st, trace, sysarr, select_fn, fairness_factor, S)
+            aux = notify("map", aux, st)
+            st = _stage_start(st, trace, sysarr)
+            aux = notify("start", aux, st)
+            return EngineState(st._replace(steps=st.steps + 1), aux)
 
-            suffered = fairness.suffered_types(
-                st.completed, st.arrived, fairness_factor
-            )
-            view = MachineView(
-                avail_base=jnp.maximum(
-                    jnp.where(st.run_task >= 0, st.run_end_exp, st.now),
-                    st.now,
-                ),
-                queue=st.queue,
-                qlen=st.qlen,
-            )
-            action = select_fn(
-                st.now,
-                st.status == PENDING,
-                trace.task_type,
-                trace.deadline,
-                view,
-                sysarr,
-                suffered,
-            )
-            st = _apply_action(st, trace, action, S)
-            st = _start_tasks(st, trace, sysarr)
-            return st._replace(steps=st.steps + 1)
-
-        st = jax.lax.while_loop(cond, body, st)
+        st, aux = jax.lax.while_loop(cond, body, EngineState(st, aux))
         makespan = st.now
         e_idle = (sysarr.p_idle * (makespan - st.busy_time)).sum()
-        return Metrics(
+        metrics = Metrics(
             completed_by_type=st.completed,
             missed_by_type=st.missed,
             cancelled_by_type=st.cancelled,
@@ -291,51 +387,74 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
             energy_idle=e_idle,
             makespan=makespan,
         )
+        if not observers:
+            return metrics
+        aux_out = {ob.name: ob.finalize(aux[ob.name], st) for ob in observers}
+        return metrics, aux_out
 
     return simulate
 
 
-@functools.partial(jax.jit, static_argnames=("select_fn", "queue_size",
-                                             "fairness_factor", "max_steps"))
-def _simulate_jit(trace, eet, p_dyn, p_idle, select_fn, queue_size,
-                  fairness_factor, max_steps):
+@functools.partial(jax.jit, static_argnames=("select_fn", "observers",
+                                             "queue_size", "fairness_factor",
+                                             "max_steps", "batched"))
+def _simulate_jit(trace, eet, p_dyn, p_idle, select_fn, observers,
+                  queue_size, fairness_factor, max_steps, batched):
+    """The one cached jit entry point behind ``simulate``/``simulate_batch``.
+
+    Keyed on ``(select_fn, observers, static config)`` — re-calling with
+    the same (frozen, hashable) policy and observer objects hits the jit
+    cache instead of re-tracing, including the vmapped batch path.
+    """
     sysarr = SystemArrays(eet=eet, p_dyn=p_dyn, p_idle=p_idle)
     sim = make_simulator(
         select_fn, sysarr, queue_size=queue_size,
         fairness_factor=fairness_factor, max_steps=max_steps,
+        observers=observers,
     )
-    return sim(trace)
+    return jax.vmap(sim)(trace) if batched else sim(trace)
 
 
-def simulate(trace: Trace, spec, heuristic: str, *, max_steps=None) -> Metrics:
-    """Convenience entry point: one trace, one SystemSpec, one heuristic.
+def _simulate(trace, spec, heuristic, observers, max_steps, batched):
+    from repro.core import observe, policy
 
-    The name is resolved through the policy registry *outside* the jit
-    boundary, and the (frozen, hashable) policy object is the static cache
-    key — so re-registering a name with ``overwrite=True`` takes effect
-    instead of silently hitting a stale name-keyed jit cache.
-    """
-    from repro.core import policy
-
+    obs = observe.resolve(observers)
     return _simulate_jit(
         trace,
         jnp.asarray(spec.eet, jnp.float32),
         jnp.asarray(spec.p_dyn, jnp.float32),
         jnp.asarray(spec.p_idle, jnp.float32),
-        policy.get(heuristic),
+        policy.get(heuristic) if isinstance(heuristic, str) else heuristic,
+        obs,
         spec.queue_size,
         float(spec.fairness_factor),
         max_steps,
+        batched,
     )
 
 
-def simulate_batch(traces: Trace, spec, heuristic: str, *, max_steps=None):
-    """vmap over a stacked batch of traces (the paper's 30-trace studies)."""
-    sysarr = spec.as_jax()
-    from repro.core import policy
+def simulate(trace: Trace, spec, heuristic: str, *, observers=(),
+             max_steps=None):
+    """Convenience entry point: one trace, one SystemSpec, one heuristic.
 
-    sim = make_simulator(
-        policy.get(heuristic), sysarr, queue_size=spec.queue_size,
-        fairness_factor=float(spec.fairness_factor), max_steps=max_steps,
-    )
-    return jax.jit(jax.vmap(sim))(traces)
+    The heuristic name is resolved through the policy registry and
+    observer names through the observer registry *outside* the jit
+    boundary; the (frozen, hashable) policy/observer objects are the
+    static cache key — so re-registering a name with ``overwrite=True``
+    takes effect instead of silently hitting a stale name-keyed jit cache.
+
+    Returns :class:`Metrics` when ``observers`` is empty, else
+    ``(Metrics, aux)`` with ``aux`` keyed by observer name.
+    """
+    return _simulate(trace, spec, heuristic, observers, max_steps, False)
+
+
+def simulate_batch(traces: Trace, spec, heuristic: str, *, observers=(),
+                   max_steps=None):
+    """vmap over a stacked batch of traces (the paper's 30-trace studies).
+
+    Shares the cached ``_simulate_jit`` with :func:`simulate`: calling it
+    in a loop over heuristics compiles each policy exactly once instead of
+    rebuilding and re-jitting the vmapped simulator per call.
+    """
+    return _simulate(traces, spec, heuristic, observers, max_steps, True)

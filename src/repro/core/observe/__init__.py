@@ -1,0 +1,106 @@
+"""Composable engine-observability API.
+
+The paper's premise is a battery-powered edge system whose fairness and
+energy behavior evolve *over time* (Figs. 5–8 are time/rate-resolved),
+yet an end-of-trace :class:`~repro.core.types.Metrics` tuple is frozen.
+This package gives the engine the same composable, registry-backed shape
+the policy and scenario layers have:
+
+    Observer = init × on_event(stage, ...) × finalize  [× halted]
+
+Built-ins (all fixed-shape JAX, riding inside the single jitted — and
+vmapped — event loop with CRN preserved):
+
+  * ``timeline`` — :class:`Timeline`, K-bucket queue-occupancy / energy /
+    per-type completion time series;
+  * ``fairness_trajectory`` — :class:`FairnessTrajectory`, the Alg. 4
+    suffered-type indicator over time;
+  * ``task_log`` — :class:`TaskLog`, per-task map/start/end times, final
+    status and machine (oracle-checked event-for-event);
+  * ``energy_budget`` — :class:`EnergyBudget`, the first *dynamic*
+    observer: a finite battery capacity the engine consults to stop
+    admitting work (Eq. 2's energy-limited regime; inert at the default
+    ``capacity=inf``).
+
+See ``docs/engine.md`` for the event-stage contract and a worked
+"writing an observer" example.
+"""
+from __future__ import annotations
+
+from repro.core.observe.base import (
+    Observer,
+    bucket_index,
+    forward_fill,
+)
+from repro.core.observe.energy import EnergyBudget
+from repro.core.observe.registry import (
+    get,
+    is_registered,
+    list_observers,
+    register,
+    resolve,
+    unregister,
+)
+from repro.core.observe.tasklog import TaskLog
+from repro.core.observe.timeline import FairnessTrajectory, Timeline
+
+__all__ = [
+    "EnergyBudget",
+    "FairnessTrajectory",
+    "Observer",
+    "TaskLog",
+    "Timeline",
+    "bucket_index",
+    "describe",
+    "forward_fill",
+    "from_json_dict",
+    "get",
+    "is_registered",
+    "list_observers",
+    "register",
+    "resolve",
+    "unregister",
+]
+
+#: JSON ``kind`` -> built-in observer class, for spec round-tripping.
+_KINDS = {
+    "timeline": Timeline,
+    "fairness_trajectory": FairnessTrajectory,
+    "task_log": TaskLog,
+    "energy_budget": EnergyBudget,
+}
+
+
+def from_json_dict(d: dict):
+    """Rebuild a built-in observer from its ``to_json_dict`` form."""
+    kind = d.get("kind")
+    cls = _KINDS.get(kind)
+    if cls is None:
+        raise ValueError(
+            f"unknown observer kind {kind!r}; choose from {sorted(_KINDS)}"
+        )
+    params = {k: v for k, v in d.items() if k != "kind"}
+    if hasattr(cls, "from_json_dict"):
+        return cls.from_json_dict(params)
+    return cls(**params)
+
+
+def describe(name_or_observer) -> str:
+    """One-line human description of an observer (for ``--list-observers``)."""
+    ob = (get(name_or_observer) if isinstance(name_or_observer, str)
+          else name_or_observer)
+    doc = (ob.__class__.__doc__ or "").strip().splitlines()
+    head = getattr(ob, "summary", None) or (
+        doc[0].rstrip(".") if doc else ob.__class__.__name__)
+    tag = " [dynamic]" if getattr(ob, "is_dynamic", False) else ""
+    return f"{head}{tag}"
+
+
+for _name, _ob in [
+    ("timeline", Timeline()),
+    ("fairness_trajectory", FairnessTrajectory()),
+    ("task_log", TaskLog()),
+    ("energy_budget", EnergyBudget()),
+]:
+    register(_name, _ob)
+del _name, _ob

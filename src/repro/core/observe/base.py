@@ -1,0 +1,114 @@
+"""The Observer protocol: composable, jit-resident engine telemetry.
+
+An :class:`Observer` threads its own fixed-shape pytree (``aux``) through
+the engine's event loop, next to — never inside — the core
+:class:`~repro.core.types.SimState`. The contract mirrors the policy and
+scenario algebras: observers are small frozen (hashable) objects the
+engine closes over statically, so attaching one specializes the jit once
+and never retraces per call, and the whole computation still vmaps over
+trace batches with CRN preserved.
+
+Lifecycle, all inside the jitted simulator:
+
+  * ``init(trace, sysarr) -> aux`` — allocate the fixed-shape state.
+  * ``on_event(stage, aux, st, trace, sysarr) -> aux`` — called after
+    every stage of every event, in :data:`repro.core.engine.STAGES` order
+    (``finalize``/``admit``/``map``/``start``); ``stage`` is a static
+    Python string, so per-stage branching costs nothing at runtime.
+  * ``finalize(aux, st) -> pytree`` — shape the carried state into the
+    result returned next to :class:`~repro.core.types.Metrics`.
+
+**The fixed-shape-aux contract:** every leaf of ``aux`` must keep a
+static shape and dtype across ``init``/``on_event`` — it lives in a
+``lax.while_loop`` carry. Grow-as-you-go telemetry (e.g. time series)
+must therefore pre-allocate (K buckets, N tasks, ...) and scatter into
+place, exactly like the engine's own state.
+
+*Dynamic* observers additionally set ``is_dynamic = True`` and implement
+``halted(aux, st) -> () bool``: the engine ORs these flags each event and,
+once true, stops admitting work (see
+:class:`repro.core.observe.energy.EnergyBudget`). Observe-only observers
+leave ``is_dynamic`` False and are guaranteed not to perturb the
+simulation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core.types import SimState, SystemArrays, Trace
+
+
+class Observer:
+    """Base class for engine observers (see module docstring).
+
+    Subclasses should be frozen dataclasses (hashable — the engine uses
+    the instance as part of its static jit cache key) and set ``name`` to
+    a unique, stable identifier: it keys the observer's slice of
+    ``EngineState.aux`` and of the ``(Metrics, aux)`` result.
+    """
+
+    name: str = "observer"
+    #: Dynamic observers may halt admission via :meth:`halted`.
+    is_dynamic: bool = False
+
+    def with_engine_config(self, **config) -> "Observer":
+        """Bind engine configuration just before simulation.
+
+        ``make_simulator`` calls this with the engine's scalars (currently
+        ``fairness_factor`` and ``queue_size``) so observers that mirror
+        engine-config-dependent quantities can inherit them instead of
+        requiring the caller to keep two copies in sync
+        (:class:`~repro.core.observe.timeline.FairnessTrajectory` is the
+        built-in example). Default: return self unchanged.
+        """
+        return self
+
+    def init(self, trace: Trace, sysarr: SystemArrays) -> Any:
+        """Allocate this observer's fixed-shape aux pytree."""
+        return {}
+
+    def on_event(self, stage: str, aux: Any, st: SimState, trace: Trace,
+                 sysarr: SystemArrays) -> Any:
+        """Fold one engine stage into ``aux`` (same structure in and out)."""
+        return aux
+
+    def finalize(self, aux: Any, st: SimState) -> Any:
+        """Shape the carried aux into the returned result pytree."""
+        return aux
+
+    def halted(self, aux: Any, st: SimState) -> jnp.ndarray:
+        """() bool — dynamic observers only; ORed into the engine's gate."""
+        return jnp.bool_(False)
+
+
+def bucket_index(now, horizon, n_buckets: int) -> jnp.ndarray:
+    """Map an event time onto one of ``n_buckets`` uniform buckets.
+
+    The horizon is a *dynamic* (trace-dependent) scalar, so one compiled
+    simulator serves every trace length; the bucket count is static, so
+    the series has a fixed shape and vmaps.
+    """
+    width = horizon / n_buckets
+    b = jnp.floor(now / jnp.maximum(width, 1e-9)).astype(jnp.int32)
+    return jnp.clip(b, 0, n_buckets - 1)
+
+
+def forward_fill(touched, series: dict, init: dict) -> dict:
+    """Carry the last written bucket forward over untouched ones.
+
+    ``series`` maps name -> (K, ...) array scattered at event buckets;
+    ``touched`` is the (K,) bool write mask; ``init`` gives the value
+    before the first event (bucket "-1"). Runs as a ``lax.scan`` over the
+    static bucket axis, inside jit.
+    """
+    import jax
+
+    def step(carry, xs):
+        t, vals = xs
+        new = {k: jnp.where(t, vals[k], carry[k]) for k in vals}
+        return new, new
+
+    _, filled = jax.lax.scan(step, init, (touched, series))
+    return filled

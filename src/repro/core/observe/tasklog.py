@@ -1,0 +1,68 @@
+"""Per-task event log observer (``task_log``).
+
+Records, for every task in the trace, the times of its lifecycle
+transitions and where it ran — the event-level ground truth the
+pure-Python oracle (:mod:`repro.core.pyengine`) cross-checks
+event-for-event. All (N,)-shaped, stamp-once semantics: a field is
+written at the first event whose stage shows the transition and never
+overwritten, so within-iteration stage ordering (map before start before
+the next finalize) is captured exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.observe.base import Observer
+from repro.core.types import COMPLETED, QUEUED, RUNNING, SimState
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskLog(Observer):
+    """Result pytree (all (N,) except noted):
+
+      ``map_time``   f32, when the task was assigned to a local queue
+                     (−1 = never mapped)
+      ``start_time`` f32, when it started executing (−1 = never started)
+      ``end_time``   f32, when it reached a terminal status (−1 = never)
+      ``machine``    int32, the machine it ran on (−1 = none)
+      ``status``     int32, final status code (see ``types.STATUS_NAMES``)
+    """
+
+    name: str = "task_log"
+    summary = ("Per-task map/start/end times, final status and machine "
+               "(oracle-checkable)")
+
+    def init(self, trace, sysarr):
+        n = trace.arrival.shape[0]
+        f = jnp.float32
+        return {
+            "map_time": jnp.full((n,), -1.0, f),
+            "start_time": jnp.full((n,), -1.0, f),
+            "end_time": jnp.full((n,), -1.0, f),
+            "machine": jnp.full((n,), -1, jnp.int32),
+        }
+
+    def on_event(self, stage, aux, st: SimState, trace, sysarr):
+        now = st.now
+
+        def stamp(t, mask):
+            return jnp.where(mask & (t < 0), now, t)
+
+        n = st.status.shape[0]
+        machine = aux["machine"].at[
+            jnp.where(st.run_task >= 0, st.run_task, n)
+        ].set(jnp.arange(st.run_task.shape[0], dtype=jnp.int32), mode="drop")
+        return {
+            "map_time": stamp(aux["map_time"], st.status == QUEUED),
+            "start_time": stamp(aux["start_time"], st.status == RUNNING),
+            "end_time": stamp(aux["end_time"], st.status >= COMPLETED),
+            "machine": machine,
+        }
+
+    def finalize(self, aux, st: SimState):
+        return {**aux, "status": st.status}
+
+    def to_json_dict(self) -> dict:
+        return {"kind": "task_log", "name": self.name}

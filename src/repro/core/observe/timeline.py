@@ -1,0 +1,154 @@
+"""Time-resolved telemetry observers: ``timeline`` and
+``fairness_trajectory``.
+
+Both sample the engine state into K uniform time buckets over the trace
+horizon (max deadline — no event can fire later), fixed-shape so the
+series jits and vmaps. Buckets with no event are forward-filled from the
+last observed value in ``finalize``, still inside the jit, so the output
+reads as a proper sampled time series (paper Figs. 5–8 are exactly such
+time/rate-resolved views).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.observe.base import Observer, bucket_index, forward_fill
+from repro.core.types import SimState, SystemArrays, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class Timeline(Observer):
+    """K-bucket queue-occupancy / energy / per-type completion series.
+
+    Result pytree (leaves lead with the K=``n_buckets`` axis):
+      ``t``         (K,)   right edge of each bucket (seconds)
+      ``qlen``      (K,)   total queued tasks at the last event <= t
+      ``running``   (K,)   busy machines at the last event <= t
+      ``e_dyn``     (K,)   cumulative dynamic energy
+      ``e_idle``    (K,)   cumulative idle energy (estimate at event time)
+      ``completed`` (K,S)  cumulative on-time completions per type
+      ``arrived``   (K,S)  cumulative arrivals per type
+      ``horizon``   ()     the sampled time horizon (max deadline)
+    """
+
+    n_buckets: int = 64
+    name: str = "timeline"
+
+    def init(self, trace: Trace, sysarr: SystemArrays):
+        K, S = self.n_buckets, sysarr.eet.shape[0]
+        f = jnp.float32
+        return {
+            "horizon": jnp.max(trace.deadline).astype(f),
+            "touched": jnp.zeros((K,), bool),
+            "qlen": jnp.zeros((K,), jnp.int32),
+            "running": jnp.zeros((K,), jnp.int32),
+            "e_dyn": jnp.zeros((K,), f),
+            "e_idle": jnp.zeros((K,), f),
+            "completed": jnp.zeros((K, S), jnp.int32),
+            "arrived": jnp.zeros((K, S), jnp.int32),
+        }
+
+    def on_event(self, stage, aux, st: SimState, trace, sysarr):
+        if stage != "start":  # sample once per event, at end-of-event state
+            return aux
+        b = bucket_index(st.now, aux["horizon"], self.n_buckets)
+        e_idle = (sysarr.p_idle * (st.now - st.busy_time)).sum()
+        return {
+            "horizon": aux["horizon"],
+            "touched": aux["touched"].at[b].set(True),
+            "qlen": aux["qlen"].at[b].set(st.qlen.sum()),
+            "running": aux["running"].at[b].set(
+                (st.run_task >= 0).sum().astype(jnp.int32)),
+            "e_dyn": aux["e_dyn"].at[b].set(st.e_dyn),
+            "e_idle": aux["e_idle"].at[b].set(e_idle),
+            "completed": aux["completed"].at[b].set(st.completed),
+            "arrived": aux["arrived"].at[b].set(st.arrived),
+        }
+
+    def finalize(self, aux, st: SimState):
+        K = self.n_buckets
+        series = {k: v for k, v in aux.items()
+                  if k not in ("horizon", "touched")}
+        init = {k: jnp.zeros(v.shape[1:], v.dtype) for k, v in series.items()}
+        filled = forward_fill(aux["touched"], series, init)
+        width = aux["horizon"] / K
+        filled["t"] = (jnp.arange(1, K + 1, dtype=jnp.float32) * width)
+        filled["horizon"] = aux["horizon"]
+        return filled
+
+    def to_json_dict(self) -> dict:
+        return {"kind": "timeline", "n_buckets": self.n_buckets,
+                "name": self.name}
+
+
+@dataclasses.dataclass(frozen=True)
+class FairnessTrajectory(Observer):
+    """Suffered-type indicator (Alg. 4) over K time buckets.
+
+    Samples the same mask the FELARE wrapper consults at each mapping
+    event, so the series answers the paper's Fig. 7/8 question *over
+    time*: which task types sat below the fairness limit ε = μ − f·σ, and
+    for how long. ``fairness_factor`` is an engine-config scalar (not
+    part of ``SystemArrays``); with the default ``None`` the engine binds
+    its own configured value via :meth:`with_engine_config`, so the
+    series always reflects the mask the mapper actually consulted. Set it
+    explicitly only to observe a *counterfactual* fairness limit.
+
+    Result: ``suffered`` (K,S) bool, ``cr`` (K,S) per-type completion
+    rate, ``t`` (K,) bucket edges, ``horizon`` ().
+    """
+
+    n_buckets: int = 64
+    fairness_factor: float | None = None
+    name: str = "fairness_trajectory"
+
+    def with_engine_config(self, *, fairness_factor=1.0, **config):
+        if self.fairness_factor is not None:
+            return self
+        return dataclasses.replace(self, fairness_factor=fairness_factor)
+
+    def init(self, trace: Trace, sysarr: SystemArrays):
+        K, S = self.n_buckets, sysarr.eet.shape[0]
+        return {
+            "horizon": jnp.max(trace.deadline).astype(jnp.float32),
+            "touched": jnp.zeros((K,), bool),
+            "suffered": jnp.zeros((K, S), bool),
+            "cr": jnp.ones((K, S), jnp.float32),
+        }
+
+    def on_event(self, stage, aux, st: SimState, trace, sysarr):
+        if stage != "map":  # sample the mask the mapper just consulted
+            return aux
+        from repro.core import fairness
+
+        b = bucket_index(st.now, aux["horizon"], self.n_buckets)
+        suffered = fairness.suffered_types(
+            st.completed, st.arrived, self.fairness_factor
+        )
+        cr = fairness.completion_rates(st.completed, st.arrived)
+        return {
+            "horizon": aux["horizon"],
+            "touched": aux["touched"].at[b].set(True),
+            "suffered": aux["suffered"].at[b].set(suffered),
+            "cr": aux["cr"].at[b].set(cr.astype(jnp.float32)),
+        }
+
+    def finalize(self, aux, st: SimState):
+        K = self.n_buckets
+        S = aux["suffered"].shape[1]
+        series = {"suffered": aux["suffered"], "cr": aux["cr"]}
+        init = {
+            "suffered": jnp.zeros((S,), bool),
+            "cr": jnp.ones((S,), jnp.float32),
+        }
+        filled = forward_fill(aux["touched"], series, init)
+        width = aux["horizon"] / K
+        filled["t"] = jnp.arange(1, K + 1, dtype=jnp.float32) * width
+        filled["horizon"] = aux["horizon"]
+        return filled
+
+    def to_json_dict(self) -> dict:
+        return {"kind": "fairness_trajectory", "n_buckets": self.n_buckets,
+                "fairness_factor": self.fairness_factor, "name": self.name}

@@ -69,7 +69,14 @@ def _lookup(table, kind, what):
 
 
 def simulate(trace, spec, heuristic: str):
-    """Run one trace; returns a dict mirroring Metrics."""
+    """Run one trace; returns a dict mirroring Metrics.
+
+    The dict also carries a ``"task_log"`` entry mirroring the JAX
+    engine's ``task_log`` observer (:mod:`repro.core.observe`): per-task
+    map/start/end times, machine and final status, stamped at the same
+    event timestamps — the cross-check is event-for-event, not just
+    end-of-trace.
+    """
     from repro.core import policy as policy_mod
 
     desc = policy_mod.describe(heuristic)
@@ -95,6 +102,16 @@ def simulate(trace, spec, heuristic: str):
     e_dyn = 0.0
     e_wasted = 0.0
     now = 0.0
+
+    # task_log mirror: stamped once, at the event that made the transition.
+    log_map = np.full(n, -1.0)
+    log_start = np.full(n, -1.0)
+    log_end = np.full(n, -1.0)
+    log_machine = np.full(n, -1, int)
+
+    def _end(k):
+        if log_end[k] < 0:
+            log_end[k] = now
 
     def next_event():
         ts = [arr[k] for k in range(n) if status[k] == UNARRIVED]
@@ -222,6 +239,7 @@ def simulate(trace, spec, heuristic: str):
             if now >= dl[k]:
                 status[k] = CANCELLED
                 cancelled[ttype[k]] += 1
+                _end(k)
                 pend.remove(k)
 
         if desc.fairness:
@@ -258,6 +276,7 @@ def simulate(trace, spec, heuristic: str):
                         t = m.queue.pop(qi)
                         status[t] = CANCELLED
                         cancelled[ttype[t]] += 1
+                        _end(t)
 
         free = [j for j in range(M) if len(machines[j].queue) < Q]
 
@@ -284,12 +303,15 @@ def simulate(trace, spec, heuristic: str):
                 if k not in assigned and hopeless(k):
                     status[k] = CANCELLED
                     cancelled[ttype[k]] += 1
+                    _end(k)
                     pend.remove(k)
 
         for j, k in assign.items():
             if status[k] == PENDING and len(machines[j].queue) < Q:
                 machines[j].queue.append(k)
                 status[k] = QUEUED
+                if log_map[k] < 0:
+                    log_map[k] = now
 
     def start_tasks():
         # One pop per machine per event; a dead-on-arrival task becomes a
@@ -301,6 +323,9 @@ def simulate(trace, spec, heuristic: str):
                 m.run = k
                 m.run_start = now
                 status[k] = RUNNING
+                if log_start[k] < 0:
+                    log_start[k] = now
+                    log_machine[k] = m.j
                 if now >= dl[k]:
                     m.run_success = False
                     m.run_end_act = now
@@ -334,6 +359,7 @@ def simulate(trace, spec, heuristic: str):
                     status[k] = MISSED
                     missed[ttype[k]] += 1
                     e_wasted += en
+                _end(k)
                 m.run = -1
                 m.run_end_act = np.inf
                 m.run_end_exp = F(now)
@@ -355,4 +381,11 @@ def simulate(trace, spec, heuristic: str):
         energy_wasted=e_wasted,
         energy_idle=e_idle,
         makespan=makespan,
+        task_log=dict(
+            map_time=log_map,
+            start_time=log_start,
+            end_time=log_end,
+            machine=log_machine,
+            status=status.copy(),
+        ),
     )

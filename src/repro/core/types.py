@@ -90,6 +90,47 @@ class MapAction(NamedTuple):
     queue_drop: jnp.ndarray  # (M, Q) bool victims evicted from local queues (FELARE)
 
 
+class SimState(NamedTuple):
+    """The engine's fixed-shape event-loop state (one trace).
+
+    Every field is a JAX array of static shape, so the whole state threads
+    through ``lax.while_loop`` and vmaps over trace batches. Observers
+    (:mod:`repro.core.observe`) receive this read-only at every event
+    stage; their own state rides next to it in :class:`EngineState.aux`.
+    """
+
+    now: jnp.ndarray            # ()
+    status: jnp.ndarray         # (N,) int32
+    run_task: jnp.ndarray       # (M,) int32, -1 idle
+    run_start: jnp.ndarray      # (M,)
+    run_end_act: jnp.ndarray    # (M,) actual completion (inf if idle)
+    run_end_exp: jnp.ndarray    # (M,) expected completion (for the mapper)
+    run_success: jnp.ndarray    # (M,) bool
+    queue: jnp.ndarray          # (M, Q) int32, -1 empty
+    qlen: jnp.ndarray           # (M,) int32
+    busy_time: jnp.ndarray      # (M,)
+    e_dyn: jnp.ndarray          # ()
+    e_wasted: jnp.ndarray       # ()
+    completed: jnp.ndarray      # (S,) int32
+    missed: jnp.ndarray         # (S,) int32
+    cancelled: jnp.ndarray      # (S,) int32
+    arrived: jnp.ndarray        # (S,) int32
+    steps: jnp.ndarray          # () int32
+
+
+class EngineState(NamedTuple):
+    """The extensible event-loop carrier: core state + observer aux.
+
+    ``aux`` maps each attached observer's name to its own fixed-shape
+    pytree, so extensions carry state through the ``lax.while_loop``
+    without touching :class:`SimState` fields. With no observers it is an
+    empty dict and the loop is structurally identical to the bare engine.
+    """
+
+    sim: SimState
+    aux: dict  # observer name -> pytree, fixed structure per simulation
+
+
 class Metrics(NamedTuple):
     """Aggregate results of one simulated trace."""
 

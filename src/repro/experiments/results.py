@@ -25,6 +25,13 @@ if TYPE_CHECKING:  # pragma: no cover
 _Z95 = 1.96
 
 
+def _tree_np(x):
+    """Recursively materialize an aux pytree as host numpy arrays."""
+    if isinstance(x, dict):
+        return {k: _tree_np(v) for k, v in x.items()}
+    return np.asarray(x)
+
+
 def _mean_ci(x: np.ndarray, axis: int = -1):
     """Mean and 95% normal CI half-width over ``axis`` (K replicates)."""
     x = np.asarray(x, np.float64)
@@ -58,6 +65,10 @@ class SweepResult:
       rates: R arrival rates (axis 1).
       metrics: raw Metrics pytree; count leaves are (H, R, K, S) int arrays,
         energy/makespan leaves are (H, R, K) floats.
+      aux: observer outputs keyed by observer name (empty dict when the
+        spec attached none); every leaf leads with the same (H, R, K)
+        batch dims — e.g. the ``timeline`` observer's ``e_dyn`` series is
+        (H, R, K, n_buckets).
     """
 
     spec: "SweepSpec"
@@ -65,14 +76,16 @@ class SweepResult:
     heuristics: tuple[str, ...]
     rates: tuple[float, ...]
     metrics: Metrics
+    aux: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @classmethod
-    def from_metrics(cls, spec, system: SystemSpec,
-                     metrics: Metrics) -> "SweepResult":
+    def from_metrics(cls, spec, system: SystemSpec, metrics: Metrics,
+                     aux: dict | None = None) -> "SweepResult":
         metrics = Metrics(*(np.asarray(leaf) for leaf in metrics))
+        aux = {} if aux is None else _tree_np(aux)
         return cls(spec=spec, system=system,
                    heuristics=tuple(spec.heuristics),
-                   rates=tuple(spec.rates), metrics=metrics)
+                   rates=tuple(spec.rates), metrics=metrics, aux=aux)
 
     # ---------------------------------------------------------------- axes
     def h_index(self, heuristic: str) -> int:
@@ -232,12 +245,71 @@ class SweepResult:
             "summary": self.summary_rows(),
         }
 
+    # -------------------------------------------------- time-series views
+    def timeline_rows(self) -> list[dict]:
+        """Long-form CSV rows of the ``timeline`` observer's series.
+
+        One row per (heuristic, rate, replicate, bucket) with the sampled
+        queue occupancy, cumulative energies and per-type completions.
+        Raises KeyError if the sweep did not attach the observer.
+        """
+        tl = self.aux["timeline"]
+        H, R, K, B = tl["e_dyn"].shape
+        S = tl["completed"].shape[-1]
+        rows = []
+        for h_i, h in enumerate(self.heuristics):
+            for r_i, rate in enumerate(self.rates):
+                for k in range(K):
+                    for b in range(B):
+                        row = {
+                            "heuristic": h,
+                            "rate": rate,
+                            "rep": k,
+                            "bucket": b,
+                            "t": round(float(tl["t"][h_i, r_i, k, b]), 6),
+                            "qlen": int(tl["qlen"][h_i, r_i, k, b]),
+                            "running": int(tl["running"][h_i, r_i, k, b]),
+                            "energy_dynamic": round(
+                                float(tl["e_dyn"][h_i, r_i, k, b]), 4),
+                            "energy_idle": round(
+                                float(tl["e_idle"][h_i, r_i, k, b]), 4),
+                        }
+                        for s in range(S):
+                            row[f"completed_T{s + 1}"] = int(
+                                tl["completed"][h_i, r_i, k, b, s])
+                        rows.append(row)
+        return rows
+
+    def aux_json_dict(self) -> dict:
+        """Every observer's stacked aux as JSON-ready nested lists.
+
+        Non-finite floats (e.g. the energy budget's ``t_exhausted=inf``
+        when the battery never ran out) become ``null`` — strict RFC 8259
+        JSON, so the artifact survives jq / JS parsers.
+        """
+        def scrub(v):
+            if isinstance(v, list):
+                return [scrub(i) for i in v]
+            if isinstance(v, float) and not np.isfinite(v):
+                return None
+            return v
+
+        def conv(x):
+            if isinstance(x, dict):
+                return {k: conv(v) for k, v in x.items()}
+            return scrub(np.asarray(x).tolist())
+
+        return conv(self.aux)
+
     def save(self, outdir) -> dict[str, pathlib.Path]:
         """Write ``sweep.csv`` + ``sweep.json`` under ``outdir``.
 
         Returns the written paths keyed by format. The CSV holds the
         per-cell summary table; the JSON additionally embeds the generating
-        spec so the sweep is reproducible from the artifact alone.
+        spec so the sweep is reproducible from the artifact alone. When
+        observers were attached, their stacked aux is emitted too:
+        ``observers.json`` (all observers, nested lists) and — if the
+        ``timeline`` observer ran — a long-form ``timeline.csv``.
         """
         outdir = pathlib.Path(outdir)
         outdir.mkdir(parents=True, exist_ok=True)
@@ -250,4 +322,18 @@ class SweepResult:
         json_path = outdir / "sweep.json"
         with open(json_path, "w") as f:
             json.dump(self.to_json_dict(), f, indent=2)
-        return {"csv": csv_path, "json": json_path}
+        paths = {"csv": csv_path, "json": json_path}
+        if self.aux:
+            obs_path = outdir / "observers.json"
+            with open(obs_path, "w") as f:
+                json.dump(self.aux_json_dict(), f, allow_nan=False)
+            paths["observers_json"] = obs_path
+        if "timeline" in self.aux:
+            trows = self.timeline_rows()
+            tpath = outdir / "timeline.csv"
+            with open(tpath, "w", newline="") as f:
+                writer = csv.DictWriter(f, fieldnames=list(trows[0].keys()))
+                writer.writeheader()
+                writer.writerows(trows)
+            paths["timeline_csv"] = tpath
+        return paths

@@ -9,7 +9,9 @@ heuristic over the flattened grid, so the whole experiment is a single XLA
 program and a single dispatch:
 
     Metrics leaves come back with shape (H, R, K, ...) for H heuristics,
-    R rates, K replicates.
+    R rates, K replicates — and so does every leaf of the observer aux
+    when the spec attaches engine observers (:mod:`repro.core.observe`):
+    telemetry rides inside the same jitted program, never a second pass.
 """
 from __future__ import annotations
 
@@ -17,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine, policy
-from repro.core.types import Metrics, SystemSpec, Trace
+from repro.core.types import SystemSpec, Trace
 from repro.experiments.results import SweepResult
 from repro.experiments.spec import SweepSpec
 
@@ -45,7 +47,8 @@ def _select_fns(names, use_pallas: bool):
 
 def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
                    *, use_pallas_phase1: bool = False,
-                   max_steps=None, trace_label: str = "") -> Metrics:
+                   max_steps=None, trace_label: str = "",
+                   observers=()):
     """Simulate a flat batch of traces under every heuristic, in one jit.
 
     Args:
@@ -57,17 +60,26 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
       max_steps: optional per-trace event cap (``None`` = engine default).
       trace_label: annotation recorded next to each heuristic in the
         module's trace log (``run_sweep`` passes the scenario name).
+      observers: engine observers — registered names or
+        :class:`repro.core.observe.Observer` instances. They ride inside
+        the same single jit (closed over statically: attaching observers
+        adds zero retraces).
 
     Returns:
-      Metrics with leaves of shape (H, B, ...): axis 0 follows
-      ``heuristic_names`` order, axis 1 the trace batch.
+      With ``observers=()``: Metrics with leaves of shape (H, B, ...) —
+      axis 0 follows ``heuristic_names`` order, axis 1 the trace batch.
+      With observers: ``(Metrics, aux)`` where ``aux`` maps observer name
+      to its pytree with the same (H, B, ...) leading dims.
     """
+    from repro.core import observe
+
+    obs = observe.resolve(observers)
     sysarr = system.as_jax()
     sims = [
         engine.make_simulator(
             fn, sysarr, queue_size=system.queue_size,
             fairness_factor=float(system.fairness_factor),
-            max_steps=max_steps,
+            max_steps=max_steps, observers=obs,
         )
         for fn in _select_fns(heuristic_names, use_pallas_phase1)
     ]
@@ -110,13 +122,15 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
     )
     label = (spec.scenario if isinstance(spec.scenario, str)
              else "<custom scenario>")
-    metrics = simulate_sweep(
+    observers = spec.resolve_observers()
+    out = simulate_sweep(
         flat, system, spec.heuristics,
         use_pallas_phase1=spec.use_pallas_phase1, max_steps=spec.max_steps,
-        trace_label=label,
+        trace_label=label, observers=observers,
     )
+    metrics, aux = out if observers else (out, {})
     H = len(spec.heuristics)
-    metrics = jax.tree.map(
-        lambda x: x.reshape((H, R, K) + x.shape[2:]), metrics
-    )
-    return SweepResult.from_metrics(spec, system, metrics)
+    unflatten = lambda x: x.reshape((H, R, K) + x.shape[2:])
+    metrics = jax.tree.map(unflatten, metrics)
+    aux = jax.tree.map(unflatten, aux)
+    return SweepResult.from_metrics(spec, system, metrics, aux=aux)

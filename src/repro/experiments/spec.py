@@ -89,6 +89,14 @@ class SweepSpec:
         policies are unaffected.
       max_steps: optional hard cap on simulator events per trace (mostly
         for tests); ``None`` uses the engine default of ``8 * N + 64``.
+      observers: engine observers to attach — registered names
+        (built-ins: ``"timeline"``, ``"fairness_trajectory"``,
+        ``"task_log"``, ``"energy_budget"``; see
+        :func:`repro.core.observe.list_observers`) or
+        :class:`repro.core.observe.Observer` instances. Their time-resolved
+        aux pytrees come back on :attr:`SweepResult.aux` stacked under the
+        same (H, R, K) batch dims as the metrics; with ``()`` the sweep is
+        bit-identical to an unobserved one.
     """
 
     system: Union[str, SystemSpec, None] = None
@@ -103,6 +111,7 @@ class SweepSpec:
     use_pallas_phase1: bool = False
     max_steps: Optional[int] = None
     scenario: Union[str, "object"] = "poisson"  # name or scenarios.Scenario
+    observers: tuple = ()  # names or observe.Observer instances
 
     def __post_init__(self):
         object.__setattr__(self, "rates",
@@ -139,6 +148,27 @@ class SweepSpec:
                 f"scenario must be a registered name or a "
                 f"scenarios.Scenario, got {self.scenario!r}"
             )
+        from repro.core import observe
+
+        obs = []
+        for ob in (self.observers if not isinstance(self.observers, str)
+                   else (self.observers,)):
+            if isinstance(ob, str):
+                name = ob.strip().lower()
+                if not observe.is_registered(name):
+                    raise ValueError(
+                        f"unknown observer {ob!r}; "
+                        f"choose from {observe.list_observers()} "
+                        f"(or observe.register(...) your own)"
+                    )
+                obs.append(name)
+            else:
+                try:  # one protocol check: the registry's
+                    observe.resolve((ob,))
+                except TypeError as e:
+                    raise ValueError(str(e)) from None
+                obs.append(ob)
+        object.__setattr__(self, "observers", tuple(obs))
 
     @property
     def n_simulations(self) -> int:
@@ -152,6 +182,12 @@ class SweepSpec:
         if isinstance(self.scenario, scenarios.Scenario):
             return self.scenario
         return scenarios.get(str(self.scenario))
+
+    def resolve_observers(self) -> tuple:
+        """Materialize the :class:`repro.core.observe.Observer` tuple."""
+        from repro.core import observe
+
+        return observe.resolve(self.observers)
 
     def resolve_system(self) -> SystemSpec:
         """Materialize the SystemSpec, applying queue/fairness overrides.
@@ -205,9 +241,21 @@ class SweepSpec:
             system = self.system
         scenario = (self.scenario if isinstance(self.scenario, str)
                     else self.scenario.to_json_dict())
+        observers = []
+        for ob in self.observers:
+            if isinstance(ob, str):
+                observers.append(ob)
+            elif hasattr(ob, "to_json_dict"):
+                observers.append(ob.to_json_dict())
+            else:
+                raise ValueError(
+                    f"observer {ob!r} has no to_json_dict; register it and "
+                    f"pass the name to make the spec serializable"
+                )
         return {
             "system": system,
             "scenario": scenario,
+            "observers": observers,
             "rates": list(self.rates),
             "reps": self.reps,
             "n_tasks": self.n_tasks,
@@ -240,9 +288,16 @@ class SweepSpec:
         scenario = d.get("scenario", "poisson")
         if isinstance(scenario, dict):
             scenario = scenarios.Scenario.from_json_dict(scenario)
+        from repro.core import observe
+
+        observers = tuple(
+            observe.from_json_dict(ob) if isinstance(ob, dict) else ob
+            for ob in d.get("observers", ())
+        )
         return cls(
             system=system,
             scenario=scenario,
+            observers=observers,
             rates=tuple(d["rates"]),
             reps=int(d["reps"]),
             n_tasks=int(d["n_tasks"]),

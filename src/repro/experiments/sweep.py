@@ -25,7 +25,7 @@ import sys
 import time
 
 from repro import scenarios
-from repro.core import policy
+from repro.core import observe, policy
 from repro.experiments.results import SweepResult
 from repro.experiments.runner import run_sweep
 from repro.experiments.spec import (
@@ -69,6 +69,13 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
     ap.add_argument("--list-scenarios", action="store_true",
                     help="list the registered workload scenarios and fleet "
                          "builders, then exit")
+    ap.add_argument("--observers", default="",
+                    help="comma list of registered engine observers to "
+                         "attach (e.g. timeline,task_log; see "
+                         "--list-observers). Their time-resolved outputs "
+                         "are written next to the sweep artifacts.")
+    ap.add_argument("--list-observers", action="store_true",
+                    help="list the registered engine observers and exit")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cv-run", type=float, default=0.1,
                     help="CV of actual runtimes around the EET (default 0.1)")
@@ -87,6 +94,9 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
         raise SystemExit(0)
     if args.list_scenarios:
         print_scenario_list()
+        raise SystemExit(0)
+    if args.list_observers:
+        print_observer_list()
         raise SystemExit(0)
 
     heuristics = tuple(
@@ -113,6 +123,16 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
             f"unknown system {args.system!r}; registered fleets: "
             + ", ".join(scenarios.list_fleets())
         )
+    observers = tuple(
+        o.strip() for o in args.observers.split(",") if o.strip()
+    )
+    unknown = [o for o in observers if not observe.is_registered(o)]
+    if unknown:
+        ap.error(
+            f"unknown observers {unknown}; registered observers: "
+            + ", ".join(observe.list_observers())
+            + " (run with --list-observers for details)"
+        )
     try:
         rates = parse_rates(args.rates) if args.rates else DEFAULT_RATES
         spec = SweepSpec(
@@ -127,6 +147,7 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
             queue_size=args.queue_size,
             fairness_factor=args.fairness_factor,
             use_pallas_phase1=args.pallas_phase1,
+            observers=observers,
         )
     except ValueError as e:
         ap.error(str(e))  # clean exit 2 instead of a traceback
@@ -160,6 +181,13 @@ def print_scenario_list(file=None) -> None:
               f"{d['deadline']:10s} {d['runtime']:11s} {d['fleet']:8s}",
               file=file)
     print(f"\nfleets: {', '.join(scenarios.list_fleets())}", file=file)
+
+
+def print_observer_list(file=None) -> None:
+    """One line per registered engine observer: name + description."""
+    file = file if file is not None else sys.stdout
+    for name in observe.list_observers():
+        print(f"{name:22s} {observe.describe(name)}", file=file)
 
 
 def print_summary(result: SweepResult, file=None) -> None:
@@ -197,7 +225,7 @@ def main(argv=None) -> SweepResult:
           f"({1e3 * dt / n:.0f} ms/trace incl. compile)\n")
     print_summary(result)
     paths = result.save(args.out)
-    print(f"\nwrote {paths['csv']} and {paths['json']}")
+    print("\nwrote " + ", ".join(str(p) for p in paths.values()))
     return result
 
 

@@ -1,0 +1,70 @@
+"""Deprecation-shim coverage: the legacy surfaces must stay live views of
+the new registries, not frozen copies.
+
+  * ``workload.trace_batch`` warns and delegates byte-identically onto the
+    scenario layer's ``trace_stack``;
+  * ``heuristics.get`` / ``HEURISTICS`` track the policy registry through
+    custom registration and ``overwrite=True`` re-registration.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import heuristics, policy, workload
+from repro.core.api import paper_system
+from repro.datapipe import synthetic
+
+SPEC = paper_system()
+
+
+# ------------------------------------------------------------- trace_batch
+def test_trace_batch_warns_and_delegates_byte_identically():
+    key = jax.random.PRNGKey(11)
+    with pytest.warns(DeprecationWarning, match="trace_batch"):
+        got = workload.trace_batch(key, 5, 80, 2.5, SPEC.eet)
+    want = jax.tree.map(
+        lambda x: x[0], synthetic.trace_stack(key, (2.5,), 5, 80, SPEC.eet)
+    )
+    for g, w, name in zip(got, want, type(got)._fields):
+        ga, wa = np.asarray(g), np.asarray(w)
+        assert ga.dtype == wa.dtype and ga.shape == wa.shape, name
+        assert ga.tobytes() == wa.tobytes(), f"{name} differs bitwise"
+
+
+# ------------------------------------------------- heuristics registry view
+def test_heuristics_view_tracks_custom_registration():
+    custom = policy.TwoPhasePolicy(
+        policy.MinExecution(), policy.SoonestDeadline(), policy.DropStale()
+    )
+    policy.register("shim-test", custom)
+    try:
+        assert heuristics.get("shim-test") is custom
+        assert "SHIM-TEST" in heuristics.HEURISTICS
+        assert heuristics.HEURISTICS["shim-test"] is custom
+        assert len(heuristics.HEURISTICS) == len(policy.list_policies())
+    finally:
+        policy.unregister("shim-test")
+    assert "SHIM-TEST" not in heuristics.HEURISTICS
+
+
+def test_heuristics_view_tracks_overwrite():
+    """register(..., overwrite=True) must be visible through the legacy
+    view immediately — no stale name-keyed caches."""
+    first = policy.TwoPhasePolicy(
+        policy.MinCompletion(), policy.Fcfs(), policy.DropStale()
+    )
+    second = policy.TwoPhasePolicy(
+        policy.MinExecution(), policy.Fcfs(), policy.DropStale()
+    )
+    policy.register("shim-ow", first)
+    try:
+        assert heuristics.get("shim-ow") is first
+        with pytest.raises(ValueError, match="already registered"):
+            policy.register("shim-ow", second)
+        policy.register("shim-ow", second, overwrite=True)
+        assert heuristics.get("shim-ow") is second
+        assert heuristics.HEURISTICS["shim-ow"] is second
+        # the view and the registry list the same names
+        assert sorted(heuristics.HEURISTICS) == policy.list_policies()
+    finally:
+        policy.unregister("shim-ow")

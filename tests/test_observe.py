@@ -1,0 +1,346 @@
+"""Tests for the composable engine-observability API (repro.core.observe).
+
+Contracts under test:
+
+  * registry round-trip + spec validation (mirrors policy/scenario axes);
+  * observers ride inside the single vmapped jit: batched sweep aux ==
+    sequential per-trace aux, and attaching observers adds no retraces;
+  * the ``task_log`` observer agrees with the pure-Python oracle
+    event-for-event (ELARE and FELARE);
+  * the ``energy_budget`` dynamic observer halts admission at capacity
+    and is inert when unset;
+  * internal consistency of the ``timeline``/``fairness_trajectory``
+    series against end-of-trace Metrics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import experiments
+from repro.core import api, engine, observe, pyengine, workload
+from repro.experiments import runner
+
+SPEC = api.paper_system()
+
+
+def _dyadic(x):
+    return (np.round(np.asarray(x) * 64) / 64).astype(np.float32)
+
+
+def _trace(seed, n, rate):
+    tr = workload.poisson_trace(jax.random.PRNGKey(seed), n, rate, SPEC.eet)
+    return tr._replace(
+        arrival=jnp.asarray(_dyadic(tr.arrival)),
+        deadline=jnp.asarray(_dyadic(tr.deadline)),
+        exec_actual=jnp.asarray(_dyadic(tr.exec_actual)),
+    )
+
+
+# ----------------------------------------------------------------- registry
+def test_builtins_registered():
+    names = observe.list_observers()
+    for name in ("timeline", "fairness_trajectory", "task_log",
+                 "energy_budget"):
+        assert name in names
+        assert observe.is_registered(name)
+    assert isinstance(observe.get("TIMELINE"), observe.Timeline)  # case-insens
+
+
+def test_register_round_trip_and_unknown_name():
+    ob = observe.Timeline(n_buckets=7)
+    observe.register("My-Timeline", ob)
+    try:
+        got = observe.get("my-timeline")
+        # the registered name is rebound onto the instance: the aux key is
+        # the name you attached, not the class default
+        assert got == observe.Timeline(n_buckets=7, name="my-timeline")
+        assert observe.resolve(("my-timeline",)) == (got,)
+    finally:
+        observe.unregister("my-timeline")
+    with pytest.raises(KeyError, match="choose from"):
+        observe.get("nope")
+    with pytest.raises(TypeError, match="Observer protocol"):
+        observe.register("bad", object())
+
+
+def test_registered_name_keys_the_aux():
+    """Two same-class observers under distinct registry names coexist in
+    one run, each keyed by its registered name."""
+    observe.register("tl-coarse", observe.Timeline(n_buckets=4))
+    observe.register("tl-fine", observe.Timeline(n_buckets=16))
+    try:
+        tr = _trace(1, 40, 3.0)
+        _, aux = engine.simulate(tr, SPEC, "MM",
+                                 observers=("tl-coarse", "tl-fine"))
+        assert aux["tl-coarse"]["e_dyn"].shape == (4,)
+        assert aux["tl-fine"]["e_dyn"].shape == (16,)
+    finally:
+        observe.unregister("tl-coarse")
+        observe.unregister("tl-fine")
+
+
+def test_spec_rejects_unknown_observer():
+    with pytest.raises(ValueError, match="unknown observer"):
+        experiments.SweepSpec(observers=("nope",))
+    with pytest.raises(ValueError, match="Observer protocol"):
+        experiments.SweepSpec(observers=(42,))
+
+
+def test_spec_json_roundtrip_with_observers():
+    import json
+
+    spec = experiments.SweepSpec(
+        rates=(2.0,), reps=2, n_tasks=40, heuristics=("MM",),
+        observers=("timeline", observe.EnergyBudget(capacity=123.0),
+                   observe.FairnessTrajectory(n_buckets=16)),
+    )
+    back = experiments.SweepSpec.from_json_dict(
+        json.loads(json.dumps(spec.to_json_dict())))
+    assert back == spec
+
+
+# ------------------------------------------------- single-jit + vmap contract
+def test_batched_aux_matches_sequential():
+    """timeline + task_log run inside the one vmapped jit: the stacked aux
+    equals per-trace simulation aux exactly (CRN trace grid preserved)."""
+    spec = experiments.SweepSpec(
+        rates=(2.0, 5.0), reps=2, n_tasks=60,
+        heuristics=("MM", "FELARE"), seed=3,
+        observers=("timeline", "task_log"),
+    )
+    res = experiments.run_sweep(spec)
+    system = spec.resolve_system()
+    scenario = spec.resolve_scenario()
+    stacked = scenario.stack(
+        jax.random.PRNGKey(spec.seed), spec.rates, spec.reps, spec.n_tasks,
+        system.eet, cv_run=spec.cv_run,
+    )
+    for h_i, h in enumerate(spec.heuristics):
+        for r_i in range(len(spec.rates)):
+            for k in range(spec.reps):
+                _, aux = engine.simulate(
+                    jax.tree.map(lambda x: x[r_i, k], stacked), system, h,
+                    observers=("timeline", "task_log"),
+                )
+                for obname, obaux in aux.items():
+                    for leaf, arr in obaux.items():
+                        np.testing.assert_array_equal(
+                            np.asarray(arr),
+                            res.aux[obname][leaf][h_i, r_i, k],
+                            err_msg=f"{h} r{r_i} k{k} {obname}.{leaf}",
+                        )
+
+
+def test_observers_add_no_retraces():
+    """One jit trace per (policy, scenario) with observers attached —
+    telemetry must not grow the number of compiled programs."""
+    heuristics = ("MM", "ELARE")
+    runner._TRACE_LOG.clear()
+    experiments.run_sweep(experiments.SweepSpec(
+        rates=(3.0,), reps=2, n_tasks=50, heuristics=heuristics, seed=1,
+        observers=("timeline", "task_log", "fairness_trajectory"),
+    ))
+    assert sorted(runner._TRACE_LOG) == sorted(
+        (h, "poisson") for h in heuristics)
+    runner._TRACE_LOG.clear()
+
+
+def test_no_observer_simulate_returns_bare_metrics():
+    tr = _trace(0, 50, 3.0)
+    m = engine.simulate(tr, SPEC, "ELARE")
+    assert hasattr(m, "completed_by_type")  # Metrics, not (Metrics, aux)
+    m2, aux = engine.simulate(tr, SPEC, "ELARE", observers=("task_log",))
+    np.testing.assert_array_equal(np.asarray(m.completed_by_type),
+                                  np.asarray(m2.completed_by_type))
+    assert set(aux) == {"task_log"}
+
+
+# --------------------------------------------------------- oracle cross-check
+@pytest.mark.parametrize("heuristic", ["ELARE", "FELARE"])
+@pytest.mark.parametrize("seed", [0, 5])
+def test_task_log_matches_oracle_event_for_event(heuristic, seed):
+    """The task_log observer's per-task map/start/end/machine/status agree
+    with the pure-Python oracle at every event timestamp."""
+    tr = _trace(seed, 100, 3.0)
+    _, aux = engine.simulate(tr, SPEC, heuristic, observers=("task_log",))
+    log = {k: np.asarray(v) for k, v in aux["task_log"].items()}
+    ref = pyengine.simulate(tr, SPEC, heuristic)["task_log"]
+    np.testing.assert_array_equal(log["status"], ref["status"])
+    np.testing.assert_array_equal(log["machine"], ref["machine"])
+    for field in ("map_time", "start_time", "end_time"):
+        np.testing.assert_allclose(
+            log[field], ref[field], rtol=1e-6, atol=1e-6, err_msg=field)
+
+
+# ------------------------------------------------------------- energy budget
+def test_energy_budget_halts_admission():
+    tr = _trace(2, 200, 4.0)
+    m = engine.simulate(tr, SPEC, "ELARE")
+    total = float(m.energy_dynamic) + float(m.energy_idle)
+    capacity = 0.5 * total
+    ob = observe.EnergyBudget(capacity=capacity)
+    mb, aux = engine.simulate(tr, SPEC, "ELARE", observers=(ob,))
+    assert bool(aux["energy_budget"]["exhausted"])
+    assert float(aux["energy_budget"]["t_exhausted"]) < float(m.makespan)
+    # completed-task count saturates below the unbudgeted run
+    assert int(np.sum(mb.completed_by_type)) < int(np.sum(m.completed_by_type))
+    # total energy within one event's energy of capacity: at most the
+    # in-flight work (M tasks' worth of dynamic energy) plus the idle power
+    # over one longest execution.
+    e_max = float(np.max(tr.exec_actual))
+    slack = (float(np.max(SPEC.p_dyn)) * e_max * SPEC.n_machines
+             + float(np.sum(SPEC.p_idle)) * e_max)
+    budget_total = float(mb.energy_dynamic) + float(mb.energy_idle)
+    assert budget_total <= capacity + slack
+    # accounting stays conserved for everything that was admitted
+    total_by_type = (np.asarray(mb.completed_by_type)
+                     + np.asarray(mb.missed_by_type)
+                     + np.asarray(mb.cancelled_by_type))
+    np.testing.assert_array_equal(total_by_type,
+                                  np.asarray(mb.arrived_by_type))
+
+
+def test_energy_budget_unset_is_inert():
+    """capacity=inf (the default registered observer) never gates: metrics
+    are identical to a run without the observer."""
+    tr = _trace(4, 120, 5.0)
+    m = engine.simulate(tr, SPEC, "FELARE")
+    mb, aux = engine.simulate(tr, SPEC, "FELARE", observers=("energy_budget",))
+    for name in m._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(m, name)),
+                                      np.asarray(getattr(mb, name)), name)
+    assert not bool(aux["energy_budget"]["exhausted"])
+    assert not observe.EnergyBudget().is_dynamic
+    assert observe.EnergyBudget(capacity=10.0).is_dynamic
+
+
+def test_energy_budget_through_run_sweep():
+    """The budget flows through the batched sweep; tighter budgets complete
+    no more tasks than looser ones."""
+    base = dict(rates=(4.0,), reps=2, n_tasks=100, heuristics=("ELARE",),
+                seed=0)
+    free = experiments.run_sweep(experiments.SweepSpec(**base))
+    total = float(free.energy_traces.max())
+    tight = experiments.run_sweep(experiments.SweepSpec(
+        **base, observers=(observe.EnergyBudget(capacity=0.4 * total),)))
+    assert np.all(tight.aux["energy_budget"]["exhausted"])
+    assert (tight.metrics.completed_by_type.sum()
+            < free.metrics.completed_by_type.sum())
+
+
+def test_fairness_trajectory_inherits_engine_factor():
+    """With the default fairness_factor=None the observer samples the mask
+    under the *engine's* configured factor: a lenient system (large f,
+    eps = mu - f*sigma pushed down) must show strictly fewer suffered
+    samples than a strict one (f=0), for an identical mapping policy."""
+    tr = _trace(3, 150, 5.0)
+    fracs = {}
+    for f in (0.0, 4.0):
+        spec = api.paper_system(fairness_factor=f)
+        # MM ignores the mask entirely, so the simulated events are
+        # identical across f — only the observer's sampling can differ.
+        _, aux = engine.simulate(tr, spec, "MM",
+                                 observers=("fairness_trajectory",))
+        fracs[f] = float(np.asarray(
+            aux["fairness_trajectory"]["suffered"]).mean())
+    assert fracs[4.0] < fracs[0.0]
+    # an explicit factor is a counterfactual override, not inherited
+    _, aux = engine.simulate(
+        tr, api.paper_system(fairness_factor=4.0), "MM",
+        observers=(observe.FairnessTrajectory(fairness_factor=0.0),))
+    assert float(np.asarray(
+        aux["fairness_trajectory"]["suffered"]).mean()) == fracs[0.0]
+
+
+def test_observers_json_is_strict_rfc8259(tmp_path):
+    """inf leaves (an unexhausted budget's t_exhausted/capacity) must land
+    as null, never the non-standard Infinity token."""
+    import json
+
+    res = experiments.run_sweep(experiments.SweepSpec(
+        rates=(3.0,), reps=2, n_tasks=40, heuristics=("MM",),
+        observers=("energy_budget",),
+    ))
+    paths = res.save(tmp_path)
+    text = paths["observers_json"].read_text()
+    assert "Infinity" not in text and "NaN" not in text
+    payload = json.loads(text)
+    assert payload["energy_budget"]["t_exhausted"][0][0] == [None, None]
+
+
+# ------------------------------------------------------- series consistency
+def test_timeline_final_bucket_matches_metrics():
+    tr = _trace(6, 150, 4.0)
+    m, aux = engine.simulate(tr, SPEC, "FELARE",
+                             observers=("timeline", "fairness_trajectory"))
+    tl = {k: np.asarray(v) for k, v in aux["timeline"].items()}
+    np.testing.assert_array_equal(tl["completed"][-1],
+                                  np.asarray(m.completed_by_type))
+    np.testing.assert_array_equal(tl["arrived"][-1],
+                                  np.asarray(m.arrived_by_type))
+    assert tl["e_dyn"][-1] == pytest.approx(float(m.energy_dynamic), rel=1e-5)
+    # cumulative series are monotone non-decreasing after forward-fill
+    assert np.all(np.diff(tl["e_dyn"]) >= -1e-5)
+    assert np.all(np.diff(tl["completed"].sum(-1)) >= 0)
+    # end-state is drained: no queued/running tasks in the last bucket
+    assert tl["qlen"][-1] == 0 and tl["running"][-1] == 0
+    ft = {k: np.asarray(v) for k, v in aux["fairness_trajectory"].items()}
+    assert ft["suffered"].shape == (64, SPEC.n_task_types)
+    assert np.all((ft["cr"] >= 0) & (ft["cr"] <= 1))
+
+
+def test_timeline_artifacts_written(tmp_path):
+    from repro.experiments import sweep as sweep_cli
+
+    out = tmp_path / "artifacts"
+    sweep_cli.main([
+        "--rates", "3", "--reps", "2", "--tasks", "50",
+        "--heuristics", "MM", "--observers", "timeline,task_log",
+        "--out", str(out),
+    ])
+    assert (out / "timeline.csv").exists()
+    assert (out / "observers.json").exists()
+    header = (out / "timeline.csv").read_text().splitlines()[0]
+    assert header.startswith("heuristic,rate,rep,bucket,t,qlen")
+
+
+def test_cli_list_observers_exits_clean(capsys):
+    from repro.experiments import sweep as sweep_cli
+
+    with pytest.raises(SystemExit) as e:
+        sweep_cli.build_spec(["--list-observers"])
+    assert e.value.code == 0
+    out = capsys.readouterr().out
+    assert "timeline" in out and "energy_budget" in out
+
+
+# ----------------------------------------------------------- custom observer
+def test_custom_observer_end_to_end():
+    """A user-defined observer (event counter) registers, rides through
+    run_sweep, and comes back stacked under (H, R, K)."""
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class EventCount(observe.Observer):
+        name = "event_count"
+
+        def init(self, trace, sysarr):
+            return {"events": jnp.int32(0)}
+
+        def on_event(self, stage, aux, st, trace, sysarr):
+            if stage != "start":
+                return aux
+            return {"events": aux["events"] + 1}
+
+    observe.register("event_count", EventCount())
+    try:
+        res = experiments.run_sweep(experiments.SweepSpec(
+            rates=(2.0, 4.0), reps=2, n_tasks=40,
+            heuristics=("MM", "ELARE"), observers=("event_count",),
+        ))
+        ev = res.aux["event_count"]["events"]
+        assert ev.shape == (2, 2, 2)
+        assert np.all(ev > 0)
+    finally:
+        observe.unregister("event_count")
