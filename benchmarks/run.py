@@ -9,6 +9,10 @@ human-readable block per figure.
 vmapped sweep, observers off/on) and appends a ``BENCH_<n>.json``
 artifact under DIR — one numbered file per run, so the directory
 accumulates the project's wall-clock/compile-time trajectory over time.
+``--perf-baseline PATH`` additionally compares the fresh warm time
+against a checked-in baseline (``benchmarks/BENCH_0.json`` is the first)
+and prints the ratio — informational, never failing, matching the
+non-blocking CI bench step.
 """
 from __future__ import annotations
 
@@ -82,18 +86,45 @@ def perf_vmapped_sweep(*, reps: int = 4, n_tasks: int = 300,
     }
 
 
-def write_perf_artifact(outdir) -> pathlib.Path:
-    """Run the perf bench and write the next ``BENCH_<n>.json`` in outdir."""
+def write_perf_artifact(outdir, baseline=None) -> pathlib.Path:
+    """Run the perf bench and write the next ``BENCH_<n>.json`` in outdir.
+
+    With ``baseline`` (a prior BENCH_*.json, e.g. the checked-in
+    ``benchmarks/BENCH_0.json``), prints a warm-time comparison per
+    observer configuration — informational only, never raises.
+    """
     outdir = pathlib.Path(outdir)
     outdir.mkdir(parents=True, exist_ok=True)
     seen = [int(m.group(1)) for p in outdir.glob("BENCH_*.json")
             if (m := re.fullmatch(r"BENCH_(\d+)\.json", p.name))]
-    path = outdir / f"BENCH_{max(seen, default=0) + 1}.json"
+    path = outdir / f"BENCH_{max(seen, default=-1) + 1}.json"
     payload = perf_vmapped_sweep()
     path.write_text(json.dumps(payload, indent=2))
     print(json.dumps(payload, indent=2))
     print(f"wrote {path}")
+    if baseline:
+        compare_to_baseline(payload, baseline)
     return path
+
+
+def compare_to_baseline(payload: dict, baseline) -> None:
+    """Print warm-time ratios of ``payload`` vs a baseline BENCH JSON."""
+    baseline = pathlib.Path(baseline)
+    if not baseline.exists():
+        print(f"perf baseline {baseline} not found; skipping comparison")
+        return
+    base = json.loads(baseline.read_text())
+    base_by_obs = {tuple(r["observers"]): r
+                   for r in base.get("simulate_batch", ())}
+    print(f"\nwarm-time vs baseline {baseline}:")
+    for row in payload["simulate_batch"]:
+        ref = base_by_obs.get(tuple(row["observers"]))
+        if not ref or not ref.get("warm_s"):
+            continue
+        ratio = row["warm_s"] / ref["warm_s"]
+        tag = "observers=" + (",".join(row["observers"]) or "off")
+        print(f"  {tag:40s} {row['warm_s']:.3f}s vs {ref['warm_s']:.3f}s "
+              f"({ratio:.2f}x)")
 
 
 def main() -> None:
@@ -104,10 +135,14 @@ def main() -> None:
     ap.add_argument("--perf-out", default=None, metavar="DIR",
                     help="run only the engine perf benchmark and append a "
                          "BENCH_<n>.json artifact under DIR")
+    ap.add_argument("--perf-baseline", default=None, metavar="PATH",
+                    help="with --perf-out: compare warm times against this "
+                         "prior BENCH_<n>.json (e.g. the checked-in "
+                         "benchmarks/BENCH_0.json); informational only")
     args = ap.parse_args()
 
     if args.perf_out:
-        write_perf_artifact(args.perf_out)
+        write_perf_artifact(args.perf_out, baseline=args.perf_baseline)
         return
 
     from benchmarks import ablations, paper_figures, roofline_report

@@ -7,9 +7,10 @@ and FELARE organically routes around it while suffered-type boosting prevents
 starvation), per-type completion-rate tracking, and the energy ledger.
 
 ``Router.on_request`` / ``on_completion`` mirror the paper's mapping events;
-the mapping decision itself is the same jitted heuristic the simulator uses
-(repro.core.heuristics) — one code path from the paper's Algorithm 1 to the
-production router.
+the mapping decision itself is the same jitted policy the simulator uses
+(resolved through the :mod:`repro.core.policy` registry, so user-registered
+policies drive the router too) — one code path from the paper's Algorithm 1
+to the production router.
 """
 from __future__ import annotations
 
@@ -21,8 +22,8 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import equations, fairness, heuristics
-from repro.core.heuristics import MachineView
+from repro.core import equations, fairness, policy
+from repro.core.policy import MachineView
 from repro.core.types import SystemArrays
 
 
@@ -49,7 +50,7 @@ class Router:
         self.p_idle = np.asarray(p_idle, np.float32)
         self.S, self.M = self.eet.shape
         self.Q = queue_size
-        self.heuristic = heuristics.get(heuristic)
+        self.heuristic = policy.get(heuristic)
         self.f = fairness_factor
         self.ema = eet_ema
         self.now_fn = now_fn
@@ -113,10 +114,14 @@ class Router:
         deadline = jnp.asarray([r.deadline for r in allr], jnp.float32)
         pending_mask = jnp.asarray(
             [r.status == "pending" for r in allr])
+        # id -> flat index map: O(n) once, instead of O(n^2) list.index
+        # scans — which also mis-resolved when two requests compared equal
+        # (Request is a dataclass; .index returns the *first* equal one).
+        idx_of = {id(r): k for k, r in enumerate(allr)}
         queue = np.full((self.M, self.Q), -1, np.int32)
         for j, q in enumerate(self.queues):
             for s, req in enumerate(q):
-                queue[j, s] = len(pend_list) + queued_reqs.index(req)
+                queue[j, s] = idx_of[id(req)]
         avail = np.where(
             [r is not None for r in self.running],
             np.maximum(self.run_end_exp, now), now).astype(np.float32)

@@ -6,17 +6,20 @@ Public surface:
   workload   — Poisson trace generation
   heuristics — ELARE / FELARE / MM / MSD / MMU
   fairness   — completion rates, suffered task types (Alg. 4)
+  dispatch   — federation site-selection rules (sticky, round_robin,
+               least_queued, min_eet, fair_spill) behind a registry
   engine     — jittable/vmappable discrete-event simulator
   observe    — composable engine observers (timeline, task_log,
                fairness_trajectory, energy_budget) behind a registry
   pyengine   — independent pure-Python oracle
   api        — experiment-level helpers (paper_system, run_study)
 """
-from repro.core import api, eet, engine, equations, fairness, heuristics
-from repro.core import observe, pyengine, workload
+from repro.core import api, dispatch, eet, engine, equations, fairness
+from repro.core import heuristics, observe, pyengine, workload
 from repro.core.types import Metrics, SystemSpec, Trace
 
 __all__ = [
-    "api", "eet", "engine", "equations", "fairness", "heuristics",
-    "observe", "pyengine", "workload", "Metrics", "SystemSpec", "Trace",
+    "api", "dispatch", "eet", "engine", "equations", "fairness",
+    "heuristics", "observe", "pyengine", "workload", "Metrics",
+    "SystemSpec", "Trace",
 ]

@@ -138,7 +138,8 @@ class StudyResult:
 
 def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
               n_traces: int = 30, n_tasks: int = 2000, seed: int = 0,
-              cv_run: float = 0.1, scenario="poisson", observers=()):
+              cv_run: float = 0.1, scenario="poisson", observers=(),
+              dispatcher="sticky"):
     """The paper's experiment template for one heuristic.
 
     Thin wrapper over :func:`repro.experiments.run_sweep`: synthesizes
@@ -164,6 +165,12 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
         (:func:`repro.core.observe.list_observers`) or
         :class:`repro.core.observe.Observer` instances. Their per-cell
         outputs land on :attr:`StudyResult.aux`.
+      dispatcher: federation site-selection rule — a registered name
+        (:func:`repro.core.dispatch.list_dispatchers`) or a
+        :class:`repro.core.dispatch.Dispatcher` instance. Only relevant
+        when ``spec.site_of_machine`` partitions the machines into sites;
+        the default ``"sticky"`` keeps single-site studies bit-identical
+        to pre-federation ones.
 
     Returns:
       list[StudyResult] of length R, in ``arrival_rates`` order.
@@ -180,6 +187,7 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
         seed=seed,
         cv_run=cv_run,
         observers=tuple(observers),
+        dispatcher=dispatcher,
     )
     result = experiments.run_sweep(sweep_spec)
 

@@ -1,0 +1,137 @@
+"""Registry-backed two-level dispatch: which *site* serves each task.
+
+The paper evaluates FELARE on one flat 4-machine system, but its setting
+— battery-powered edge sites serving concurrent latency-sensitive ML
+traffic — is inherently multi-site. This package is the federation's
+first level, mirroring the policy algebra one layer up:
+
+    Federation = Dispatcher (task -> site)  ×  Policy (task -> machine)
+
+A :class:`Dispatcher` picks the site of each newly-admitted task at the
+engine's ``dispatch`` stage; the per-site mapping policy then runs under
+a site-masked machine view. Built-ins:
+
+  * ``sticky`` — load-blind hash home, fixed at admission (the default;
+    the identity on single-site systems);
+  * ``round_robin`` — arrival-order rotation across sites;
+  * ``least_queued`` — join-the-shortest-site (queued + running);
+  * ``min_eet`` — EET-aware cheapest site for the task's type;
+  * ``fair_spill`` — sticky homes, but Alg. 4 *suffered* types spill to
+    the least-loaded site (FELARE's fairness signal at dispatch level).
+
+All are frozen hashable dataclasses behind the shared
+:class:`~repro.core.registry.NameRegistry`, interpreted by the pure-
+Python oracle, and serialize to JSON by kind + fields. See
+``docs/federation.md`` for the stage contract and a worked
+writing-a-dispatcher example.
+"""
+from __future__ import annotations
+
+from repro.core.dispatch.base import (
+    DispatchContext,
+    Dispatcher,
+    sequential_balance,
+)
+from repro.core.dispatch.builtins import (
+    FairSpill,
+    LeastQueued,
+    MinEet,
+    RoundRobin,
+    Sticky,
+)
+from repro.core.dispatch.registry import (
+    get,
+    is_registered,
+    list_dispatchers,
+    register,
+    unregister,
+)
+
+__all__ = [
+    "DispatchContext",
+    "Dispatcher",
+    "FairSpill",
+    "LeastQueued",
+    "MinEet",
+    "RoundRobin",
+    "Sticky",
+    "describe",
+    "from_json_dict",
+    "get",
+    "is_registered",
+    "list_dispatchers",
+    "register",
+    "resolve",
+    "sequential_balance",
+    "to_json_dict",
+    "unregister",
+]
+
+#: JSON ``kind`` -> built-in dispatcher class, for spec round-tripping.
+_KINDS = {
+    "sticky": Sticky,
+    "round_robin": RoundRobin,
+    "least_queued": LeastQueued,
+    "min_eet": MinEet,
+    "fair_spill": FairSpill,
+}
+
+
+def resolve(dispatcher) -> Dispatcher:
+    """Normalize a name-or-instance to a Dispatcher instance.
+
+    ``None`` resolves to the default :class:`Sticky`; strings resolve
+    through the registry (KeyError on unknown names lists what is
+    registered).
+    """
+    if dispatcher is None:
+        return Sticky()
+    if isinstance(dispatcher, str):
+        return get(dispatcher)
+    if not callable(getattr(dispatcher, "dispatch", None)):
+        raise TypeError(
+            f"dispatcher must be a registered name or implement the "
+            f"Dispatcher protocol, got {dispatcher!r}"
+        )
+    return dispatcher
+
+
+def describe(name_or_dispatcher) -> str:
+    """One-line human description (for ``--list-dispatchers``)."""
+    d = resolve(name_or_dispatcher)
+    doc = (d.__class__.__doc__ or "").strip().splitlines()
+    head = doc[0].rstrip(".") if doc else d.__class__.__name__
+    return head
+
+
+def to_json_dict(dispatcher) -> dict:
+    """``{"kind": ..., <param>: ...}`` for a built-in-style dispatcher."""
+    import dataclasses
+
+    d = resolve(dispatcher)
+    out = {"kind": d.kind}
+    for f in dataclasses.fields(d):
+        out[f.name] = getattr(d, f.name)
+    return out
+
+
+def from_json_dict(d: dict) -> Dispatcher:
+    """Rebuild a built-in dispatcher from its :func:`to_json_dict` form."""
+    kind = d.get("kind")
+    cls = _KINDS.get(kind)
+    if cls is None:
+        raise ValueError(
+            f"unknown dispatcher kind {kind!r}; choose from {sorted(_KINDS)}"
+        )
+    return cls(**{k: v for k, v in d.items() if k != "kind"})
+
+
+for _name, _disp in [
+    ("sticky", Sticky()),
+    ("round_robin", RoundRobin()),
+    ("least_queued", LeastQueued()),
+    ("min_eet", MinEet()),
+    ("fair_spill", FairSpill()),
+]:
+    register(_name, _disp)
+del _name, _disp

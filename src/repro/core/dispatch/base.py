@@ -1,0 +1,162 @@
+"""The dispatch layer's typed surface: context + protocol.
+
+A federation separates *where a task goes* (which site) from *where it
+runs* (which machine of that site). The first question is answered once
+per task, at the ``dispatch`` stage of the event loop, by a
+:class:`Dispatcher`; the second stays the per-site mapping policy's job
+(:mod:`repro.core.policy`), run under a site-masked machine view.
+
+:class:`DispatchContext` freezes everything a dispatcher may look at —
+the newly-admitted task mask, machine/queue occupancy, the static site
+partition, and the Alg. 4 fairness monitor — and caches each derived
+per-site aggregate, mirroring :class:`~repro.core.policy.context.
+SchedContext`. The site partition and site count are *static* (Python
+ints / numpy constants), so dispatchers trace fixed-shape computations
+and the whole federation rides inside the single jitted ``while_loop``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy.context import BIG
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchContext:
+    """Frozen snapshot of one dispatch event.
+
+    Constructor fields are the raw inputs; per-site aggregates are
+    ``cached_property`` grids so dispatchers compose without recomputing
+    (or paying for aggregates they never read).
+
+    Shapes: N tasks, M machines, S types, F sites (static).
+    """
+
+    now: jnp.ndarray          # () f32 current event time
+    unassigned: jnp.ndarray   # (N,) bool — pending and not yet dispatched
+    task_type: jnp.ndarray    # (N,) int32
+    deadline: jnp.ndarray     # (N,) f32
+    qlen: jnp.ndarray         # (M,) int32 local-queue occupancy
+    running: jnp.ndarray      # (M,) bool machine is executing a task
+    completed: jnp.ndarray    # (S,) int32 on-time completions so far
+    arrived: jnp.ndarray      # (S,) int32 arrivals so far
+    eet: jnp.ndarray          # (S, M) expected execution times
+    site_of_machine: np.ndarray  # (M,) int — STATIC partition (numpy)
+    n_sites: int              # F — STATIC
+    fairness_factor: float    # Eq. 3's f — STATIC engine config
+
+    # -- static shapes ------------------------------------------------------
+    @property
+    def n_tasks(self) -> int:
+        return self.unassigned.shape[0]
+
+    @property
+    def n_machines(self) -> int:
+        return self.qlen.shape[0]
+
+    # -- static site structure ---------------------------------------------
+    @functools.cached_property
+    def site_members(self) -> np.ndarray:
+        """(F, M) bool — constant membership grid of the partition."""
+        return np.asarray(
+            [self.site_of_machine == s for s in range(self.n_sites)]
+        )
+
+    @functools.cached_property
+    def site_ids(self) -> jnp.ndarray:
+        """(M,) int32 — the partition as a device constant."""
+        return jnp.asarray(self.site_of_machine, jnp.int32)
+
+    # -- derived per-site load ---------------------------------------------
+    @functools.cached_property
+    def site_queued(self) -> jnp.ndarray:
+        """(F,) int32 — queued tasks per site."""
+        return jax.ops.segment_sum(self.qlen, self.site_ids, self.n_sites)
+
+    @functools.cached_property
+    def site_running(self) -> jnp.ndarray:
+        """(F,) int32 — busy machines per site."""
+        return jax.ops.segment_sum(
+            self.running.astype(jnp.int32), self.site_ids, self.n_sites
+        )
+
+    @functools.cached_property
+    def site_load(self) -> jnp.ndarray:
+        """(F,) int32 — queued + running tasks per site (the load signal
+        ``least_queued`` and ``fair_spill`` balance on)."""
+        return self.site_queued + self.site_running
+
+    # -- derived per-site EET structure ------------------------------------
+    @functools.cached_property
+    def eet_min_by_site(self) -> jnp.ndarray:
+        """(S, F) f32 — each type's fastest machine within each site."""
+        cols = [
+            jnp.min(jnp.where(jnp.asarray(self.site_members[s]),
+                              self.eet, BIG), axis=1)
+            for s in range(self.n_sites)
+        ]
+        return jnp.stack(cols, axis=1)
+
+    # -- fairness monitor ---------------------------------------------------
+    @functools.cached_property
+    def suffered(self) -> jnp.ndarray:
+        """(S,) bool — Alg. 4 suffered-type mask at this event (the same
+        signal the FELARE mapping wrapper consults, reused at the
+        dispatch level by ``fair_spill``)."""
+        from repro.core import fairness
+
+        return fairness.suffered_types(
+            self.completed, self.arrived, self.fairness_factor
+        )
+
+
+class Dispatcher(Protocol):
+    """Site selection for newly-admitted tasks.
+
+    Implementations are frozen (hashable) dataclasses with a ``kind`` tag
+    — the tag is what the pure-Python oracle (:mod:`repro.core.pyengine`)
+    and the CLI ``--list-dispatchers`` output key on, so a dispatcher is
+    fully described by ``kind`` + its dataclass fields.
+
+    ``dispatch`` returns an (N,) int32 site proposal for *every* task;
+    the engine applies it only where ``ctx.unassigned`` is True, and a
+    task's site never changes afterwards (dispatch-once semantics — all
+    built-ins differ only in *how* the one-shot choice is made).
+    """
+
+    kind: str
+
+    def dispatch(self, ctx: DispatchContext) -> jnp.ndarray: ...
+
+
+def sequential_balance(ctx: DispatchContext, target_mask, home) -> jnp.ndarray:
+    """Shared least-loaded assignment scan (``least_queued``/``fair_spill``).
+
+    Walks tasks in index (arrival) order carrying per-site loads: each
+    unassigned task whose ``target_mask`` is set goes to the currently
+    least-loaded site (ties -> lowest site id), others keep their
+    ``home`` proposal; every dispatched task increments its site's load
+    so simultaneous admissions spread instead of dog-piling one site.
+    Integer arithmetic throughout — the oracle mirrors it exactly.
+    """
+    F = ctx.n_sites
+    lanes = jnp.arange(F, dtype=jnp.int32)
+
+    def step(load, xs):
+        new_k, tgt_k, home_k = xs
+        best = jnp.argmin(load).astype(jnp.int32)
+        s = jnp.where(tgt_k, best, home_k)
+        load = load + jnp.where((lanes == s) & new_k, 1, 0)
+        return load, s
+
+    _, sites = jax.lax.scan(
+        step, ctx.site_load.astype(jnp.int32),
+        (ctx.unassigned, target_mask, home),
+    )
+    return sites

@@ -1,0 +1,118 @@
+"""Built-in dispatchers: the five site-selection rules.
+
+Each is a frozen (hashable) dataclass the engine closes over statically —
+attaching a dispatcher never retraces per call — and each is *data*: the
+pure-Python oracle (:mod:`repro.core.pyengine`) interprets ``kind`` + the
+dataclass fields with plain loops, so every built-in is cross-checkable
+event-for-event.
+
+All dispatchers are dispatch-once: a task's site is chosen the first time
+it is pending and never migrates (sticky in the Madej et al. sense); they
+differ in how the one-shot choice is made.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.dispatch.base import DispatchContext, sequential_balance
+
+
+def _hash_sites(n_tasks: int, n_sites: int, salt: int) -> jnp.ndarray:
+    """(N,) int32 static multiplicative-hash home sites (uint32 wrap)."""
+    h = (jnp.arange(n_tasks, dtype=jnp.uint32) * jnp.uint32(2654435761)
+         + jnp.uint32(salt)) % jnp.uint32(n_sites)
+    return h.astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sticky:
+    """Load-blind home site, fixed at admission.
+
+    Default: a multiplicative hash of the task index (uniform across
+    sites, deterministic, CRN-friendly). With ``by_type=True`` the home
+    is ``task_type % F`` instead — types get site affinity, so a skewed
+    :class:`~repro.scenarios.mixes.WeightedMix` becomes *per-site arrival
+    skew* (some sites see heavy traffic, others idle).
+
+    The default dispatcher: on a single-site system it is the identity
+    (every task -> site 0), which is what keeps flat pre-federation runs
+    bit-exact.
+    """
+
+    kind = "sticky"
+    salt: int = 0
+    by_type: bool = False
+
+    def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
+        if self.by_type:
+            return (ctx.task_type % ctx.n_sites).astype(jnp.int32)
+        return _hash_sites(ctx.n_tasks, ctx.n_sites, self.salt)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRobin:
+    """Arrival-order round-robin: task index mod F.
+
+    Traces are arrival-sorted, so the index is an arrival-order proxy and
+    consecutive arrivals alternate sites regardless of load."""
+
+    kind = "round_robin"
+
+    def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
+        return (jnp.arange(ctx.n_tasks, dtype=jnp.int32)
+                % jnp.int32(ctx.n_sites))
+
+
+@dataclasses.dataclass(frozen=True)
+class LeastQueued:
+    """Join-the-shortest-site: least queued+running tasks at dispatch time.
+
+    Simultaneous admissions are balanced sequentially in arrival order
+    (each dispatched task counts toward its site's load before the next
+    task chooses), so a burst spreads across sites instead of
+    dog-piling the momentarily-emptiest one."""
+
+    kind = "least_queued"
+
+    def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
+        all_spill = jnp.ones((ctx.n_tasks,), bool)
+        home = jnp.zeros((ctx.n_tasks,), jnp.int32)
+        return sequential_balance(ctx, all_spill, home)
+
+
+@dataclasses.dataclass(frozen=True)
+class MinEet:
+    """EET-aware cheapest site: the site whose fastest machine for the
+    task's type has the smallest expected execution time (heterogeneous
+    federations route each type to the site that serves it best; ties ->
+    lowest site id). Load-blind, like the profiling-table-driven tier
+    selection in HE2C."""
+
+    kind = "min_eet"
+
+    def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
+        return jnp.argmin(
+            ctx.eet_min_by_site[ctx.task_type], axis=1
+        ).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FairSpill:
+    """Sticky homes, but *suffered* types may spill to the least-loaded
+    site — FELARE's Alg. 4 fairness signal reused at the dispatch level.
+
+    Non-suffered tasks keep their hash home (locality, cache-warm
+    models); a task whose type currently sits below the fairness limit
+    ε = μ − f·σ escapes its (possibly overloaded) home and is balanced
+    onto the least-loaded site, sequentially like :class:`LeastQueued`.
+    """
+
+    kind = "fair_spill"
+    salt: int = 0
+
+    def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
+        home = _hash_sites(ctx.n_tasks, ctx.n_sites, self.salt)
+        spill = ctx.suffered[ctx.task_type]
+        return sequential_balance(ctx, spill, home)

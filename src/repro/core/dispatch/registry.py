@@ -1,0 +1,61 @@
+"""Mutable, case-insensitive dispatcher registry.
+
+Dispatchers are addressed by name everywhere — ``SweepSpec.dispatcher``,
+the sweep CLI's ``--dispatcher``, ``engine.simulate(dispatcher=...)`` —
+so registering one here makes it flow through the single-jit sweep
+machinery untouched:
+
+    from repro.core import dispatch
+
+    dispatch.register("sticky-7", dispatch.Sticky(salt=7))
+    # ... SweepSpec(system="paper_x2", dispatcher="sticky-7") just works.
+
+The mechanics live in the shared
+:class:`repro.core.registry.NameRegistry` (also behind the policy,
+scenario, fleet and observer registries).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.registry import NameRegistry
+
+
+def _check(name, dispatcher) -> None:
+    if not callable(getattr(dispatcher, "dispatch", None)):
+        raise TypeError(
+            f"dispatcher {name!r} must implement the Dispatcher protocol "
+            f"(a .dispatch(ctx) method); got {dispatcher!r}"
+        )
+
+
+_REGISTRY = NameRegistry("dispatcher", case=str.lower, check=_check)
+
+
+def register(name: str, dispatcher, *, overwrite: bool = False):
+    """Register ``dispatcher`` under ``name`` (case-insensitive).
+
+    Re-registering an existing name raises unless ``overwrite=True``.
+    Returns the dispatcher, so registration can be used expression-style.
+    """
+    return _REGISTRY.register(name, dispatcher, overwrite=overwrite)
+
+
+def unregister(name: str) -> None:
+    """Remove a registered dispatcher (KeyError if absent)."""
+    _REGISTRY.unregister(name)
+
+
+def is_registered(name: str) -> bool:
+    return _REGISTRY.is_registered(name)
+
+
+def get(name: str):
+    """Resolve a dispatcher by (case-insensitive) name, or raise KeyError
+    listing every registered name."""
+    return _REGISTRY.get(name)
+
+
+def list_dispatchers() -> List[str]:
+    """Sorted names of every registered dispatcher."""
+    return _REGISTRY.names()

@@ -13,10 +13,20 @@ traces is one ``vmap``. Semantics follow Sec. III of the paper:
     energy (Eq. 2 row 3);
   * per-type completion counters feed the fairness monitor continuously.
 
-Each event is processed as four named stages, threading an
+Each event is processed as five named stages, threading an
 :class:`~repro.core.types.EngineState` = ``(SimState, aux)``:
 
-  ``finalize`` -> ``admit`` -> ``map`` -> ``start``
+  ``finalize`` -> ``admit`` -> ``dispatch`` -> ``map`` -> ``start``
+
+``dispatch`` is the federation's first level: a pluggable
+:class:`~repro.core.dispatch.Dispatcher` assigns each newly-admitted task
+to one of F static *sites* (bounded partitions of the machine set), and
+``map`` then runs the mapping policy once per site under a site-masked
+:class:`~repro.core.policy.MachineView` — no Python loops over sites
+inside the traced body beyond the static F. With one site (every spec
+built before the federation layer) the dispatch stage degenerates to
+"site 0" and the map stage is the exact pre-federation computation, so
+flat runs stay bit-identical.
 
 After every stage, each attached :class:`~repro.core.observe.Observer`
 folds the stage name and the fresh :class:`~repro.core.types.SimState`
@@ -34,9 +44,11 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import fairness
-from repro.core.policy import MachineView
+from repro.core.dispatch.base import DispatchContext
+from repro.core.policy import BIG, MachineView
 from repro.core.types import (
     CANCELLED,
     COMPLETED,
@@ -46,6 +58,7 @@ from repro.core.types import (
     RUNNING,
     UNARRIVED,
     EngineState,
+    MapAction,
     Metrics,
     SimState,
     SystemArrays,
@@ -55,7 +68,7 @@ from repro.core.types import (
 INF = jnp.float32(jnp.inf)
 
 #: Stage names, in event order. Observers receive each after it ran.
-STAGES = ("finalize", "admit", "map", "start")
+STAGES = ("finalize", "admit", "dispatch", "map", "start")
 
 
 def _init_state(trace: Trace, n_machines: int, queue_size: int,
@@ -66,6 +79,7 @@ def _init_state(trace: Trace, n_machines: int, queue_size: int,
     return SimState(
         now=f(0.0),
         status=jnp.full((n,), UNARRIVED, jnp.int32),
+        site=jnp.full((n,), -1, jnp.int32),
         run_task=jnp.full((M,), -1, jnp.int32),
         run_start=jnp.zeros((M,), f),
         run_end_act=jnp.full((M,), jnp.inf, f),
@@ -185,30 +199,104 @@ def _halt_shutdown(st: SimState, trace: Trace, halted: jnp.ndarray):
     )
 
 
+def _stage_dispatch(st: SimState, trace: Trace, sysarr: SystemArrays,
+                    dispatcher, site_of_machine: np.ndarray, n_sites: int,
+                    fairness_factor: float):
+    """Assign newly-admitted tasks to federation sites (dispatch-once).
+
+    A task is dispatched at the first event where it is PENDING and still
+    siteless; its site never changes afterwards. With one site the
+    dispatcher is bypassed entirely (every task -> site 0), so flat
+    systems carry zero dispatch ops in the traced loop body.
+    """
+    new = (st.status == PENDING) & (st.site < 0)
+    if n_sites == 1:
+        return st._replace(site=jnp.where(new, 0, st.site))
+    ctx = DispatchContext(
+        now=st.now,
+        unassigned=new,
+        task_type=trace.task_type,
+        deadline=trace.deadline,
+        qlen=st.qlen,
+        running=st.run_task >= 0,
+        completed=st.completed,
+        arrived=st.arrived,
+        eet=sysarr.eet,
+        site_of_machine=site_of_machine,
+        n_sites=n_sites,
+        fairness_factor=fairness_factor,
+    )
+    sites = jnp.clip(dispatcher.dispatch(ctx).astype(jnp.int32),
+                     0, n_sites - 1)
+    return st._replace(site=jnp.where(new, sites, st.site))
+
+
 def _stage_map(st: SimState, trace: Trace, sysarr: SystemArrays,
-               select_fn: Callable, fairness_factor: float, n_types: int):
-    """Run the mapping policy and apply its MapAction."""
+               select_fn: Callable, fairness_factor: float, n_types: int,
+               site_members: Optional[np.ndarray] = None):
+    """Run the per-site mapping policy and apply the combined MapAction.
+
+    ``site_members`` is the static (F, M) partition grid. The policy runs
+    once per site (a static Python loop, unrolled in the trace) over the
+    site's own pending tasks and a site-masked machine view: machines
+    outside the site appear full (``qlen = Q``), empty-queued, and
+    infinitely far away (``avail_base = BIG``, EET rows ``BIG``), so
+    nominators, feasibility guards and the fairness eviction all see a
+    site-local system — in particular ``hopeless``/``rescuable`` use the
+    site's own fastest machine. With F=1 the branch below is literally
+    the pre-federation computation (no masking ops), keeping flat runs
+    bit-exact.
+    """
     suffered = fairness.suffered_types(
         st.completed, st.arrived, fairness_factor
     )
-    view = MachineView(
-        avail_base=jnp.maximum(
-            jnp.where(st.run_task >= 0, st.run_end_exp, st.now),
+    avail_base = jnp.maximum(
+        jnp.where(st.run_task >= 0, st.run_end_exp, st.now), st.now
+    )
+    n_sites = 1 if site_members is None else site_members.shape[0]
+    if n_sites == 1:
+        view = MachineView(avail_base=avail_base, queue=st.queue,
+                           qlen=st.qlen)
+        action = select_fn(
             st.now,
-        ),
-        queue=st.queue,
-        qlen=st.qlen,
-    )
-    action = select_fn(
-        st.now,
-        st.status == PENDING,
-        trace.task_type,
-        trace.deadline,
-        view,
-        sysarr,
-        suffered,
-    )
-    return _apply_action(st, trace, action, n_types)
+            st.status == PENDING,
+            trace.task_type,
+            trace.deadline,
+            view,
+            sysarr,
+            suffered,
+        )
+        return _apply_action(st, trace, action, n_types)
+
+    M, Q = st.queue.shape
+    assign = jnp.full((M,), -1, jnp.int32)
+    drop = jnp.zeros(st.status.shape, bool)
+    queue_drop = jnp.zeros((M, Q), bool)
+    for s in range(n_sites):
+        in_site = jnp.asarray(site_members[s])  # (M,) bool constant
+        view_s = MachineView(
+            avail_base=jnp.where(in_site, avail_base, BIG),
+            queue=jnp.where(in_site[:, None], st.queue, -1),
+            qlen=jnp.where(in_site, st.qlen, Q),
+        )
+        sysarr_s = sysarr._replace(
+            eet=jnp.where(in_site[None, :], sysarr.eet, BIG)
+        )
+        task_in_site = st.site == s
+        action = select_fn(
+            st.now,
+            (st.status == PENDING) & task_in_site,
+            trace.task_type,
+            trace.deadline,
+            view_s,
+            sysarr_s,
+            suffered,
+        )
+        assign = jnp.where(in_site, action.assign, assign)
+        drop = drop | (action.drop & task_in_site)
+        queue_drop = queue_drop | (action.queue_drop & in_site[:, None])
+    return _apply_action(st, trace, MapAction(assign, drop, queue_drop),
+                         n_types)
 
 
 def _apply_action(st: SimState, trace: Trace, action, n_types: int):
@@ -308,13 +396,22 @@ _start_tasks = _stage_start
 def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
                    queue_size: int, fairness_factor: float = 1.0,
                    max_steps: int | None = None,
-                   observers: tuple = ()) -> Callable:
+                   observers: tuple = (),
+                   dispatcher=None,
+                   site_of_machine: tuple | None = None) -> Callable:
     """Build ``simulate(trace)`` for one mapping policy.
 
     ``select_fn(now, pending, task_type, deadline, view, sysarr, suffered)``
     is any :class:`repro.core.policy.Policy` (e.g. from
     ``policy.get(name)``) or a bare function with the same signature; it is
     closed over statically so jit specializes per policy.
+
+    ``site_of_machine`` is the *static* federation partition — a tuple of
+    per-machine site ids (``None`` = one site) — and ``dispatcher`` the
+    :class:`repro.core.dispatch.Dispatcher` assigning newly-admitted
+    tasks to sites (``None`` = the default ``sticky``; irrelevant with
+    one site, where the dispatch stage is the constant "site 0"). Both
+    are closed over statically, like the policy.
 
     ``observers`` is a tuple of :class:`repro.core.observe.Observer`
     instances (hashable, closed over statically — attaching observers
@@ -323,10 +420,25 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
     observers it returns ``(Metrics, aux)`` where ``aux`` maps each
     observer's name to its finalized pytree.
     """
+    from repro.core import dispatch as dispatch_mod
+
     S, M = sysarr.eet.shape
+    sites = ((0,) * M if site_of_machine is None
+             else tuple(int(s) for s in site_of_machine))
+    if len(sites) != M:
+        raise ValueError(
+            f"site_of_machine has {len(sites)} entries for {M} machines"
+        )
+    n_sites = max(sites) + 1
+    sites_np = np.asarray(sites, np.int32)
+    site_members = np.asarray(
+        [sites_np == s for s in range(n_sites)]
+    ) if n_sites > 1 else None
+    dispatcher = dispatch_mod.resolve(dispatcher)
     observers = tuple(
         ob.with_engine_config(fairness_factor=fairness_factor,
-                              queue_size=queue_size)
+                              queue_size=queue_size,
+                              site_of_machine=sites)
         if hasattr(ob, "with_engine_config") else ob
         for ob in observers
     )
@@ -368,7 +480,11 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
             aux = notify("finalize", aux, st)
             st = _stage_admit(st, trace, halted)
             aux = notify("admit", aux, st)
-            st = _stage_map(st, trace, sysarr, select_fn, fairness_factor, S)
+            st = _stage_dispatch(st, trace, sysarr, dispatcher, sites_np,
+                                 n_sites, fairness_factor)
+            aux = notify("dispatch", aux, st)
+            st = _stage_map(st, trace, sysarr, select_fn, fairness_factor, S,
+                            site_members)
             aux = notify("map", aux, st)
             st = _stage_start(st, trace, sysarr)
             aux = notify("start", aux, st)
@@ -397,28 +513,46 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
 
 @functools.partial(jax.jit, static_argnames=("select_fn", "observers",
                                              "queue_size", "fairness_factor",
-                                             "max_steps", "batched"))
+                                             "max_steps", "batched",
+                                             "dispatcher", "sites"))
 def _simulate_jit(trace, eet, p_dyn, p_idle, select_fn, observers,
-                  queue_size, fairness_factor, max_steps, batched):
+                  queue_size, fairness_factor, max_steps, batched,
+                  dispatcher=None, sites=None):
     """The one cached jit entry point behind ``simulate``/``simulate_batch``.
 
-    Keyed on ``(select_fn, observers, static config)`` — re-calling with
-    the same (frozen, hashable) policy and observer objects hits the jit
-    cache instead of re-tracing, including the vmapped batch path.
+    Keyed on ``(select_fn, observers, dispatcher, sites, static config)``
+    — re-calling with the same (frozen, hashable) policy, observer and
+    dispatcher objects hits the jit cache instead of re-tracing,
+    including the vmapped batch path. ``sites`` is the static
+    site-partition tuple (``None`` = single site).
     """
-    sysarr = SystemArrays(eet=eet, p_dyn=p_dyn, p_idle=p_idle)
+    sysarr = SystemArrays(
+        eet=eet, p_dyn=p_dyn, p_idle=p_idle,
+        site_of_machine=(None if sites is None
+                         else jnp.asarray(sites, jnp.int32)),
+    )
     sim = make_simulator(
         select_fn, sysarr, queue_size=queue_size,
         fairness_factor=fairness_factor, max_steps=max_steps,
-        observers=observers,
+        observers=observers, dispatcher=dispatcher, site_of_machine=sites,
     )
     return jax.vmap(sim)(trace) if batched else sim(trace)
 
 
-def _simulate(trace, spec, heuristic, observers, max_steps, batched):
+def _simulate(trace, spec, heuristic, observers, max_steps, batched,
+              dispatcher=None):
+    from repro.core import dispatch as dispatch_mod
     from repro.core import observe, policy
 
     obs = observe.resolve(observers)
+    sites = getattr(spec, "site_of_machine", None)
+    sites = None if sites is None else tuple(int(s) for s in sites)
+    # Single-site systems bypass the dispatch stage entirely, so the
+    # dispatcher must not enter the static jit cache key there — else two
+    # bit-identical flat runs under different dispatcher names would each
+    # pay a full recompile.
+    disp = (None if sites is None or max(sites) == 0
+            else dispatch_mod.resolve(dispatcher))
     return _simulate_jit(
         trace,
         jnp.asarray(spec.eet, jnp.float32),
@@ -430,31 +564,38 @@ def _simulate(trace, spec, heuristic, observers, max_steps, batched):
         float(spec.fairness_factor),
         max_steps,
         batched,
+        disp,
+        sites,
     )
 
 
 def simulate(trace: Trace, spec, heuristic: str, *, observers=(),
-             max_steps=None):
+             max_steps=None, dispatcher=None):
     """Convenience entry point: one trace, one SystemSpec, one heuristic.
 
-    The heuristic name is resolved through the policy registry and
-    observer names through the observer registry *outside* the jit
-    boundary; the (frozen, hashable) policy/observer objects are the
-    static cache key — so re-registering a name with ``overwrite=True``
-    takes effect instead of silently hitting a stale name-keyed jit cache.
+    The heuristic name is resolved through the policy registry, observer
+    names through the observer registry, and the dispatcher name through
+    the dispatcher registry — all *outside* the jit boundary; the
+    (frozen, hashable) policy/observer/dispatcher objects are the static
+    cache key — so re-registering a name with ``overwrite=True`` takes
+    effect instead of silently hitting a stale name-keyed jit cache.
+    ``spec.site_of_machine`` (if set) partitions the machines into
+    federation sites served through ``dispatcher``.
 
     Returns :class:`Metrics` when ``observers`` is empty, else
     ``(Metrics, aux)`` with ``aux`` keyed by observer name.
     """
-    return _simulate(trace, spec, heuristic, observers, max_steps, False)
+    return _simulate(trace, spec, heuristic, observers, max_steps, False,
+                     dispatcher)
 
 
 def simulate_batch(traces: Trace, spec, heuristic: str, *, observers=(),
-                   max_steps=None):
+                   max_steps=None, dispatcher=None):
     """vmap over a stacked batch of traces (the paper's 30-trace studies).
 
     Shares the cached ``_simulate_jit`` with :func:`simulate`: calling it
     in a loop over heuristics compiles each policy exactly once instead of
     rebuilding and re-jitting the vmapped simulator per call.
     """
-    return _simulate(traces, spec, heuristic, observers, max_steps, True)
+    return _simulate(traces, spec, heuristic, observers, max_steps, True,
+                     dispatcher)

@@ -56,12 +56,14 @@ class Observer:
     def with_engine_config(self, **config) -> "Observer":
         """Bind engine configuration just before simulation.
 
-        ``make_simulator`` calls this with the engine's scalars (currently
-        ``fairness_factor`` and ``queue_size``) so observers that mirror
-        engine-config-dependent quantities can inherit them instead of
-        requiring the caller to keep two copies in sync
-        (:class:`~repro.core.observe.timeline.FairnessTrajectory` is the
-        built-in example). Default: return self unchanged.
+        ``make_simulator`` calls this with the engine's static config
+        (currently ``fairness_factor``, ``queue_size`` and the
+        ``site_of_machine`` federation partition) so observers that
+        mirror engine-config-dependent quantities can inherit them
+        instead of requiring the caller to keep two copies in sync
+        (:class:`~repro.core.observe.timeline.FairnessTrajectory` and the
+        per-site :class:`~repro.core.observe.timeline.Timeline` are the
+        built-in examples). Default: return self unchanged.
         """
         return self
 

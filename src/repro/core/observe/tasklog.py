@@ -27,6 +27,8 @@ class TaskLog(Observer):
       ``start_time`` f32, when it started executing (−1 = never started)
       ``end_time``   f32, when it reached a terminal status (−1 = never)
       ``machine``    int32, the machine it ran on (−1 = none)
+      ``site``       int32, the federation site it was dispatched to
+                     (−1 = never dispatched; 0 on single-site systems)
       ``status``     int32, final status code (see ``types.STATUS_NAMES``)
     """
 
@@ -62,7 +64,7 @@ class TaskLog(Observer):
         }
 
     def finalize(self, aux, st: SimState):
-        return {**aux, "status": st.status}
+        return {**aux, "site": st.site, "status": st.status}
 
     def to_json_dict(self) -> dict:
         return {"kind": "task_log", "name": self.name}

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.observe.base import Observer, bucket_index, forward_fill
@@ -31,15 +32,40 @@ class Timeline(Observer):
       ``completed`` (K,S)  cumulative on-time completions per type
       ``arrived``   (K,S)  cumulative arrivals per type
       ``horizon``   ()     the sampled time horizon (max deadline)
+
+    With ``per_site=True`` on a federated system the pytree additionally
+    carries per-site series over the F sites (the engine binds the site
+    partition via :meth:`with_engine_config`, like the fairness factor):
+      ``site_qlen``  (K,F) queued tasks per site
+      ``site_e_dyn`` (K,F) cumulative dynamic energy per site (machines'
+                     dynamic power × accumulated busy time)
+    With the default ``per_site=False`` the pytree is exactly the flat
+    one above — attaching the observer to a pre-federation sweep stays
+    bit-identical.
     """
 
     n_buckets: int = 64
     name: str = "timeline"
+    per_site: bool = False
+    site_of_machine: tuple | None = None  # engine-bound, not serialized
+
+    def with_engine_config(self, *, site_of_machine=None, **config):
+        if not self.per_site or site_of_machine is None:
+            return self
+        return dataclasses.replace(
+            self, site_of_machine=tuple(int(s) for s in site_of_machine)
+        )
+
+    @property
+    def _n_sites(self) -> int:
+        if self.site_of_machine is None:
+            return 1
+        return max(self.site_of_machine) + 1
 
     def init(self, trace: Trace, sysarr: SystemArrays):
         K, S = self.n_buckets, sysarr.eet.shape[0]
         f = jnp.float32
-        return {
+        aux = {
             "horizon": jnp.max(trace.deadline).astype(f),
             "touched": jnp.zeros((K,), bool),
             "qlen": jnp.zeros((K,), jnp.int32),
@@ -49,13 +75,17 @@ class Timeline(Observer):
             "completed": jnp.zeros((K, S), jnp.int32),
             "arrived": jnp.zeros((K, S), jnp.int32),
         }
+        if self.per_site:
+            aux["site_qlen"] = jnp.zeros((K, self._n_sites), jnp.int32)
+            aux["site_e_dyn"] = jnp.zeros((K, self._n_sites), f)
+        return aux
 
     def on_event(self, stage, aux, st: SimState, trace, sysarr):
         if stage != "start":  # sample once per event, at end-of-event state
             return aux
         b = bucket_index(st.now, aux["horizon"], self.n_buckets)
         e_idle = (sysarr.p_idle * (st.now - st.busy_time)).sum()
-        return {
+        out = {
             "horizon": aux["horizon"],
             "touched": aux["touched"].at[b].set(True),
             "qlen": aux["qlen"].at[b].set(st.qlen.sum()),
@@ -66,6 +96,20 @@ class Timeline(Observer):
             "completed": aux["completed"].at[b].set(st.completed),
             "arrived": aux["arrived"].at[b].set(st.arrived),
         }
+        if self.per_site:
+            # the partition rides on SystemArrays; the engine-bound tuple
+            # (with_engine_config) is the static fallback sizing F.
+            site_ids = sysarr.site_of_machine
+            if site_ids is None:
+                site_ids = jnp.asarray(
+                    self.site_of_machine or (0,) * st.qlen.shape[0],
+                    jnp.int32)
+            out["site_qlen"] = aux["site_qlen"].at[b].set(
+                jax.ops.segment_sum(st.qlen, site_ids, self._n_sites))
+            out["site_e_dyn"] = aux["site_e_dyn"].at[b].set(
+                jax.ops.segment_sum(sysarr.p_dyn * st.busy_time, site_ids,
+                                    self._n_sites))
+        return out
 
     def finalize(self, aux, st: SimState):
         K = self.n_buckets
@@ -80,7 +124,7 @@ class Timeline(Observer):
 
     def to_json_dict(self) -> dict:
         return {"kind": "timeline", "n_buckets": self.n_buckets,
-                "name": self.name}
+                "name": self.name, "per_site": self.per_site}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,6 +11,15 @@ composed from the registered pieces is oracle-checkable, including
 user-registered compositions. Opaque policies (custom callables without a
 ``describe()``) have no oracle interpretation and raise ``TypeError``.
 
+Federations are interpreted the same way: when ``spec.site_of_machine``
+partitions the machines into F sites, a ``dispatch`` step assigns each
+newly-pending task a site (interpreting the dispatcher's ``kind`` +
+dataclass fields — every built-in of :mod:`repro.core.dispatch` has a
+plain-loop mirror here) and the mapping event then runs once per site
+over the site's own pending tasks and machines, with site-local
+feasibility (``hopeless``/``rescuable`` consult the site's fastest
+machine, exactly like the engine's BIG-masked EET rows).
+
 Precision note: trace times are dyadic (the tests round them), so event
 timestamps are exact in both engines. Everything derived from the EET table
 (availability sums, feasibility boundaries, energy keys, the fairness limit)
@@ -68,14 +77,66 @@ def _lookup(table, kind, what):
         ) from None
 
 
-def simulate(trace, spec, heuristic: str):
+def _dispatch_interpreter(dispatcher, n_sites: int):
+    """``kind`` + fields -> a plain-loop ``assign_sites`` closure.
+
+    ``assign_sites(new, ttype, suffered, load, eet_min_site)`` returns
+    ``{task index: site}`` for the indices in ``new`` (walked in
+    ascending order), mutating ``load`` for the load-balancing kinds
+    exactly like the engine's ``sequential_balance`` scan;
+    ``eet_min_site`` is the (S, F) per-site fastest-machine table
+    ``min_eet`` consults.
+    """
+    from repro.core import dispatch as dispatch_mod
+
+    d = dispatch_mod.resolve(dispatcher)
+    F = n_sites
+
+    def _hash(k, salt):
+        return ((k * 2654435761 + salt) & 0xFFFFFFFF) % F
+
+    if d.kind == "sticky":
+        def assign(new, ttype, suffered, load, eet_min_site):
+            return {k: (ttype[k] % F if d.by_type else _hash(k, d.salt))
+                    for k in new}
+    elif d.kind == "round_robin":
+        def assign(new, ttype, suffered, load, eet_min_site):
+            return {k: k % F for k in new}
+    elif d.kind == "least_queued":
+        def assign(new, ttype, suffered, load, eet_min_site):
+            out = {}
+            for k in new:  # ascending index order, like the engine's scan
+                s = int(np.argmin(load))
+                load[s] += 1
+                out[k] = s
+            return out
+    elif d.kind == "min_eet":
+        def assign(new, ttype, suffered, load, eet_min_site):
+            return {k: int(np.argmin(eet_min_site[ttype[k]])) for k in new}
+    elif d.kind == "fair_spill":
+        def assign(new, ttype, suffered, load, eet_min_site):
+            out = {}
+            for k in new:
+                s = (int(np.argmin(load)) if suffered[ttype[k]]
+                     else _hash(k, d.salt))
+                load[s] += 1
+                out[k] = s
+            return out
+    else:
+        raise NotImplementedError(
+            f"oracle has no interpretation for dispatcher {d.kind!r}"
+        )
+    return assign
+
+
+def simulate(trace, spec, heuristic: str, dispatcher=None):
     """Run one trace; returns a dict mirroring Metrics.
 
     The dict also carries a ``"task_log"`` entry mirroring the JAX
     engine's ``task_log`` observer (:mod:`repro.core.observe`): per-task
-    map/start/end times, machine and final status, stamped at the same
-    event timestamps — the cross-check is event-for-event, not just
-    end-of-trace.
+    map/start/end times, machine, federation site and final status,
+    stamped at the same event timestamps — the cross-check is
+    event-for-event, not just end-of-trace.
     """
     from repro.core import policy as policy_mod
 
@@ -92,6 +153,20 @@ def simulate(trace, spec, heuristic: str):
     dl = np.asarray(trace.deadline, np.float64)
     exec_act = np.asarray(trace.exec_actual, np.float64)
     n = len(arr)
+
+    # --- federation structure (F=1 for flat pre-federation specs) ----------
+    sites = np.asarray(getattr(spec, "sites", (0,) * M), int)
+    F_sites = int(sites.max()) + 1
+    site_machines = [[j for j in range(M) if sites[j] == s]
+                     for s in range(F_sites)]
+    # (S, F) f32 — each type's fastest machine per site (site-local
+    # feasibility mirror of the engine's BIG-masked EET rows).
+    eet_min_site = np.stack(
+        [eet[:, ms].min(axis=1) for ms in site_machines], axis=1
+    )
+    task_site = np.full(n, -1, int)
+    assign_sites = (_dispatch_interpreter(dispatcher, F_sites)
+                    if F_sites > 1 else None)
 
     status = np.full(n, UNARRIVED)
     machines = [_Machine(j) for j in range(M)]
@@ -142,9 +217,6 @@ def simulate(trace, spec, heuristic: str):
         sigma = cr.std(dtype=F)
         eps = max(F(mu - F(fair_f * sigma)), F(0.0))
         return (cr <= eps) & (arrived >= 1)
-
-    def hopeless(k):
-        return F(F(now) + eet[ttype[k]].min()) > dl[k]
 
     # --- Phase-I: one (task, machine, value) nomination per task -----------
     def _nominate_min_energy_feasible(pend, free):
@@ -229,10 +301,38 @@ def simulate(trace, spec, heuristic: str):
         # with exactly one machine in `pairs`)
         return assign
 
-    def mapping_event():
-        nonlocal status
-        pend = [k for k in range(n) if status[k] == PENDING]
+    def dispatch_event():
+        """Assign newly-pending tasks to sites (dispatch-once)."""
+        new = [k for k in range(n)
+               if status[k] == PENDING and task_site[k] < 0]
+        if not new:
+            return
+        if F_sites == 1:
+            for k in new:
+                task_site[k] = 0
+            return
         suffered = suffered_mask()
+        load = np.asarray(
+            [sum(len(machines[j].queue) for j in site_machines[s])
+             + sum(1 for j in site_machines[s] if machines[j].run >= 0)
+             for s in range(F_sites)], int)
+        for k, s in assign_sites(new, ttype, suffered, load,
+                                 eet_min_site).items():
+            task_site[k] = min(max(int(s), 0), F_sites - 1)
+
+    def mapping_event():
+        suffered = suffered_mask()
+        for s in range(F_sites):
+            _map_site(s, suffered)
+
+    def _map_site(s, suffered):
+        nonlocal status
+        msite = site_machines[s]
+        pend = [k for k in range(n)
+                if status[k] == PENDING and task_site[k] == s]
+
+        def site_hopeless(k):
+            return F(F(now) + eet_min_site[ttype[k], s]) > dl[k]
 
         # stale purge (all policies: stale tasks are never nominated)
         for k in list(pend):
@@ -249,14 +349,14 @@ def simulate(trace, spec, heuristic: str):
                 if suffered[ttype[k]]
                 and not any(
                     F(avail(machines[j]) + eet[ttype[k], j]) <= dl[k]
-                    for j in range(M) if len(machines[j].queue) < Q
+                    for j in msite if len(machines[j].queue) < Q
                 )
-                and F(F(now) + eet[ttype[k]].min()) <= dl[k]
+                and F(F(now) + eet_min_site[ttype[k], s]) <= dl[k]
             ]
             if resc:
                 k = min(resc, key=lambda k: dl[k])
                 mstar = min(
-                    range(M),
+                    msite,
                     key=lambda j: F(avail(machines[j]) + eet[ttype[k], j]),
                 )
                 m = machines[mstar]
@@ -278,7 +378,7 @@ def simulate(trace, spec, heuristic: str):
                         cancelled[ttype[t]] += 1
                         _end(t)
 
-        free = [j for j in range(M) if len(machines[j].queue) < Q]
+        free = [j for j in msite if len(machines[j].queue) < Q]
 
         # Phase-I + Phase-II (fairness: suffered-type pairs claim machines
         # first, remaining machines serve the non-suffered pairs).
@@ -300,7 +400,7 @@ def simulate(trace, spec, heuristic: str):
         if drop_hopeless:
             assigned = set(assign.values())
             for k in list(pend):
-                if k not in assigned and hopeless(k):
+                if k not in assigned and site_hopeless(k):
                     status[k] = CANCELLED
                     cancelled[ttype[k]] += 1
                     _end(k)
@@ -368,6 +468,7 @@ def simulate(trace, spec, heuristic: str):
             if status[k] == UNARRIVED and arr[k] <= now:
                 status[k] = PENDING
                 arrived[ttype[k]] += 1
+        dispatch_event()
         mapping_event()
         start_tasks()
     makespan = now
@@ -386,6 +487,7 @@ def simulate(trace, spec, heuristic: str):
             start_time=log_start,
             end_time=log_end,
             machine=log_machine,
+            site=task_site.copy(),
             status=status.copy(),
         ),
     )

@@ -7,7 +7,7 @@ Shapes use the paper's notation:
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -43,6 +43,13 @@ class SystemSpec:
     p_idle: (M,) idle power of each machine.
     queue_size: local queue slots per machine (bounded, equal across machines).
     fairness_factor: ``f`` in Eq. 3; aggressiveness of the fairness method.
+    site_of_machine: optional (M,) partition of the machines into F edge
+      *sites* (a federation). ``None`` — the default, and what every spec
+      built before the federation layer carries — means one site holding
+      every machine, so a flat system is just the degenerate F=1
+      federation. Sites must be numbered contiguously ``0..F-1`` and every
+      site must own at least one machine. Stored as a tuple of ints so the
+      spec stays hashable and ``==``-comparable.
     """
 
     eet: np.ndarray
@@ -50,6 +57,25 @@ class SystemSpec:
     p_idle: np.ndarray
     queue_size: int = 2
     fairness_factor: float = 1.0
+    site_of_machine: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.site_of_machine is None:
+            return
+        sites = tuple(int(s) for s in np.asarray(self.site_of_machine))
+        object.__setattr__(self, "site_of_machine", sites)
+        if len(sites) != self.n_machines:
+            raise ValueError(
+                f"site_of_machine has {len(sites)} entries for "
+                f"{self.n_machines} machines"
+            )
+        present = set(sites)
+        n_sites = max(sites) + 1
+        if min(sites) < 0 or present != set(range(n_sites)):
+            raise ValueError(
+                f"sites must be contiguous 0..F-1 with every site "
+                f"non-empty, got {sites}"
+            )
 
     @property
     def n_task_types(self) -> int:
@@ -59,18 +85,43 @@ class SystemSpec:
     def n_machines(self) -> int:
         return self.eet.shape[1]
 
+    @property
+    def n_sites(self) -> int:
+        """Number of federation sites F (1 for the flat single-site system)."""
+        if self.site_of_machine is None:
+            return 1
+        return max(self.site_of_machine) + 1
+
+    @property
+    def sites(self) -> Tuple[int, ...]:
+        """The (M,) site partition, materialized (all-zeros when unset)."""
+        if self.site_of_machine is None:
+            return (0,) * self.n_machines
+        return self.site_of_machine
+
     def as_jax(self) -> "SystemArrays":
         return SystemArrays(
             eet=jnp.asarray(self.eet, jnp.float32),
             p_dyn=jnp.asarray(self.p_dyn, jnp.float32),
             p_idle=jnp.asarray(self.p_idle, jnp.float32),
+            site_of_machine=jnp.asarray(self.sites, jnp.int32),
         )
 
 
 class SystemArrays(NamedTuple):
+    """Device-side mirror of :class:`SystemSpec` for jitted consumers.
+
+    ``site_of_machine`` is the federation partition as an (M,) int32
+    array (``None`` on flat systems) — what site-aware policies and
+    observers (e.g. the per-site :class:`~repro.core.observe.timeline.
+    Timeline`) read inside the trace; the engine's own per-site loop uses
+    the *static* tuple instead, since the site count shapes the program.
+    """
+
     eet: jnp.ndarray     # (S, M)
     p_dyn: jnp.ndarray   # (M,)
     p_idle: jnp.ndarray  # (M,)
+    site_of_machine: Optional[jnp.ndarray] = None  # (M,) int32 site ids
 
 
 class Trace(NamedTuple):
@@ -101,6 +152,7 @@ class SimState(NamedTuple):
 
     now: jnp.ndarray            # ()
     status: jnp.ndarray         # (N,) int32
+    site: jnp.ndarray           # (N,) int32 federation site, -1 undispatched
     run_task: jnp.ndarray       # (M,) int32, -1 idle
     run_start: jnp.ndarray      # (M,)
     run_end_act: jnp.ndarray    # (M,) actual completion (inf if idle)

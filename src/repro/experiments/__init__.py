@@ -15,7 +15,10 @@ Workload synthesis is delegated to the composable scenario API
 (:mod:`repro.scenarios`): ``SweepSpec.scenario`` names any registered
 ``Scenario`` (arrival process x type mix x deadline model x runtime model
 [x fleet]), all fixed-shape JAX, so every scenario runs inside the same
-single-jit vmapped sweep.
+single-jit vmapped sweep. Multi-site federations ride the same way:
+``SweepSpec.dispatcher`` names any registered
+:mod:`repro.core.dispatch` rule, applied when the resolved system's
+``site_of_machine`` partitions its machines into sites.
 
 `repro.core.api.run_study`, `benchmarks/`, and `examples/` are thin
 consumers of this layer.

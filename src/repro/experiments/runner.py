@@ -23,11 +23,12 @@ from repro.core.types import SystemSpec, Trace
 from repro.experiments.results import SweepResult
 from repro.experiments.spec import SweepSpec
 
-# Trace-time observability: one (heuristic, label) entry is appended each
-# time a per-heuristic simulator body is *traced* (not dispatched). Tests
-# read this to pin the single-jit contract — every (policy, scenario) pair
-# of a sweep must trace exactly once inside one XLA program. Bounded to
-# the most recent entries so long-lived processes don't accumulate.
+# Trace-time observability: one (heuristic, scenario label, dispatcher
+# label) entry is appended each time a per-heuristic simulator body is
+# *traced* (not dispatched). Tests read this to pin the single-jit
+# contract — every (policy, dispatcher, scenario) triple of a sweep must
+# trace exactly once inside one XLA program. Bounded to the most recent
+# entries so long-lived processes don't accumulate.
 _TRACE_LOG: list = []
 _TRACE_LOG_MAX = 256
 
@@ -48,13 +49,14 @@ def _select_fns(names, use_pallas: bool):
 def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
                    *, use_pallas_phase1: bool = False,
                    max_steps=None, trace_label: str = "",
-                   observers=()):
+                   observers=(), dispatcher=None):
     """Simulate a flat batch of traces under every heuristic, in one jit.
 
     Args:
       traces: a Trace whose leaves have one flat leading batch dim B
         (e.g. the flattened (R*K) stack from ``Scenario.stack``).
-      system: the SystemSpec to simulate.
+      system: the SystemSpec to simulate; its ``site_of_machine``
+        partition (if any) federates the machines into sites.
       heuristic_names: sequence of H heuristic names.
       use_pallas_phase1: route ELARE Phase-I through the Pallas kernel.
       max_steps: optional per-trace event cap (``None`` = engine default).
@@ -64,6 +66,11 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
         :class:`repro.core.observe.Observer` instances. They ride inside
         the same single jit (closed over statically: attaching observers
         adds zero retraces).
+      dispatcher: the federation site-selection rule — a registered name
+        or :class:`repro.core.dispatch.Dispatcher` instance (``None`` =
+        the default ``sticky``; inert on single-site systems). Closed
+        over statically like the policies: one trace per
+        (policy, dispatcher, scenario) triple.
 
     Returns:
       With ``observers=()``: Metrics with leaves of shape (H, B, ...) —
@@ -71,15 +78,20 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
       With observers: ``(Metrics, aux)`` where ``aux`` maps observer name
       to its pytree with the same (H, B, ...) leading dims.
     """
+    from repro.core import dispatch as dispatch_mod
     from repro.core import observe
 
     obs = observe.resolve(observers)
+    disp = dispatch_mod.resolve(dispatcher)
+    disp_label = (dispatcher if isinstance(dispatcher, str)
+                  else getattr(disp, "kind", type(disp).__name__))
     sysarr = system.as_jax()
     sims = [
         engine.make_simulator(
             fn, sysarr, queue_size=system.queue_size,
             fairness_factor=float(system.fairness_factor),
             max_steps=max_steps, observers=obs,
+            dispatcher=disp, site_of_machine=system.sites,
         )
         for fn in _select_fns(heuristic_names, use_pallas_phase1)
     ]
@@ -88,7 +100,7 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
     def run_all(tr):
         per_h = []
         for name, sim in zip(heuristic_names, sims):
-            _TRACE_LOG.append((name, trace_label))  # trace-time only
+            _TRACE_LOG.append((name, trace_label, disp_label))  # trace-time
             per_h.append(jax.vmap(sim)(tr))
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_h)
 
@@ -126,7 +138,7 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
     out = simulate_sweep(
         flat, system, spec.heuristics,
         use_pallas_phase1=spec.use_pallas_phase1, max_steps=spec.max_steps,
-        trace_label=label, observers=observers,
+        trace_label=label, observers=observers, dispatcher=spec.dispatcher,
     )
     metrics, aux = out if observers else (out, {})
     H = len(spec.heuristics)

@@ -97,6 +97,15 @@ class SweepSpec:
         aux pytrees come back on :attr:`SweepResult.aux` stacked under the
         same (H, R, K) batch dims as the metrics; with ``()`` the sweep is
         bit-identical to an unobserved one.
+      dispatcher: the federation's site-selection rule — a registered
+        dispatcher name (built-ins: ``"sticky"``, ``"round_robin"``,
+        ``"least_queued"``, ``"min_eet"``, ``"fair_spill"``; see
+        :func:`repro.core.dispatch.list_dispatchers`) or a
+        :class:`repro.core.dispatch.Dispatcher` instance. Only relevant
+        when the resolved system partitions its machines into sites
+        (``SystemSpec.site_of_machine``); single-site systems bypass the
+        dispatch stage entirely, so the default ``"sticky"`` keeps flat
+        sweeps bit-identical to pre-federation ones.
     """
 
     system: Union[str, SystemSpec, None] = None
@@ -112,6 +121,7 @@ class SweepSpec:
     max_steps: Optional[int] = None
     scenario: Union[str, "object"] = "poisson"  # name or scenarios.Scenario
     observers: tuple = ()  # names or observe.Observer instances
+    dispatcher: Union[str, "object"] = "sticky"  # name or dispatch.Dispatcher
 
     def __post_init__(self):
         object.__setattr__(self, "rates",
@@ -147,6 +157,22 @@ class SweepSpec:
             raise ValueError(
                 f"scenario must be a registered name or a "
                 f"scenarios.Scenario, got {self.scenario!r}"
+            )
+        from repro.core import dispatch
+
+        if isinstance(self.dispatcher, str):
+            name = self.dispatcher.strip().lower()
+            if not dispatch.is_registered(name):
+                raise ValueError(
+                    f"unknown dispatcher {self.dispatcher!r}; "
+                    f"choose from {dispatch.list_dispatchers()} "
+                    f"(or dispatch.register(...) your own)"
+                )
+            object.__setattr__(self, "dispatcher", name)
+        elif not callable(getattr(self.dispatcher, "dispatch", None)):
+            raise ValueError(
+                f"dispatcher must be a registered name or a "
+                f"dispatch.Dispatcher, got {self.dispatcher!r}"
             )
         from repro.core import observe
 
@@ -188,6 +214,12 @@ class SweepSpec:
         from repro.core import observe
 
         return observe.resolve(self.observers)
+
+    def resolve_dispatcher(self):
+        """Materialize the :class:`repro.core.dispatch.Dispatcher`."""
+        from repro.core import dispatch
+
+        return dispatch.resolve(self.dispatcher)
 
     def resolve_system(self) -> SystemSpec:
         """Materialize the SystemSpec, applying queue/fairness overrides.
@@ -237,10 +269,16 @@ class SweepSpec:
                 "queue_size": self.system.queue_size,
                 "fairness_factor": self.system.fairness_factor,
             }
+            if self.system.site_of_machine is not None:
+                system["site_of_machine"] = list(self.system.site_of_machine)
         else:
             system = self.system
         scenario = (self.scenario if isinstance(self.scenario, str)
                     else self.scenario.to_json_dict())
+        from repro.core import dispatch
+
+        dispatcher = (self.dispatcher if isinstance(self.dispatcher, str)
+                      else dispatch.to_json_dict(self.dispatcher))
         observers = []
         for ob in self.observers:
             if isinstance(ob, str):
@@ -256,6 +294,7 @@ class SweepSpec:
             "system": system,
             "scenario": scenario,
             "observers": observers,
+            "dispatcher": dispatcher,
             "rates": list(self.rates),
             "reps": self.reps,
             "n_tasks": self.n_tasks,
@@ -278,26 +317,32 @@ class SweepSpec:
         d = dict(d)
         system = d.get("system")
         if isinstance(system, dict):
+            sites = system.get("site_of_machine")
             system = SystemSpec(
                 eet=np.asarray(system["eet"], np.float32),
                 p_dyn=np.asarray(system["p_dyn"], np.float32),
                 p_idle=np.asarray(system["p_idle"], np.float32),
                 queue_size=int(system.get("queue_size", 2)),
                 fairness_factor=float(system.get("fairness_factor", 1.0)),
+                site_of_machine=None if sites is None else tuple(sites),
             )
         scenario = d.get("scenario", "poisson")
         if isinstance(scenario, dict):
             scenario = scenarios.Scenario.from_json_dict(scenario)
-        from repro.core import observe
+        from repro.core import dispatch, observe
 
         observers = tuple(
             observe.from_json_dict(ob) if isinstance(ob, dict) else ob
             for ob in d.get("observers", ())
         )
+        dispatcher = d.get("dispatcher", "sticky")
+        if isinstance(dispatcher, dict):
+            dispatcher = dispatch.from_json_dict(dispatcher)
         return cls(
             system=system,
             scenario=scenario,
             observers=observers,
+            dispatcher=dispatcher,
             rates=tuple(d["rates"]),
             reps=int(d["reps"]),
             n_tasks=int(d["n_tasks"]),

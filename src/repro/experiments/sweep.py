@@ -25,7 +25,7 @@ import sys
 import time
 
 from repro import scenarios
-from repro.core import observe, policy
+from repro.core import dispatch, observe, policy
 from repro.experiments.results import SweepResult
 from repro.experiments.runner import run_sweep
 from repro.experiments.spec import (
@@ -69,6 +69,13 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
     ap.add_argument("--list-scenarios", action="store_true",
                     help="list the registered workload scenarios and fleet "
                          "builders, then exit")
+    ap.add_argument("--dispatcher", default="sticky",
+                    help="federation site-selection rule for multi-site "
+                         "systems (default: sticky; see --list-dispatchers)."
+                         " Inert on single-site systems.")
+    ap.add_argument("--list-dispatchers", action="store_true",
+                    help="list the registered federation dispatchers and "
+                         "exit")
     ap.add_argument("--observers", default="",
                     help="comma list of registered engine observers to "
                          "attach (e.g. timeline,task_log; see "
@@ -98,6 +105,9 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
     if args.list_observers:
         print_observer_list()
         raise SystemExit(0)
+    if args.list_dispatchers:
+        print_dispatcher_list()
+        raise SystemExit(0)
 
     heuristics = tuple(
         h.strip() for h in args.heuristics.split(",") if h.strip()
@@ -122,6 +132,12 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
         ap.error(
             f"unknown system {args.system!r}; registered fleets: "
             + ", ".join(scenarios.list_fleets())
+        )
+    if not dispatch.is_registered(args.dispatcher):
+        ap.error(
+            f"unknown dispatcher {args.dispatcher!r}; registered "
+            "dispatchers: " + ", ".join(dispatch.list_dispatchers())
+            + " (run with --list-dispatchers for details)"
         )
     observers = tuple(
         o.strip() for o in args.observers.split(",") if o.strip()
@@ -148,6 +164,7 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
             fairness_factor=args.fairness_factor,
             use_pallas_phase1=args.pallas_phase1,
             observers=observers,
+            dispatcher=args.dispatcher,
         )
     except ValueError as e:
         ap.error(str(e))  # clean exit 2 instead of a traceback
@@ -190,6 +207,13 @@ def print_observer_list(file=None) -> None:
         print(f"{name:22s} {observe.describe(name)}", file=file)
 
 
+def print_dispatcher_list(file=None) -> None:
+    """One line per registered federation dispatcher: name + description."""
+    file = file if file is not None else sys.stdout
+    for name in dispatch.list_dispatchers():
+        print(f"{name:14s} {dispatch.describe(name)}", file=file)
+
+
 def print_summary(result: SweepResult, file=None) -> None:
     """Human-readable per-cell table (one line per heuristic x rate)."""
     file = file if file is not None else sys.stdout
@@ -213,10 +237,13 @@ def main(argv=None) -> SweepResult:
         "scenario fleet" if spec.resolve_scenario().fleet is not None
         else "paper"
     )
+    n_sites = spec.resolve_system().n_sites
+    fed = (f" sites={n_sites} dispatcher={args.dispatcher}"
+           if n_sites > 1 else "")
     print(f"sweep: {len(spec.heuristics)} heuristics x "
           f"{len(spec.rates)} rates x {spec.reps} reps "
           f"({n} traces of {spec.n_tasks} tasks) "
-          f"on system={system_label} scenario={args.scenario}",
+          f"on system={system_label} scenario={args.scenario}{fed}",
           flush=True)
     t0 = time.perf_counter()
     result = run_sweep(spec)

@@ -38,7 +38,9 @@ from repro.scenarios.deadlines import PaperDeadlines, ScaledDeadlines
 from repro.scenarios.fleets import (
     AwsFleet,
     CvbFleet,
+    FederatedFleet,
     FleetBuilder,
+    MixedSitesFleet,
     PaperFleet,
     RangeFleet,
     get_fleet,
@@ -65,8 +67,10 @@ __all__ = [
     "DeadlineModel",
     "DiurnalArrivals",
     "DriftMix",
+    "FederatedFleet",
     "FlashCrowdArrivals",
     "FleetBuilder",
+    "MixedSitesFleet",
     "GammaRuntimes",
     "LognormalRuntimes",
     "MMPPArrivals",
@@ -131,6 +135,15 @@ for _name, _scn in [
     ("wide-fleet", Scenario(PoissonArrivals(), UniformMix(),
                             PaperDeadlines(), GammaRuntimes(),
                             fleet=CvbFleet(n_task_types=8, n_machines=6))),
+    # Federation stress: 2-site paper replica under a skewed type mix.
+    # With the type-affine sticky dispatcher (dispatch.Sticky(by_type=True))
+    # the skewed mix becomes per-site arrival skew — one site drowning
+    # while the other idles, the regime fair_spill/least_queued target.
+    ("federated-skew", Scenario(PoissonArrivals(),
+                                WeightedMix((0.55, 0.25, 0.12, 0.08)),
+                                PaperDeadlines(), GammaRuntimes(),
+                                fleet=FederatedFleet(base="paper",
+                                                     n_sites=2))),
 ]:
     register(_name, _scn)
 del _name, _scn

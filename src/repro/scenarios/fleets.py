@@ -169,6 +169,107 @@ class RangeFleet:
 
 
 # --------------------------------------------------------------------------
+# Federation builders: multi-site systems for the two-level dispatch layer
+# --------------------------------------------------------------------------
+
+
+@component("fleet")
+@dataclasses.dataclass(frozen=True)
+class FederatedFleet:
+    """F replicas of a registered base fleet, one per site.
+
+    The base system's machines are tiled F times and ``site_of_machine``
+    partitions the copies — ``paper_x2``/``paper_x4`` are registered
+    instances replicating the Sec. VI-A 4×4 system. Every replica shares
+    the base EET/power profile, so dispatch quality (not machine
+    heterogeneity) is the isolated variable.
+    """
+
+    kind: ClassVar[str] = "federated"
+    base: str = "paper"
+    n_sites: int = 2
+
+    def __post_init__(self):
+        if self.n_sites < 1:
+            raise ValueError("federation must have >= 1 site")
+
+    def build(self) -> SystemSpec:
+        spec = get_fleet(self.base).build()
+        F, M = self.n_sites, spec.n_machines
+        return SystemSpec(
+            eet=np.tile(np.asarray(spec.eet), (1, F)),
+            p_dyn=np.tile(np.asarray(spec.p_dyn), F),
+            p_idle=np.tile(np.asarray(spec.p_idle), F),
+            queue_size=spec.queue_size,
+            fairness_factor=spec.fairness_factor,
+            site_of_machine=tuple(s for s in range(F) for _ in range(M)),
+        )
+
+
+@component("fleet")
+@dataclasses.dataclass(frozen=True)
+class MixedSitesFleet:
+    """Heterogeneous federation: per-site CVB-generated machine groups.
+
+    Each site gets its own machine count and machine-heterogeneity
+    coefficient (``site_machines[i]`` machines with ``cv_mach[i]``), all
+    serving the same S task types — e.g. a big uniform site next to a
+    small highly-heterogeneous one, the regime where EET-aware dispatch
+    (``min_eet``) separates from load-blind rules. Deterministic in
+    ``seed``.
+    """
+
+    kind: ClassVar[str] = "mixed_sites"
+    n_task_types: int = 4
+    site_machines: Tuple[int, ...] = (4, 3)
+    cv_mach: Tuple[float, ...] = (0.3, 0.9)
+    seed: int = 0
+    mean_task: float = 3.0
+    cv_task: float = 0.6
+    p_dyn_range: Tuple[float, float] = (1.0, 3.0)
+    p_idle_range: Tuple[float, float] = (0.03, 0.08)
+    queue_size: int = 2
+    fairness_factor: float = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "site_machines",
+                           tuple(int(m) for m in self.site_machines))
+        object.__setattr__(self, "cv_mach",
+                           tuple(float(c) for c in self.cv_mach))
+        object.__setattr__(self, "p_dyn_range",
+                           tuple(float(x) for x in self.p_dyn_range))
+        object.__setattr__(self, "p_idle_range",
+                           tuple(float(x) for x in self.p_idle_range))
+        if len(self.site_machines) != len(self.cv_mach):
+            raise ValueError("site_machines and cv_mach must align per site")
+        if not self.site_machines or min(self.site_machines) < 1:
+            raise ValueError("every site needs >= 1 machine")
+
+    def build(self) -> SystemSpec:
+        key = jax.random.PRNGKey(self.seed)
+        eet_cols, p_dyn_cols, p_idle_cols, sites = [], [], [], []
+        for s, (m, cv) in enumerate(zip(self.site_machines, self.cv_mach)):
+            key, k_eet, k_dyn, k_idle = jax.random.split(key, 4)
+            eet_cols.append(np.asarray(eet_mod.cvb_eet(
+                k_eet, self.n_task_types, m,
+                mean_task=self.mean_task, cv_task=self.cv_task, cv_mach=cv,
+            )))
+            p_dyn, p_idle = _sample_powers(
+                k_dyn, k_idle, m, self.p_dyn_range, self.p_idle_range)
+            p_dyn_cols.append(p_dyn)
+            p_idle_cols.append(p_idle)
+            sites.extend([s] * m)
+        return SystemSpec(
+            eet=np.concatenate(eet_cols, axis=1),
+            p_dyn=np.concatenate(p_dyn_cols),
+            p_idle=np.concatenate(p_idle_cols),
+            queue_size=self.queue_size,
+            fairness_factor=self.fairness_factor,
+            site_of_machine=tuple(sites),
+        )
+
+
+# --------------------------------------------------------------------------
 # Fleet registry (shared NameRegistry mechanics, like policies/scenarios)
 # --------------------------------------------------------------------------
 
@@ -211,6 +312,9 @@ for _name, _fleet in [
     ("aws", AwsFleet()),
     ("cvb", CvbFleet()),
     ("range", RangeFleet()),
+    ("paper_x2", FederatedFleet(base="paper", n_sites=2)),
+    ("paper_x4", FederatedFleet(base="paper", n_sites=4)),
+    ("mixed_sites", MixedSitesFleet()),
 ]:
     register_fleet(_name, _fleet)
 del _name, _fleet

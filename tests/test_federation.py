@@ -1,0 +1,323 @@
+"""Tests for the federated multi-site layer (sites + dispatch + plumbing).
+
+Contracts under test:
+
+  * degeneracy — a single-site partition under the default ``sticky``
+    dispatcher is bit-identical to the flat pre-federation engine (the
+    frozen PR 4 metrics snapshot itself is pinned in
+    ``tests/test_scenario_regression.py``, which runs the default
+    single-site path);
+  * oracle — the pure-Python interpreter reproduces the federated engine
+    event-for-event (task_log cross-check) for ``round_robin`` and
+    ``fair_spill`` on a 2-site paper fleet;
+  * partition safety — no dispatcher/policy combination ever places a
+    task on a machine outside its dispatched site (hypothesis property);
+  * single-jit — one trace per (policy, dispatcher, scenario) triple,
+    including through the CLI across every built-in dispatcher;
+  * registries and JSON round-trips for dispatchers, federated fleets
+    and site-partitioned SystemSpecs.
+"""
+import dataclasses
+import json
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro import experiments, scenarios
+from repro.core import api, dispatch, engine, pyengine, workload
+from repro.core.types import SystemSpec
+from repro.experiments import runner, sweep
+
+SPEC = api.paper_system()
+SPEC2 = scenarios.get_fleet("paper_x2").build()
+
+
+def _dyadic(x):
+    return (np.round(np.asarray(x) * 64) / 64).astype(np.float32)
+
+
+def _trace(seed, n, rate, eet):
+    tr = workload.poisson_trace(jax.random.PRNGKey(seed), n, rate, eet)
+    return tr._replace(
+        arrival=jnp.asarray(_dyadic(tr.arrival)),
+        deadline=jnp.asarray(_dyadic(tr.deadline)),
+        exec_actual=jnp.asarray(_dyadic(tr.exec_actual)),
+    )
+
+
+# -------------------------------------------------------------- registries
+def test_builtin_dispatchers_registered():
+    names = dispatch.list_dispatchers()
+    for name in ("sticky", "round_robin", "least_queued", "min_eet",
+                 "fair_spill"):
+        assert name in names
+        assert dispatch.is_registered(name)
+    assert isinstance(dispatch.get("STICKY"), dispatch.Sticky)  # case-insens
+    with pytest.raises(KeyError, match="choose from"):
+        dispatch.get("nope")
+    with pytest.raises(TypeError, match="Dispatcher protocol"):
+        dispatch.register("bad", object())
+
+
+def test_dispatcher_json_round_trip():
+    for d in (dispatch.Sticky(salt=3, by_type=True), dispatch.RoundRobin(),
+              dispatch.LeastQueued(), dispatch.MinEet(),
+              dispatch.FairSpill(salt=1)):
+        back = dispatch.from_json_dict(
+            json.loads(json.dumps(dispatch.to_json_dict(d))))
+        assert back == d
+
+
+def test_federated_fleets_registered_and_partitioned():
+    for name, n_sites, per_site in (("paper_x2", 2, 4), ("paper_x4", 4, 4)):
+        spec = scenarios.get_fleet(name).build()
+        assert spec.n_sites == n_sites
+        assert spec.n_machines == n_sites * per_site
+        assert spec.eet.shape == (4, n_sites * per_site)
+        # replicas: every site sees the same EET block
+        for s in range(1, n_sites):
+            np.testing.assert_array_equal(
+                spec.eet[:, :per_site],
+                spec.eet[:, s * per_site:(s + 1) * per_site])
+    mixed = scenarios.get_fleet("mixed_sites").build()
+    assert mixed.n_sites == 2
+    assert mixed.site_of_machine == (0, 0, 0, 0, 1, 1, 1)
+
+
+def test_system_spec_partition_validation():
+    with pytest.raises(ValueError, match="entries for"):
+        dataclasses.replace(SPEC, site_of_machine=(0, 1))
+    with pytest.raises(ValueError, match="contiguous"):
+        dataclasses.replace(SPEC, site_of_machine=(0, 0, 2, 2))
+    flat = dataclasses.replace(SPEC, site_of_machine=None)
+    assert flat.n_sites == 1 and flat.sites == (0, 0, 0, 0)
+
+
+# -------------------------------------------------- single-site degeneracy
+def test_single_site_sticky_bit_identical_to_flat_engine():
+    """An explicit one-site partition + every dispatcher == the flat
+    engine, metric-leaf for metric-leaf, bit for bit."""
+    tr = _trace(0, 120, 3.0, SPEC.eet)
+    one_site = dataclasses.replace(SPEC, site_of_machine=(0, 0, 0, 0))
+    for h in ("FELARE", "MM"):
+        flat = engine.simulate(tr, SPEC, h)
+        for d in dispatch.list_dispatchers():
+            fed = engine.simulate(tr, one_site, h, dispatcher=d)
+            for f in flat._fields:
+                a = np.asarray(getattr(flat, f))
+                b = np.asarray(getattr(fed, f))
+                assert a.tobytes() == b.tobytes(), f"{h}/{d}/{f}"
+
+
+def test_single_site_sweep_metrics_unchanged_by_dispatcher_field():
+    """run_sweep on a flat system ignores the dispatcher choice entirely."""
+    base = dict(rates=(3.0,), reps=2, n_tasks=60, heuristics=("ELARE",),
+                seed=1)
+    ref = experiments.run_sweep(experiments.SweepSpec(**base))
+    alt = experiments.run_sweep(experiments.SweepSpec(
+        **base, dispatcher="least_queued"))
+    for f in ref.metrics._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref.metrics, f)),
+            np.asarray(getattr(alt.metrics, f)), f)
+
+
+# --------------------------------------------------------- oracle parity
+@pytest.mark.parametrize("dispatcher", ["round_robin", "fair_spill"])
+@pytest.mark.parametrize("heuristic", ["ELARE", "FELARE"])
+def test_two_site_task_log_matches_oracle_event_for_event(
+        heuristic, dispatcher):
+    """Engine vs pure-Python oracle on the 2-site paper fleet: per-task
+    map/start/end/machine/site/status agree at every event timestamp."""
+    for seed in (0, 5):
+        tr = _trace(seed, 100, 4.0, SPEC2.eet)
+        _, aux = engine.simulate(tr, SPEC2, heuristic,
+                                 observers=("task_log",),
+                                 dispatcher=dispatcher)
+        log = {k: np.asarray(v) for k, v in aux["task_log"].items()}
+        ref = pyengine.simulate(tr, SPEC2, heuristic,
+                                dispatcher=dispatcher)["task_log"]
+        np.testing.assert_array_equal(log["status"], ref["status"])
+        np.testing.assert_array_equal(log["machine"], ref["machine"])
+        np.testing.assert_array_equal(log["site"], ref["site"])
+        for field in ("map_time", "start_time", "end_time"):
+            np.testing.assert_allclose(
+                log[field], ref[field], rtol=1e-6, atol=1e-6,
+                err_msg=f"{field} seed{seed}")
+
+
+# ------------------------------------------------------ partition property
+@given(seed=st.integers(0, 1000), rate=st.floats(1.0, 8.0),
+       dispatcher=st.sampled_from(
+           ["sticky", "round_robin", "least_queued", "min_eet",
+            "fair_spill"]))
+@settings(max_examples=10, deadline=None)
+def test_dispatch_never_crosses_site_boundaries(seed, rate, dispatcher):
+    """No task ever runs on a machine outside its dispatched site, and
+    every admitted task carries a valid site id."""
+    tr = _trace(seed, 80, rate, SPEC2.eet)
+    _, aux = engine.simulate(tr, SPEC2, "FELARE", observers=("task_log",),
+                             dispatcher=dispatcher)
+    log = {k: np.asarray(v) for k, v in aux["task_log"].items()}
+    sites = np.asarray(SPEC2.site_of_machine)
+    ran = log["machine"] >= 0
+    np.testing.assert_array_equal(
+        sites[log["machine"][ran]], log["site"][ran],
+        err_msg=f"{dispatcher}: task ran outside its site")
+    from repro.core.types import UNARRIVED
+
+    arrived = log["status"] != UNARRIVED
+    assert np.all((log["site"][arrived] >= 0)
+                  & (log["site"][arrived] < SPEC2.n_sites))
+    assert np.all(log["site"][~arrived] == -1)
+
+
+# ------------------------------------------------------------- single jit
+def test_one_jit_trace_per_policy_dispatcher_scenario():
+    heuristics = ("ELARE", "FELARE")
+    runner._TRACE_LOG.clear()
+    for d in ("sticky", "round_robin"):
+        experiments.run_sweep(experiments.SweepSpec(
+            system="paper_x2", rates=(3.0,), reps=2, n_tasks=50,
+            heuristics=heuristics, seed=1, dispatcher=d,
+        ))
+    expected = {(h, "poisson", d)
+                for h in heuristics for d in ("sticky", "round_robin")}
+    assert set(runner._TRACE_LOG) == expected
+    assert len(runner._TRACE_LOG) == len(expected)
+    runner._TRACE_LOG.clear()
+
+
+def test_cli_two_site_sweep_all_dispatchers(tmp_path):
+    """A 2-site federation sweep runs end-to-end through the CLI for every
+    built-in dispatcher, each in one jitted program (trace-log pinned),
+    and writes the sweep artifacts."""
+    runner._TRACE_LOG.clear()
+    for d in dispatch.list_dispatchers():
+        out = tmp_path / d
+        sweep.main([
+            "--system", "paper_x2", "--dispatcher", d,
+            "--rates", "3.0", "--reps", "1", "--tasks", "40",
+            "--heuristics", "ELARE", "--out", str(out),
+        ])
+        payload = json.loads((out / "sweep.json").read_text())
+        assert payload["spec"]["dispatcher"] == d
+        assert (out / "sweep.csv").exists()
+    expected = {("ELARE", "poisson", d) for d in dispatch.list_dispatchers()}
+    assert set(runner._TRACE_LOG) == expected
+    assert len(runner._TRACE_LOG) == len(expected)
+    runner._TRACE_LOG.clear()
+
+
+def test_cli_rejects_unknown_dispatcher(capsys):
+    with pytest.raises(SystemExit):
+        sweep.build_spec(["--dispatcher", "nope"])
+    assert "unknown dispatcher" in capsys.readouterr().err
+
+
+def test_cli_list_dispatchers(capsys):
+    with pytest.raises(SystemExit):
+        sweep.build_spec(["--list-dispatchers"])
+    out = capsys.readouterr().out
+    for name in dispatch.list_dispatchers():
+        assert name in out
+
+
+# ---------------------------------------------------------- spec plumbing
+def test_spec_rejects_unknown_dispatcher():
+    with pytest.raises(ValueError, match="unknown dispatcher"):
+        experiments.SweepSpec(dispatcher="nope")
+    with pytest.raises(ValueError, match="Dispatcher"):
+        experiments.SweepSpec(dispatcher=42)
+
+
+def test_spec_json_roundtrip_with_dispatcher_and_sites():
+    system = SystemSpec(
+        eet=np.asarray([[1.0, 2.0, 3.0], [3.0, 4.0, 5.0]], np.float32),
+        p_dyn=np.asarray([1.5, 2.5, 1.0], np.float32),
+        p_idle=np.asarray([0.05, 0.05, 0.04], np.float32),
+        queue_size=3, site_of_machine=(0, 0, 1),
+    )
+    spec = experiments.SweepSpec(
+        system=system, rates=(2.0,), reps=2, n_tasks=40,
+        heuristics=("MM",), dispatcher=dispatch.FairSpill(salt=2),
+    )
+    back = experiments.SweepSpec.from_json_dict(
+        json.loads(json.dumps(spec.to_json_dict())))
+    assert back.dispatcher == dispatch.FairSpill(salt=2)
+    assert back.system.site_of_machine == (0, 0, 1)
+    named = experiments.SweepSpec(system="paper_x2",
+                                  dispatcher="least_queued")
+    back = experiments.SweepSpec.from_json_dict(
+        json.loads(json.dumps(named.to_json_dict())))
+    assert back == named
+
+
+def test_run_study_accepts_dispatcher():
+    res = api.run_study("FELARE", (3.0,), SPEC2, n_traces=2, n_tasks=40,
+                        dispatcher="round_robin")
+    assert len(res) == 1
+    assert float(res[0].completion_rate) > 0
+
+
+# ------------------------------------------------------ per-site telemetry
+def test_timeline_per_site_series():
+    """The per-site timeline splits the global series exactly: site sums
+    recover the totals, and the flat pytree is untouched by default."""
+    from repro.core import observe
+
+    tr = _trace(2, 120, 5.0, SPEC2.eet)
+    _, aux = engine.simulate(
+        tr, SPEC2, "ELARE", dispatcher="round_robin",
+        observers=(observe.Timeline(per_site=True),))
+    tl = {k: np.asarray(v) for k, v in aux["timeline"].items()}
+    assert tl["site_qlen"].shape == (64, 2)
+    assert tl["site_e_dyn"].shape == (64, 2)
+    np.testing.assert_array_equal(tl["site_qlen"].sum(-1), tl["qlen"])
+    # per-site dynamic energy sums to the finalized-run total: at the last
+    # bucket every run has finalized, so it matches e_dyn exactly.
+    np.testing.assert_allclose(tl["site_e_dyn"][-1].sum(), tl["e_dyn"][-1],
+                               rtol=1e-5)
+    # default stays flat
+    _, aux = engine.simulate(tr, SPEC2, "ELARE", dispatcher="round_robin",
+                             observers=("timeline",))
+    assert "site_qlen" not in aux["timeline"]
+
+
+# --------------------------------------------------- dispatch behaviours
+def test_least_queued_balances_a_burst():
+    """Simultaneous admissions spread across sites instead of dog-piling
+    the momentarily-emptiest one (the sequential-balance contract)."""
+    n = 16
+    arrival = jnp.zeros((n,), jnp.float32)  # one burst, all at t=0
+    task_type = jnp.zeros((n,), jnp.int32)
+    deadline = jnp.full((n,), 100.0, jnp.float32)
+    exec_actual = jnp.ones((n, SPEC2.n_machines), jnp.float32)
+    tr = workload.Trace(arrival, task_type, deadline, exec_actual)
+    _, aux = engine.simulate(tr, SPEC2, "MM", observers=("task_log",),
+                             dispatcher="least_queued")
+    site = np.asarray(aux["task_log"]["site"])
+    counts = np.bincount(site, minlength=2)
+    assert counts[0] == counts[1] == n // 2
+
+
+def test_fair_spill_balances_suffered_burst_like_least_queued():
+    """A t=0 burst of one type is suffered by Alg. 4 from the first event
+    (arrivals but no completions yet), so fair_spill spills *every* task —
+    degenerating to least_queued's equal split rather than sticky homes."""
+    n = 16
+    tr = workload.Trace(
+        arrival=jnp.zeros((n,), jnp.float32),
+        task_type=jnp.zeros((n,), jnp.int32),
+        deadline=jnp.full((n,), 100.0, jnp.float32),
+        exec_actual=jnp.ones((n, SPEC2.n_machines), jnp.float32),
+    )
+    _, a_spill = engine.simulate(tr, SPEC2, "MM", observers=("task_log",),
+                                 dispatcher="fair_spill")
+    spill = np.asarray(a_spill["task_log"]["site"])
+    counts = np.bincount(spill, minlength=2)
+    assert counts[0] == counts[1] == n // 2
