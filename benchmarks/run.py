@@ -5,14 +5,15 @@ human-readable block per figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig4] [--full]
 
-``--perf-out DIR`` instead runs the engine perf benchmark (the hot
-vmapped sweep, observers off/on) and appends a ``BENCH_<n>.json``
-artifact under DIR — one numbered file per run, so the directory
-accumulates the project's wall-clock/compile-time trajectory over time.
-``--perf-baseline PATH`` additionally compares the fresh warm time
-against a checked-in baseline (``benchmarks/BENCH_0.json`` is the first)
-and prints the ratio — informational, never failing, matching the
-non-blocking CI bench step.
+``--perf-out DIR`` instead runs the engine perf benchmarks (the hot
+vmapped sweep with observers off/on, plus the federation compile/warm
+scaling sweep over F) and appends a ``BENCH_<n>.json`` artifact under DIR
+— one numbered file per run, so the directory accumulates the project's
+wall-clock/compile-time trajectory over time. ``--perf-baseline PATH``
+additionally compares the fresh warm times against a checked-in baseline
+(``benchmarks/BENCH_1.json`` carries the current reference, including the
+per-F federation rows) and *fails* — exit status 1, the blocking CI bench
+step — when any warm time exceeds 1.5x its baseline.
 """
 from __future__ import annotations
 
@@ -86,12 +87,99 @@ def perf_vmapped_sweep(*, reps: int = 4, n_tasks: int = 300,
     }
 
 
+def perf_federation_scaling(*, site_counts=(1, 2, 8, 32), reps: int = 2,
+                            n_tasks: int = 150, rates=(3.0,)) -> dict:
+    """Compile/warm wall clock of the batched engine vs site count F.
+
+    Per F, AOT-splits the batched simulator: ``trace_s`` (jaxpr trace +
+    lowering), ``compile_s`` (XLA codegen), then a warm run of the
+    compiled executable. The masked-vmap site loop (plus the
+    block-diagonal reshape fast path for the uniform ``paper_xF`` fleets)
+    keeps both flat in F — wider arrays, same program. The derived
+    ``compile_ratio_f32_vs_f2`` (on trace+compile, the end-to-end cost of
+    a fresh jit) is the ISSUE acceptance metric (<= 1.2, asserted
+    wall-clock by ``tests/test_compile_flatness.py``). The F=1 row runs
+    first and doubles as the jit/XLA init warmup, so later rows aren't
+    credited for one-time setup the first row paid.
+
+    Measured AOT (``jit(...).lower(flat).compile()``) rather than
+    cold-minus-warm ``simulate_batch`` calls: first-run dispatch overhead
+    pollutes the subtraction by several hundred ms at the large-F end.
+    """
+    import jax
+
+    from repro import scenarios
+    from repro.core import dispatch, engine, policy
+    from repro.datapipe import synthetic
+
+    rows = []
+    for f_sites in site_counts:
+        fleet = "paper" if f_sites == 1 else f"paper_x{f_sites}"
+        system = scenarios.get_fleet(fleet).build()
+        stacked = synthetic.trace_stack(
+            jax.random.PRNGKey(0), tuple(rates), reps, n_tasks, system.eet
+        )
+        flat = jax.tree.map(
+            lambda x: x.reshape((len(rates) * reps,) + x.shape[2:]), stacked
+        )
+        sim = engine.make_simulator(
+            policy.get("ELARE"), system.as_jax(),
+            queue_size=system.queue_size,
+            fairness_factor=float(system.fairness_factor),
+            dispatcher=(dispatch.resolve("round_robin")
+                        if f_sites > 1 else None),
+            site_of_machine=system.sites,
+        )
+        trace_s = compile_s = float("inf")
+        for rep in range(2):
+            # min-of-2 against scheduler noise; the second repeat trims a
+            # task so its HLO differs, dodging the in-process executable
+            # cache (an identical program would "compile" in ~0s).
+            fr = (flat if rep == 0 else
+                  jax.tree.map(lambda x: x[:, :-1] if x.ndim > 1 else x,
+                               flat))
+            t0 = time.perf_counter()
+            lowered = jax.jit(jax.vmap(sim)).lower(fr)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+            trace_s = min(trace_s, t1 - t0)
+            compile_s = min(compile_s, t2 - t1)
+        jax.block_until_ready(compiled(fr))  # first run: alloc + dispatch
+        t0w = time.perf_counter()
+        jax.block_until_ready(compiled(fr))
+        warm_s = time.perf_counter() - t0w
+        rows.append({
+            "n_sites": f_sites,
+            "n_machines": system.n_machines,
+            "trace_s": round(trace_s, 4),
+            "compile_s": round(compile_s, 4),
+            "warm_s": round(warm_s, 4),
+        })
+    by_f = {r["n_sites"]: r for r in rows}
+
+    def total(r):
+        return r["trace_s"] + r["compile_s"]
+
+    ratio = (total(by_f[32]) / total(by_f[2])
+             if 2 in by_f and 32 in by_f else None)
+    return {
+        "bench": "federation_scaling",
+        "config": {"reps": reps, "n_tasks": n_tasks, "rates": list(rates),
+                   "heuristic": "ELARE", "dispatcher": "round_robin"},
+        "sites": rows,
+        "compile_ratio_f32_vs_f2":
+            None if ratio is None else round(ratio, 3),
+    }
+
+
 def write_perf_artifact(outdir, baseline=None) -> pathlib.Path:
-    """Run the perf bench and write the next ``BENCH_<n>.json`` in outdir.
+    """Run the perf benches and write the next ``BENCH_<n>.json`` in outdir.
 
     With ``baseline`` (a prior BENCH_*.json, e.g. the checked-in
-    ``benchmarks/BENCH_0.json``), prints a warm-time comparison per
-    observer configuration — informational only, never raises.
+    ``benchmarks/BENCH_1.json``), compares warm times per configuration
+    and exits nonzero when any exceeds ``WARM_TOLERANCE`` x its baseline
+    — the blocking CI perf gate.
     """
     outdir = pathlib.Path(outdir)
     outdir.mkdir(parents=True, exist_ok=True)
@@ -99,32 +187,66 @@ def write_perf_artifact(outdir, baseline=None) -> pathlib.Path:
             if (m := re.fullmatch(r"BENCH_(\d+)\.json", p.name))]
     path = outdir / f"BENCH_{max(seen, default=-1) + 1}.json"
     payload = perf_vmapped_sweep()
+    payload["federation_scaling"] = perf_federation_scaling()
     path.write_text(json.dumps(payload, indent=2))
     print(json.dumps(payload, indent=2))
     print(f"wrote {path}")
-    if baseline:
-        compare_to_baseline(payload, baseline)
+    if baseline and not compare_to_baseline(payload, baseline):
+        raise SystemExit(1)
     return path
 
 
-def compare_to_baseline(payload: dict, baseline) -> None:
-    """Print warm-time ratios of ``payload`` vs a baseline BENCH JSON."""
+#: Blocking warm-time regression tolerance vs the checked-in baseline.
+WARM_TOLERANCE = 1.5
+
+
+def compare_to_baseline(payload: dict, baseline) -> bool:
+    """Compare warm times of ``payload`` vs a baseline BENCH JSON.
+
+    Returns False (the CI-blocking verdict) when any matched
+    configuration — observer rows of the vmapped sweep, per-F rows of the
+    federation scaling bench — regresses past ``WARM_TOLERANCE`` x its
+    baseline warm time. A missing baseline file passes (first run on a
+    fresh checkout).
+    """
     baseline = pathlib.Path(baseline)
     if not baseline.exists():
         print(f"perf baseline {baseline} not found; skipping comparison")
-        return
+        return True
     base = json.loads(baseline.read_text())
+    ok = True
+
+    def check(tag, warm, ref_warm):
+        nonlocal ok
+        if not ref_warm:
+            return
+        ratio = warm / ref_warm
+        bad = ratio > WARM_TOLERANCE
+        ok = ok and not bad
+        print(f"  {tag:40s} {warm:.3f}s vs {ref_warm:.3f}s "
+              f"({ratio:.2f}x){' REGRESSION' if bad else ''}")
+
     base_by_obs = {tuple(r["observers"]): r
                    for r in base.get("simulate_batch", ())}
-    print(f"\nwarm-time vs baseline {baseline}:")
+    print(f"\nwarm-time vs baseline {baseline} "
+          f"(blocking at {WARM_TOLERANCE}x):")
     for row in payload["simulate_batch"]:
         ref = base_by_obs.get(tuple(row["observers"]))
-        if not ref or not ref.get("warm_s"):
-            continue
-        ratio = row["warm_s"] / ref["warm_s"]
-        tag = "observers=" + (",".join(row["observers"]) or "off")
-        print(f"  {tag:40s} {row['warm_s']:.3f}s vs {ref['warm_s']:.3f}s "
-              f"({ratio:.2f}x)")
+        if ref:
+            check("observers=" + (",".join(row["observers"]) or "off"),
+                  row["warm_s"], ref.get("warm_s"))
+    fed = payload.get("federation_scaling", {}).get("sites", ())
+    base_by_f = {r["n_sites"]: r
+                 for r in base.get("federation_scaling", {})
+                             .get("sites", ())}
+    for row in fed:
+        ref = base_by_f.get(row["n_sites"])
+        if ref:
+            check(f"federation F={row['n_sites']}", row["warm_s"],
+                  ref.get("warm_s"))
+    if not ok:
+        print(f"FAIL: warm time regressed past {WARM_TOLERANCE}x baseline")
+    return ok
 
 
 def main() -> None:
@@ -138,7 +260,8 @@ def main() -> None:
     ap.add_argument("--perf-baseline", default=None, metavar="PATH",
                     help="with --perf-out: compare warm times against this "
                          "prior BENCH_<n>.json (e.g. the checked-in "
-                         "benchmarks/BENCH_0.json); informational only")
+                         "benchmarks/BENCH_1.json) and exit nonzero past "
+                         f"{WARM_TOLERANCE}x (the blocking CI gate)")
     args = ap.parse_args()
 
     if args.perf_out:

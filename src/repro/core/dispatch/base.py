@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy.context import BIG
+from repro.core.types import site_membership
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,9 +65,7 @@ class DispatchContext:
     @functools.cached_property
     def site_members(self) -> np.ndarray:
         """(F, M) bool — constant membership grid of the partition."""
-        return np.asarray(
-            [self.site_of_machine == s for s in range(self.n_sites)]
-        )
+        return site_membership(self.site_of_machine, self.n_sites)
 
     @functools.cached_property
     def site_ids(self) -> jnp.ndarray:
@@ -95,13 +94,17 @@ class DispatchContext:
     # -- derived per-site EET structure ------------------------------------
     @functools.cached_property
     def eet_min_by_site(self) -> jnp.ndarray:
-        """(S, F) f32 — each type's fastest machine within each site."""
-        cols = [
-            jnp.min(jnp.where(jnp.asarray(self.site_members[s]),
-                              self.eet, BIG), axis=1)
-            for s in range(self.n_sites)
-        ]
-        return jnp.stack(cols, axis=1)
+        """(S, F) f32 — each type's fastest machine within each site.
+
+        One masked reduction over the (S, F, M) grid — like the engine's
+        map stage, the site count F is an array extent here, not a trace
+        dimension, so dispatchers cost the same program at any F.
+        """
+        members = jnp.asarray(self.site_members)  # (F, M) constant
+        return jnp.min(
+            jnp.where(members[None, :, :], self.eet[:, None, :], BIG),
+            axis=2,
+        )
 
     # -- fairness monitor ---------------------------------------------------
     @functools.cached_property

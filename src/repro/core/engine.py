@@ -20,13 +20,15 @@ Each event is processed as five named stages, threading an
 
 ``dispatch`` is the federation's first level: a pluggable
 :class:`~repro.core.dispatch.Dispatcher` assigns each newly-admitted task
-to one of F static *sites* (bounded partitions of the machine set), and
-``map`` then runs the mapping policy once per site under a site-masked
-:class:`~repro.core.policy.MachineView` — no Python loops over sites
-inside the traced body beyond the static F. With one site (every spec
-built before the federation layer) the dispatch stage degenerates to
-"site 0" and the map stage is the exact pre-federation computation, so
-flat runs stay bit-identical.
+to one of F *sites* (bounded partitions of the machine set), and ``map``
+then evaluates the mapping policy as one ``jax.vmap`` over the F
+site-masked :class:`~repro.core.policy.MachineView` batches — the site
+count enters the program as *data* (array extents), never as program
+structure, so trace size and compile time are flat in F: an F=100
+federation compiles the same program as an F=2 one. With one site (every
+spec built before the federation layer) the dispatch stage degenerates
+to "site 0" and the map stage is the exact pre-federation computation,
+so flat runs stay bit-identical.
 
 After every stage, each attached :class:`~repro.core.observe.Observer`
 folds the stage name and the fresh :class:`~repro.core.types.SimState`
@@ -63,6 +65,7 @@ from repro.core.types import (
     SimState,
     SystemArrays,
     Trace,
+    site_membership,
 )
 
 INF = jnp.float32(jnp.inf)
@@ -233,20 +236,40 @@ def _stage_dispatch(st: SimState, trace: Trace, sysarr: SystemArrays,
 
 def _stage_map(st: SimState, trace: Trace, sysarr: SystemArrays,
                select_fn: Callable, fairness_factor: float, n_types: int,
-               site_members: Optional[np.ndarray] = None):
+               site_members: Optional[np.ndarray] = None,
+               site_of_machine: Optional[np.ndarray] = None):
     """Run the per-site mapping policy and apply the combined MapAction.
 
-    ``site_members`` is the static (F, M) partition grid. The policy runs
-    once per site (a static Python loop, unrolled in the trace) over the
-    site's own pending tasks and a site-masked machine view: machines
-    outside the site appear full (``qlen = Q``), empty-queued, and
-    infinitely far away (``avail_base = BIG``, EET rows ``BIG``), so
-    nominators, feasibility guards and the fairness eviction all see a
-    site-local system — in particular ``hopeless``/``rescuable`` use the
-    site's own fastest machine. With F=1 the branch below is literally
-    the pre-federation computation (no masking ops), keeping flat runs
-    bit-exact.
+    ``site_members`` is the (F, M) partition grid — a host constant whose
+    *values* are data, not program structure: the policy is evaluated once
+    as a single ``jax.vmap`` over the F site-masked machine views, so the
+    traced program contains exactly one copy of the mapping computation
+    regardless of F (trace size and compile time are flat in the site
+    count; only array extents grow). Machines outside a site appear full
+    (``qlen = Q``), empty-queued, and infinitely far away (``avail_base =
+    BIG``, EET rows ``BIG``), so nominators, feasibility guards and the
+    fairness eviction all see a site-local system — in particular
+    ``hopeless``/``rescuable`` use the site's own fastest machine.
+
+    The F per-site :class:`MapAction` batches are combined by gathers:
+    machine ``m`` takes its owning site's ``assign``/``queue_drop`` row
+    (``site_of_machine`` is the (M,) owner map), and task ``n`` takes its
+    dispatched site's ``drop`` entry — the same one-owner-per-entry
+    semantics the PR 5 static unroll realized with F masked merges
+    (pinned bit-exact in ``tests/test_siteloop_vmap.py``). With F=1 the
+    branch below is literally the pre-federation computation (no masking
+    ops), keeping flat runs bit-exact.
     """
+    action = _map_action(st, trace, sysarr, select_fn, fairness_factor,
+                         site_members, site_of_machine)
+    return _apply_action(st, trace, action, n_types)
+
+
+def _map_action(st: SimState, trace: Trace, sysarr: SystemArrays,
+                select_fn: Callable, fairness_factor: float,
+                site_members: Optional[np.ndarray] = None,
+                site_of_machine: Optional[np.ndarray] = None) -> MapAction:
+    """The combined :class:`MapAction` of one mapping event (pre-apply)."""
     suffered = fairness.suffered_types(
         st.completed, st.arrived, fairness_factor
     )
@@ -257,7 +280,7 @@ def _stage_map(st: SimState, trace: Trace, sysarr: SystemArrays,
     if n_sites == 1:
         view = MachineView(avail_base=avail_base, queue=st.queue,
                            qlen=st.qlen)
-        action = select_fn(
+        return select_fn(
             st.now,
             st.status == PENDING,
             trace.task_type,
@@ -266,14 +289,56 @@ def _stage_map(st: SimState, trace: Trace, sysarr: SystemArrays,
             sysarr,
             suffered,
         )
-        return _apply_action(st, trace, action, n_types)
 
     M, Q = st.queue.shape
-    assign = jnp.full((M,), -1, jnp.int32)
-    drop = jnp.zeros(st.status.shape, bool)
-    queue_drop = jnp.zeros((M, Q), bool)
-    for s in range(n_sites):
-        in_site = jnp.asarray(site_members[s])  # (M,) bool constant
+    pending = st.status == PENDING
+    owner_np = np.asarray(site_of_machine, np.int32)
+    m = M // n_sites
+    if M % n_sites == 0 and (
+            owner_np == np.repeat(np.arange(n_sites), m)).all():
+        # Block-diagonal fast path: every fleet whose sites are equal
+        # contiguous machine blocks (all `paper_xF` scalings) reshapes the
+        # (M,)-wide state into (F, m) per-site views instead of masking —
+        # the widest op in the vmapped policy is O(m), not O(M), keeping
+        # both XLA codegen time and warm runtime flat in F. Bit-exact vs
+        # the masked path: every machine-axis reduction in policy code is
+        # a min/argmin whose assignment is gated on feasibility
+        # (`phase2`'s `key < BIG`), so dropping the BIG-padded outside
+        # machines changes no reduced value and no tie-break order.
+        S = sysarr.eet.shape[0]
+
+        def one_block(avail_s, queue_s, qlen_s, eet_s, p_dyn_s, p_idle_s, s):
+            view_s = MachineView(avail_base=avail_s, queue=queue_s,
+                                 qlen=qlen_s)
+            sysarr_s = SystemArrays(eet=eet_s, p_dyn=p_dyn_s,
+                                    p_idle=p_idle_s)
+            return select_fn(
+                st.now,
+                pending & (st.site == s),
+                trace.task_type,
+                trace.deadline,
+                view_s,
+                sysarr_s,
+                suffered,
+            )
+
+        acts = jax.vmap(one_block)(
+            avail_base.reshape(n_sites, m),
+            st.queue.reshape(n_sites, m, Q),
+            st.qlen.reshape(n_sites, m),
+            jnp.moveaxis(sysarr.eet.reshape(S, n_sites, m), 0, 1),
+            sysarr.p_dyn.reshape(n_sites, m),
+            sysarr.p_idle.reshape(n_sites, m),
+            jnp.arange(n_sites, dtype=jnp.int32),
+        )
+        assign = acts.assign.reshape(M)
+        tsite = jnp.clip(st.site, 0, n_sites - 1)
+        drop = (jnp.take_along_axis(acts.drop, tsite[None, :], axis=0)[0]
+                & (st.site >= 0))
+        queue_drop = acts.queue_drop.reshape(M, Q)
+        return MapAction(assign, drop, queue_drop)
+
+    def one_site(in_site, s):
         view_s = MachineView(
             avail_base=jnp.where(in_site, avail_base, BIG),
             queue=jnp.where(in_site[:, None], st.queue, -1),
@@ -282,21 +347,28 @@ def _stage_map(st: SimState, trace: Trace, sysarr: SystemArrays,
         sysarr_s = sysarr._replace(
             eet=jnp.where(in_site[None, :], sysarr.eet, BIG)
         )
-        task_in_site = st.site == s
-        action = select_fn(
+        return select_fn(
             st.now,
-            (st.status == PENDING) & task_in_site,
+            pending & (st.site == s),
             trace.task_type,
             trace.deadline,
             view_s,
             sysarr_s,
             suffered,
         )
-        assign = jnp.where(in_site, action.assign, assign)
-        drop = drop | (action.drop & task_in_site)
-        queue_drop = queue_drop | (action.queue_drop & in_site[:, None])
-    return _apply_action(st, trace, MapAction(assign, drop, queue_drop),
-                         n_types)
+
+    acts = jax.vmap(one_site)(
+        jnp.asarray(site_members), jnp.arange(n_sites, dtype=jnp.int32)
+    )  # MapAction with (F,)-leading leaves
+    owner = jnp.asarray(site_of_machine, jnp.int32)  # (M,) constant
+    assign = jnp.take_along_axis(acts.assign, owner[None, :], axis=0)[0]
+    tsite = jnp.clip(st.site, 0, n_sites - 1)
+    drop = (jnp.take_along_axis(acts.drop, tsite[None, :], axis=0)[0]
+            & (st.site >= 0))
+    queue_drop = jnp.take_along_axis(
+        acts.queue_drop, owner[None, :, None], axis=0
+    )[0]
+    return MapAction(assign, drop, queue_drop)
 
 
 def _apply_action(st: SimState, trace: Trace, action, n_types: int):
@@ -431,9 +503,8 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
         )
     n_sites = max(sites) + 1
     sites_np = np.asarray(sites, np.int32)
-    site_members = np.asarray(
-        [sites_np == s for s in range(n_sites)]
-    ) if n_sites > 1 else None
+    site_members = (site_membership(sites_np, n_sites)
+                    if n_sites > 1 else None)
     dispatcher = dispatch_mod.resolve(dispatcher)
     observers = tuple(
         ob.with_engine_config(fairness_factor=fairness_factor,
@@ -484,7 +555,7 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
                                  n_sites, fairness_factor)
             aux = notify("dispatch", aux, st)
             st = _stage_map(st, trace, sysarr, select_fn, fairness_factor, S,
-                            site_members)
+                            site_members, sites_np)
             aux = notify("map", aux, st)
             st = _stage_start(st, trace, sysarr)
             aux = notify("start", aux, st)

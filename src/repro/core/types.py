@@ -108,6 +108,21 @@ class SystemSpec:
         )
 
 
+def site_membership(site_of_machine, n_sites: Optional[int] = None
+                    ) -> np.ndarray:
+    """(F, M) bool membership grid of a site partition, as a host constant.
+
+    Row ``s`` is the machine mask of site ``s``. Both the engine's masked
+    ``vmap`` map stage and the dispatch layer consume this grid as *data*
+    (an array fed to vectorized masking), so the site count F shapes only
+    array extents — never the traced program — which is what keeps compile
+    time flat in F (see ``tests/test_compile_flatness.py``).
+    """
+    sites = np.asarray(site_of_machine, np.int32)
+    F = int(sites.max()) + 1 if n_sites is None else int(n_sites)
+    return np.arange(F, dtype=np.int32)[:, None] == sites[None, :]
+
+
 class SystemArrays(NamedTuple):
     """Device-side mirror of :class:`SystemSpec` for jitted consumers.
 

@@ -1,4 +1,16 @@
-"""Sharding rules: parameter / batch / cache PartitionSpecs.
+"""Sharding rules: parameter / batch / cache PartitionSpecs + sweep grids.
+
+Two consumers share this module:
+
+  * the training/serving stack (parameter, batch and decode-cache
+    PartitionSpecs below), and
+  * the scheduling lab's Monte-Carlo sweeps: :func:`sweep_mesh` /
+    :func:`pad_batch` back ``experiments.run_sweep(..., shard=True)``,
+    which splits the flattened (rate x replicate) trace batch across
+    every visible device with ``jax.shard_map`` — each device simulates
+    its slice of the CRN grid, results are bit-identical to the
+    unsharded path because traces are independent (pinned in
+    ``tests/test_distributed.py``).
 
 Layout (DESIGN.md §5):
   * params: FSDP over ``data`` (one matmul dim), TP over ``model`` (heads /
@@ -202,3 +214,47 @@ def cache_sharding(cfg, mesh: Mesh, cache_shapes):
 
 def constrain(x, mesh: Mesh, spec: P):
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Sweep-grid sharding: the (policy x rate x replicate) Monte-Carlo batch
+# --------------------------------------------------------------------------
+
+#: Mesh axis name the sweep batch is sharded over.
+SWEEP_AXIS = "grid"
+
+
+def sweep_mesh(max_devices: int | None = None):
+    """A 1-D device mesh over the sweep batch axis, or ``None``.
+
+    Returns ``None`` when only one device is visible (or ``max_devices``
+    caps it to one) — the caller falls back to the plain single-device
+    path, so ``shard=True`` is always safe to request.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if max_devices is None else min(int(max_devices),
+                                                  len(devs))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), (SWEEP_AXIS,))
+
+
+def pad_batch(tree, multiple: int):
+    """Pad every leaf's leading batch dim up to a multiple of ``multiple``.
+
+    Padding rows repeat row 0 (a real, finite trace — the simulator runs
+    it and the caller slices the padding back off), so sharding never
+    requires the batch to divide the device count.
+    """
+    import jax.numpy as jnp
+
+    def one(x):
+        pad = (-x.shape[0]) % multiple
+        if pad == 0:
+            return x
+        fill = jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])
+        return jnp.concatenate([x, fill], axis=0)
+
+    return jax.tree.map(one, tree)

@@ -49,7 +49,7 @@ def _select_fns(names, use_pallas: bool):
 def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
                    *, use_pallas_phase1: bool = False,
                    max_steps=None, trace_label: str = "",
-                   observers=(), dispatcher=None):
+                   observers=(), dispatcher=None, shard: bool = False):
     """Simulate a flat batch of traces under every heuristic, in one jit.
 
     Args:
@@ -71,6 +71,12 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
         the default ``sticky``; inert on single-site systems). Closed
         over statically like the policies: one trace per
         (policy, dispatcher, scenario) triple.
+      shard: split the trace batch across every visible device with
+        ``jax.shard_map`` (``repro.distributed.sharding.sweep_mesh``) —
+        each device simulates its slice of the batch; the batch is
+        padded to the device count and the padding sliced back off, so
+        results are *bit-identical* to the unsharded path. With a single
+        visible device this falls back to the plain path silently.
 
     Returns:
       With ``observers=()``: Metrics with leaves of shape (H, B, ...) —
@@ -96,7 +102,6 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
         for fn in _select_fns(heuristic_names, use_pallas_phase1)
     ]
 
-    @jax.jit
     def run_all(tr):
         per_h = []
         for name, sim in zip(heuristic_names, sims):
@@ -104,12 +109,31 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
             per_h.append(jax.vmap(sim)(tr))
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_h)
 
-    out = run_all(traces)
+    mesh = None
+    if shard:
+        from repro.distributed import sharding
+
+        mesh = sharding.sweep_mesh()
+    if mesh is None:
+        out = jax.jit(run_all)(traces)
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed import sharding
+
+        B = traces.arrival.shape[0]
+        padded = sharding.pad_batch(traces, mesh.devices.size)
+        sharded = jax.jit(jax.shard_map(
+            run_all, mesh=mesh,
+            in_specs=P(sharding.SWEEP_AXIS),
+            out_specs=P(None, sharding.SWEEP_AXIS),
+        ))
+        out = jax.tree.map(lambda x: x[:, :B], sharded(padded))
     del _TRACE_LOG[:-_TRACE_LOG_MAX]
     return out
 
 
-def run_sweep(spec: SweepSpec) -> SweepResult:
+def run_sweep(spec: SweepSpec, *, shard: bool = False) -> SweepResult:
     """Execute a full batched Monte-Carlo sweep.
 
     Resolves the spec's scenario and system through their registries,
@@ -120,6 +144,11 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
 
     Cost scales as H * R * K single-trace simulations of N tasks each;
     the paper-scale grid (5 x 7 x 30 x 2000) runs in one dispatch.
+    ``shard=True`` splits the (R*K) trace batch across every visible
+    device (``shard_map`` over ``sweep_mesh``) — an execution detail, not
+    part of the spec: results are bit-identical to the unsharded sweep
+    and the flag is a silent no-op on one device, so a spec remains
+    reproducible regardless of the device topology it ran on.
     """
     system = spec.resolve_system()
     scenario = spec.resolve_scenario()
@@ -139,6 +168,7 @@ def run_sweep(spec: SweepSpec) -> SweepResult:
         flat, system, spec.heuristics,
         use_pallas_phase1=spec.use_pallas_phase1, max_steps=spec.max_steps,
         trace_label=label, observers=observers, dispatcher=spec.dispatcher,
+        shard=shard,
     )
     metrics, aux = out if observers else (out, {})
     H = len(spec.heuristics)

@@ -92,6 +92,10 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
                     help="Eq. 3 fairness factor f (default: system's own)")
     ap.add_argument("--pallas-phase1", action="store_true",
                     help="route ELARE Phase-I through the Pallas kernel")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the (rate x replicate) trace batch across "
+                         "every visible device (shard_map); bit-identical "
+                         "results, silent no-op on a single device")
     ap.add_argument("--out", default="artifacts/sweep",
                     help="artifact directory (default: artifacts/sweep)")
     args = ap.parse_args(argv)
@@ -240,13 +244,21 @@ def main(argv=None) -> SweepResult:
     n_sites = spec.resolve_system().n_sites
     fed = (f" sites={n_sites} dispatcher={args.dispatcher}"
            if n_sites > 1 else "")
+    shard_note = ""
+    if args.shard:
+        import jax
+
+        n_dev = len(jax.devices())
+        shard_note = (f" sharded over {n_dev} devices" if n_dev > 1
+                      else " (--shard: single device, running unsharded)")
     print(f"sweep: {len(spec.heuristics)} heuristics x "
           f"{len(spec.rates)} rates x {spec.reps} reps "
           f"({n} traces of {spec.n_tasks} tasks) "
-          f"on system={system_label} scenario={args.scenario}{fed}",
+          f"on system={system_label} scenario={args.scenario}{fed}"
+          f"{shard_note}",
           flush=True)
     t0 = time.perf_counter()
-    result = run_sweep(spec)
+    result = run_sweep(spec, shard=args.shard)
     dt = time.perf_counter() - t0
     print(f"simulated {n} traces in {dt:.1f}s "
           f"({1e3 * dt / n:.0f} ms/trace incl. compile)\n")

@@ -314,6 +314,8 @@ for _name, _fleet in [
     ("range", RangeFleet()),
     ("paper_x2", FederatedFleet(base="paper", n_sites=2)),
     ("paper_x4", FederatedFleet(base="paper", n_sites=4)),
+    ("paper_x8", FederatedFleet(base="paper", n_sites=8)),
+    ("paper_x32", FederatedFleet(base="paper", n_sites=32)),
     ("mixed_sites", MixedSitesFleet()),
 ]:
     register_fleet(_name, _fleet)

@@ -1,0 +1,83 @@
+"""Frozen PR 5 snapshot of the engine's *statically unrolled* site loop.
+
+DO NOT EDIT: this is the bit-exactness reference for the masked-vmap map
+stage. ``tests/test_siteloop_vmap.py`` property-tests that the flat-compile
+engine (one vmapped policy evaluation over site-masked machine views)
+reproduces this unrolled formulation exactly — event-level (the full
+post-map SimState, byte for byte) and trace-level (task_log event logs) —
+for F in {1, 2, 4} under every built-in dispatcher x ELARE/FELARE.
+
+The code below is the verbatim PR 5 ``engine._stage_map`` body (static
+Python loop over F sites, one ``select_fn`` call per site) delegating to
+the *live* ``engine._apply_action`` epilogue, which is shared by both
+formulations and pinned separately through the flat-engine snapshots.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import fairness
+from repro.core.engine import _apply_action
+from repro.core.policy import BIG, MachineView
+from repro.core.types import PENDING, MapAction
+
+
+def map_action_unrolled(st, trace, sysarr, select_fn, fairness_factor,
+                        site_members=None) -> MapAction:
+    """PR 5 map action: one ``select_fn`` call per site, masked-merged."""
+    suffered = fairness.suffered_types(
+        st.completed, st.arrived, fairness_factor
+    )
+    avail_base = jnp.maximum(
+        jnp.where(st.run_task >= 0, st.run_end_exp, st.now), st.now
+    )
+    n_sites = 1 if site_members is None else site_members.shape[0]
+    if n_sites == 1:
+        view = MachineView(avail_base=avail_base, queue=st.queue,
+                           qlen=st.qlen)
+        return select_fn(
+            st.now,
+            st.status == PENDING,
+            trace.task_type,
+            trace.deadline,
+            view,
+            sysarr,
+            suffered,
+        )
+
+    M, Q = st.queue.shape
+    assign = jnp.full((M,), -1, jnp.int32)
+    drop = jnp.zeros(st.status.shape, bool)
+    queue_drop = jnp.zeros((M, Q), bool)
+    for s in range(n_sites):
+        in_site = jnp.asarray(site_members[s])  # (M,) bool constant
+        view_s = MachineView(
+            avail_base=jnp.where(in_site, avail_base, BIG),
+            queue=jnp.where(in_site[:, None], st.queue, -1),
+            qlen=jnp.where(in_site, st.qlen, Q),
+        )
+        sysarr_s = sysarr._replace(
+            eet=jnp.where(in_site[None, :], sysarr.eet, BIG)
+        )
+        task_in_site = st.site == s
+        action = select_fn(
+            st.now,
+            (st.status == PENDING) & task_in_site,
+            trace.task_type,
+            trace.deadline,
+            view_s,
+            sysarr_s,
+            suffered,
+        )
+        assign = jnp.where(in_site, action.assign, assign)
+        drop = drop | (action.drop & task_in_site)
+        queue_drop = queue_drop | (action.queue_drop & in_site[:, None])
+    return MapAction(assign, drop, queue_drop)
+
+
+def stage_map_unrolled(st, trace, sysarr, select_fn, fairness_factor,
+                       n_types, site_members=None):
+    """PR 5 ``_stage_map``: the unrolled action + the live apply epilogue."""
+    action = map_action_unrolled(st, trace, sysarr, select_fn,
+                                 fairness_factor, site_members)
+    return _apply_action(st, trace, action, n_types)

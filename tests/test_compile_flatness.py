@@ -1,0 +1,126 @@
+"""Compile-flatness pins: site count F is data, not program structure.
+
+The masked-vmap site loop promises that growing a federation from F=2 to
+F=32 changes array extents only — the traced program (and therefore
+compile time) stays flat. Pinned three ways:
+
+  * jaxpr size — the recursive equation count and primitive multiset of a
+    full simulator are *identical* for paper_x2 and paper_x32 (the arrays
+    are wider; the program is the same);
+  * single-jit contract — a sweep still traces each (policy, dispatcher,
+    scenario) triple exactly once, and the trace-log entries for an F=32
+    sweep equal those of an F=2 sweep (site count never leaks into how
+    often anything traces);
+  * wall clock — AOT ``lower().compile()`` of the F=32 simulator takes at
+    most 1.2x the F=2 compile (min-of-2, plus a small absolute slack for
+    scheduler noise), the ISSUE's acceptance bound. The same bound is
+    tracked over F in ``benchmarks/BENCH_1.json``.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import experiments, scenarios
+from repro.core import dispatch, engine, policy, workload
+from repro.experiments import runner
+
+HEURISTIC, DISPATCHER = "FELARE", "fair_spill"  # the heaviest builtins
+
+
+def _simulator_and_trace(fleet_name, n_tasks=24, seed=0, rate=4.0):
+    system = scenarios.get_fleet(fleet_name).build()
+    sim = engine.make_simulator(
+        policy.get(HEURISTIC), system.as_jax(),
+        queue_size=system.queue_size,
+        fairness_factor=float(system.fairness_factor),
+        dispatcher=dispatch.resolve(DISPATCHER),
+        site_of_machine=system.sites,
+    )
+    tr = workload.poisson_trace(jax.random.PRNGKey(seed), n_tasks, rate,
+                                system.eet)
+    return sim, tr
+
+
+def _count_eqns(jaxpr) -> int:
+    """Total equation count, descending into nested (closed) jaxprs."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            n += _count_eqns(sub)
+    return n
+
+
+def _primitive_counts(jaxpr, out=None) -> dict:
+    out = {} if out is None else out
+    for eqn in jaxpr.eqns:
+        out[eqn.primitive.name] = out.get(eqn.primitive.name, 0) + 1
+        for sub in jax.core.jaxprs_in_params(eqn.params):
+            _primitive_counts(sub, out)
+    return out
+
+
+def test_jaxpr_size_independent_of_site_count():
+    """paper_x2 and paper_x32 trace to the *same program*: equal equation
+    counts and equal primitive multisets, recursively."""
+    sim2, tr2 = _simulator_and_trace("paper_x2")
+    sim32, tr32 = _simulator_and_trace("paper_x32")
+    j2 = jax.make_jaxpr(sim2)(tr2).jaxpr
+    j32 = jax.make_jaxpr(sim32)(tr32).jaxpr
+    n2, n32 = _count_eqns(j2), _count_eqns(j32)
+    assert n2 == n32, f"site count leaked into the program: {n2} vs {n32}"
+    assert _primitive_counts(j2) == _primitive_counts(j32)
+
+
+def test_flat_fleet_jaxpr_carries_no_federation_ops():
+    """F=1 short-circuits: the single-site program is strictly smaller
+    than the federated one (no masking, no dispatch, no gathers)."""
+    sim1, tr1 = _simulator_and_trace("paper")
+    sim2, tr2 = _simulator_and_trace("paper_x2")
+    assert _count_eqns(jax.make_jaxpr(sim1)(tr1).jaxpr) \
+        < _count_eqns(jax.make_jaxpr(sim2)(tr2).jaxpr)
+
+
+def test_one_trace_per_triple_independent_of_site_count():
+    """The single-jit contract holds at F=32, and the trace-log entries of
+    an F=32 sweep are exactly those of the F=2 sweep."""
+    heuristics = ("ELARE", "FELARE")
+    logs = {}
+    for fleet in ("paper_x2", "paper_x32"):
+        runner._TRACE_LOG.clear()
+        experiments.run_sweep(experiments.SweepSpec(
+            system=fleet, rates=(3.0,), reps=2, n_tasks=30,
+            heuristics=heuristics, seed=1, dispatcher="round_robin",
+        ))
+        logs[fleet] = list(runner._TRACE_LOG)
+        runner._TRACE_LOG.clear()
+    expected = [(h, "poisson", "round_robin") for h in heuristics]
+    assert logs["paper_x2"] == expected
+    assert logs["paper_x32"] == logs["paper_x2"]
+
+
+def _aot_compile_seconds(fleet_name, repeats=2) -> float:
+    best = np.inf
+    for i in range(repeats):
+        # vary the trace length per repeat: an identical HLO would hit the
+        # in-process XLA executable cache and "compile" in ~0s.
+        sim, tr = _simulator_and_trace(fleet_name, n_tasks=24 + i)
+        t0 = time.perf_counter()
+        jax.jit(sim).lower(tr).compile()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def test_compile_time_flat_in_site_count():
+    """ISSUE acceptance bound: compiling the F=32 simulator costs at most
+    1.2x the F=2 compile (min-of-2 AOT compiles + 0.5s absolute slack)."""
+    _aot_compile_seconds("paper", repeats=1)  # absorb one-time jit/XLA init
+    t2 = _aot_compile_seconds("paper_x2")
+    t32 = _aot_compile_seconds("paper_x32")
+    assert t32 <= 1.2 * t2 + 0.5, (
+        f"F=32 compile {t32:.2f}s exceeds 1.2x F=2 compile {t2:.2f}s")
+    if t32 > 1.2 * t2:
+        pytest.skip(f"within absolute slack only (t2={t2:.2f}s "
+                    f"t32={t32:.2f}s) — machine noise, not a regression")

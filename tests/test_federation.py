@@ -150,6 +150,31 @@ def test_two_site_task_log_matches_oracle_event_for_event(
                 err_msg=f"{field} seed{seed}")
 
 
+@pytest.mark.parametrize("heuristic,dispatcher",
+                         [("ELARE", "round_robin"), ("FELARE", "fair_spill")])
+def test_eight_site_task_log_matches_oracle_event_for_event(
+        heuristic, dispatcher):
+    """Same oracle parity on the 8-site paper fleet (32 machines) — the
+    masked-vmap site loop at an F the static unroll never shipped with."""
+    spec8 = scenarios.get_fleet("paper_x8").build()
+    assert spec8.n_sites == 8
+    for seed in (0, 7):
+        tr = _trace(seed, 96, 8.0, spec8.eet)
+        _, aux = engine.simulate(tr, spec8, heuristic,
+                                 observers=("task_log",),
+                                 dispatcher=dispatcher)
+        log = {k: np.asarray(v) for k, v in aux["task_log"].items()}
+        ref = pyengine.simulate(tr, spec8, heuristic,
+                                dispatcher=dispatcher)["task_log"]
+        np.testing.assert_array_equal(log["status"], ref["status"])
+        np.testing.assert_array_equal(log["machine"], ref["machine"])
+        np.testing.assert_array_equal(log["site"], ref["site"])
+        for field in ("map_time", "start_time", "end_time"):
+            np.testing.assert_allclose(
+                log[field], ref[field], rtol=1e-6, atol=1e-6,
+                err_msg=f"{field} seed{seed}")
+
+
 # ------------------------------------------------------ partition property
 @given(seed=st.integers(0, 1000), rate=st.floats(1.0, 8.0),
        dispatcher=st.sampled_from(
