@@ -139,7 +139,7 @@ class StudyResult:
 def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
               n_traces: int = 30, n_tasks: int = 2000, seed: int = 0,
               cv_run: float = 0.1, scenario="poisson", observers=(),
-              dispatcher="sticky"):
+              dispatcher="sticky", dynamics="none"):
     """The paper's experiment template for one heuristic.
 
     Thin wrapper over :func:`repro.experiments.run_sweep`: synthesizes
@@ -171,6 +171,10 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
         when ``spec.site_of_machine`` partitions the machines into sites;
         the default ``"sticky"`` keeps single-site studies bit-identical
         to pre-federation ones.
+      dynamics: machine-failure process — a registered name
+        (:func:`repro.core.faults.list_dynamics`) or a
+        :class:`repro.core.faults.MachineDynamics` instance; the default
+        ``"none"`` keeps studies bit-identical to fault-free ones.
 
     Returns:
       list[StudyResult] of length R, in ``arrival_rates`` order.
@@ -188,6 +192,7 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
         cv_run=cv_run,
         observers=tuple(observers),
         dispatcher=dispatcher,
+        dynamics=dynamics,
     )
     result = experiments.run_sweep(sweep_spec)
 

@@ -17,7 +17,10 @@ a site-masked machine view. Built-ins:
   * ``least_queued`` — join-the-shortest-site (queued + running);
   * ``min_eet`` — EET-aware cheapest site for the task's type;
   * ``fair_spill`` — sticky homes, but Alg. 4 *suffered* types spill to
-    the least-loaded site (FELARE's fairness signal at dispatch level).
+    the least-loaded site (FELARE's fairness signal at dispatch level);
+  * ``health_aware`` — sticky homes, but tasks whose home site is down
+    (per the faults subsystem's heartbeat mask) re-route to the
+    least-loaded healthy site.
 
 All are frozen hashable dataclasses behind the shared
 :class:`~repro.core.registry.NameRegistry`, interpreted by the pure-
@@ -34,6 +37,7 @@ from repro.core.dispatch.base import (
 )
 from repro.core.dispatch.builtins import (
     FairSpill,
+    HealthAware,
     LeastQueued,
     MinEet,
     RoundRobin,
@@ -51,6 +55,7 @@ __all__ = [
     "DispatchContext",
     "Dispatcher",
     "FairSpill",
+    "HealthAware",
     "LeastQueued",
     "MinEet",
     "RoundRobin",
@@ -74,6 +79,7 @@ _KINDS = {
     "least_queued": LeastQueued,
     "min_eet": MinEet,
     "fair_spill": FairSpill,
+    "health_aware": HealthAware,
 }
 
 
@@ -132,6 +138,7 @@ for _name, _disp in [
     ("least_queued", LeastQueued()),
     ("min_eet", MinEet()),
     ("fair_spill", FairSpill()),
+    ("health_aware", HealthAware()),
 ]:
     register(_name, _disp)
 del _name, _disp

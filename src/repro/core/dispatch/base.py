@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Protocol
+from typing import Optional, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +51,7 @@ class DispatchContext:
     site_of_machine: np.ndarray  # (M,) int — STATIC partition (numpy)
     n_sites: int              # F — STATIC
     fairness_factor: float    # Eq. 3's f — STATIC engine config
+    alive: Optional[jnp.ndarray] = None  # (M,) bool health (None = no faults)
 
     # -- static shapes ------------------------------------------------------
     @property
@@ -106,6 +107,24 @@ class DispatchContext:
             axis=2,
         )
 
+    # -- site health (faults subsystem) -------------------------------------
+    @functools.cached_property
+    def site_alive(self) -> Optional[jnp.ndarray]:
+        """(F,) bool — heartbeat mask: site alive iff >= 1 healthy machine.
+
+        ``None`` when no machine dynamics is attached (``alive is
+        None``), so health-agnostic dispatchers stay byte-identical
+        programs on the default path. When present, the engine has
+        already BIG-masked dead machines' EET/availability, so this mask
+        is only needed by dispatchers that *route around* dead sites
+        (``health_aware``) or penalize them in a load scan.
+        """
+        if self.alive is None:
+            return None
+        return jax.ops.segment_sum(
+            self.alive.astype(jnp.int32), self.site_ids, self.n_sites
+        ) > 0
+
     # -- fairness monitor ---------------------------------------------------
     @functools.cached_property
     def suffered(self) -> jnp.ndarray:
@@ -147,9 +166,18 @@ def sequential_balance(ctx: DispatchContext, target_mask, home) -> jnp.ndarray:
     ``home`` proposal; every dispatched task increments its site's load
     so simultaneous admissions spread instead of dog-piling one site.
     Integer arithmetic throughout — the oracle mirrors it exactly.
+
+    When machine dynamics are attached (``ctx.site_alive`` is not None),
+    dead sites enter the scan with a +1_000_000 load penalty, so the
+    least-loaded choice never lands on a site with zero healthy machines
+    while any site is still up (integer penalty — still oracle-exact).
     """
     F = ctx.n_sites
     lanes = jnp.arange(F, dtype=jnp.int32)
+    load0 = ctx.site_load.astype(jnp.int32)
+    sa = ctx.site_alive
+    if sa is not None:
+        load0 = load0 + jnp.where(sa, 0, 1_000_000)
 
     def step(load, xs):
         new_k, tgt_k, home_k = xs
@@ -159,7 +187,7 @@ def sequential_balance(ctx: DispatchContext, target_mask, home) -> jnp.ndarray:
         return load, s
 
     _, sites = jax.lax.scan(
-        step, ctx.site_load.astype(jnp.int32),
+        step, load0,
         (ctx.unassigned, target_mask, home),
     )
     return sites

@@ -116,3 +116,30 @@ class FairSpill:
         home = _hash_sites(ctx.n_tasks, ctx.n_sites, self.salt)
         spill = ctx.suffered[ctx.task_type]
         return sequential_balance(ctx, spill, home)
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthAware:
+    """Sticky homes, but tasks whose home site is *down* re-route to the
+    least-loaded healthy site.
+
+    Uses the heartbeat mask (``ctx.site_alive``: site alive iff at least
+    one healthy machine) maintained by the faults subsystem
+    (:mod:`repro.core.faults`). Healthy-home tasks keep their hash home
+    exactly like :class:`Sticky` — with no dynamics attached the mask is
+    absent and this *is* ``sticky``, bit-for-bit. Dead-home tasks enter
+    the :func:`~repro.core.dispatch.base.sequential_balance` scan, where
+    dead sites carry a large load penalty, so re-routed work spreads
+    over the surviving sites instead of dog-piling one.
+    """
+
+    kind = "health_aware"
+    salt: int = 0
+
+    def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
+        home = _hash_sites(ctx.n_tasks, ctx.n_sites, self.salt)
+        sa = ctx.site_alive
+        if sa is None:
+            return home
+        reroute = ~sa[home]
+        return sequential_balance(ctx, reroute, home)

@@ -13,10 +13,23 @@ traces is one ``vmap``. Semantics follow Sec. III of the paper:
     energy (Eq. 2 row 3);
   * per-type completion counters feed the fairness monitor continuously.
 
-Each event is processed as five named stages, threading an
+Each event is processed as six named stages, threading an
 :class:`~repro.core.types.EngineState` = ``(SimState, aux)``:
 
-  ``finalize`` -> ``admit`` -> ``dispatch`` -> ``map`` -> ``start``
+  ``finalize`` -> ``admit`` -> ``faults`` -> ``dispatch`` -> ``map`` -> ``start``
+
+``faults`` evolves the per-machine health state under a pluggable
+:class:`~repro.core.faults.MachineDynamics` (failures, site outages,
+stragglers): dead machines read avail=BIG/EET=BIG downstream exactly
+like out-of-site machines, their queued tasks and running task become
+*orphans* re-entering the dispatch queue (bounded retry count), and
+``with_backup``-wrapped policies fail orphans over to pre-nominated
+backup machines. With the default ``dynamics="none"`` the stage is
+skipped entirely — no masking enters the traced program and the loop is
+bit-exact with the pre-faults engine (observers never see a ``faults``
+stage then). Because ``finalize`` runs first, a task completing at
+exactly the instant its machine dies *completes* — the deterministic
+tie rule both engines share.
 
 ``dispatch`` is the federation's first level: a pluggable
 :class:`~repro.core.dispatch.Dispatcher` assigns each newly-admitted task
@@ -70,12 +83,13 @@ from repro.core.types import (
 
 INF = jnp.float32(jnp.inf)
 
-#: Stage names, in event order. Observers receive each after it ran.
-STAGES = ("finalize", "admit", "dispatch", "map", "start")
+#: Stage names, in event order. Observers receive each after it ran
+#: (``faults`` only fires when a non-trivial dynamics is attached).
+STAGES = ("finalize", "admit", "faults", "dispatch", "map", "start")
 
 
 def _init_state(trace: Trace, n_machines: int, queue_size: int,
-                n_types: int) -> SimState:
+                n_types: int, *, backup_k: int = 0) -> SimState:
     n = trace.arrival.shape[0]
     M, Q, S = n_machines, queue_size, n_types
     f = jnp.float32
@@ -98,11 +112,16 @@ def _init_state(trace: Trace, n_machines: int, queue_size: int,
         cancelled=jnp.zeros((S,), jnp.int32),
         arrived=jnp.zeros((S,), jnp.int32),
         steps=jnp.int32(0),
+        alive=jnp.ones((M,), bool),
+        slowdown=jnp.ones((M,), f),
+        retries=jnp.zeros((n,), jnp.int32),
+        backup=jnp.full((n, backup_k), -1, jnp.int32),
     )
 
 
 def _next_event_time(st: SimState, trace: Trace,
-                     halted: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                     halted: Optional[jnp.ndarray] = None,
+                     wake_ts: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     pending = st.status == PENDING
     unarrived = st.status == UNARRIVED
     t_arr = jnp.min(jnp.where(unarrived, trace.arrival, jnp.inf))
@@ -114,7 +133,14 @@ def _next_event_time(st: SimState, trace: Trace,
     # progress guard: earliest pending deadline (so stale tasks get purged
     # even when no machine is busy and no arrivals remain).
     t_dead = jnp.min(jnp.where(pending, trace.deadline, jnp.inf))
-    return jnp.minimum(jnp.minimum(t_arr, t_comp), t_dead)
+    t = jnp.minimum(jnp.minimum(t_arr, t_comp), t_dead)
+    if wake_ts is not None:
+        # scheduled-dynamics wake-ups (outage window edges): each fires at
+        # most once — strictly future times only, and the event it drives
+        # sets ``now`` onto (at or past) it.
+        t_wake = jnp.min(jnp.where(wake_ts > st.now, wake_ts, jnp.inf))
+        t = jnp.minimum(t, t_wake)
+    return t
 
 
 # ---------------------------------------------------------------------------
@@ -202,19 +228,184 @@ def _halt_shutdown(st: SimState, trace: Trace, halted: jnp.ndarray):
     )
 
 
+def _stage_faults(st: SimState, trace: Trace, sysarr: SystemArrays,
+                  dynamics, horizon, n_types: int, backup_k: int,
+                  site_of_machine: np.ndarray, n_sites: int):
+    """Evolve machine health and orphan the casualties.
+
+    Order within the stage (mirrored exactly by the oracle):
+
+      1. ``dynamics.step`` proposes the next ``(alive, slowdown)``.
+      2. Newly-dead machines flush their local queues — each queued task
+         is *orphaned*: its retry count increments and it re-enters the
+         dispatch queue (PENDING, site cleared) unless the count exceeds
+         ``dynamics.max_retries``, in which case it is CANCELLED.
+      3. Newly-dead machines kill their running task: the partial run's
+         dynamic energy is spent *and* wasted (the work is lost), then
+         the task is orphaned like a queue victim — except that under a
+         ``with_backup`` policy a running-task orphan with a healthy,
+         non-full backup machine fails over: it is enqueued there
+         directly (QUEUED on the backup's site), skipping the
+         dispatch/map round-trip. Queue victims never fail over — they
+         had no primary yet in the FEST sense.
+
+    Orphans made PENDING here are re-dispatched at *this same event*
+    (the dispatch stage follows), so a one-event outage costs at most
+    one retry. Machines revive with clean state; the finalize stage ran
+    first, so a task completing at exactly the death instant completes.
+    """
+    from repro.core.faults.base import FaultContext
+
+    M, Q = st.queue.shape
+    n = st.status.shape[0]
+    max_retries = int(getattr(dynamics, "max_retries", 3))
+    ctx = FaultContext(
+        now=st.now,
+        steps=st.steps,
+        horizon=horizon,
+        alive=st.alive,
+        slowdown=st.slowdown,
+        site_of_machine=np.asarray(site_of_machine, np.int32),
+        n_sites=n_sites,
+    )
+    alive_new, slow_new = dynamics.step(ctx)
+    alive_new = alive_new.astype(bool)
+    slow_new = slow_new.astype(jnp.float32)
+    died = st.alive & ~alive_new
+
+    # -- 2. flush dead machines' local queues (queued tasks orphan) --------
+    qvict = died[:, None] & (st.queue >= 0)
+    qidx = jnp.where(qvict, st.queue, n)          # OOB sentinel -> dropped
+    retries = st.retries.at[qidx.reshape(-1)].add(1, mode="drop")
+    qsafe = jnp.clip(qidx, 0, n - 1)
+    q_exh = qvict & (retries[qsafe] > max_retries)
+    status = st.status.at[qidx.reshape(-1)].set(
+        jnp.where(q_exh, CANCELLED, PENDING).reshape(-1), mode="drop"
+    )
+    cancelled = st.cancelled + jax.ops.segment_sum(
+        q_exh.reshape(-1).astype(jnp.int32),
+        trace.task_type[qsafe].reshape(-1),
+        n_types,
+    )
+    # surviving orphans lose their site (re-dispatched this same event);
+    # exhausted ones keep it, like any other cancelled task.
+    site = st.site.at[
+        jnp.where(qvict & ~q_exh, st.queue, n).reshape(-1)
+    ].set(-1, mode="drop")
+    queue = jnp.where(died[:, None], -1, st.queue)
+    qlen = jnp.where(died, 0, st.qlen)
+
+    # -- 3. kill running tasks on newly-dead machines ----------------------
+    kill = died & (st.run_task >= 0)
+    vict = jnp.where(kill, st.run_task, 0)
+    dur = jnp.where(kill, st.now - st.run_start, 0.0)
+    energy = sysarr.p_dyn * dur
+    e_dyn = st.e_dyn + energy.sum()
+    e_wasted = st.e_wasted + jnp.where(kill, energy, 0.0).sum()
+    busy = st.busy_time + dur
+    retries = retries.at[jnp.where(kill, vict, n)].add(1, mode="drop")
+    r_exh = kill & (retries[vict] > max_retries)
+    ttype_v = trace.task_type[vict]
+
+    if backup_k == 0:
+        status = status.at[jnp.where(kill, vict, n)].set(
+            jnp.where(r_exh, CANCELLED, PENDING), mode="drop"
+        )
+        cancelled = cancelled + jax.ops.segment_sum(
+            r_exh.astype(jnp.int32), ttype_v, n_types
+        )
+        site = site.at[jnp.where(kill & ~r_exh, vict, n)].set(
+            -1, mode="drop"
+        )
+    else:
+        # Failover scan, machine index order (queue capacity is consumed
+        # sequentially — two orphans favoring the same backup must not
+        # both land in its last slot).
+        sids = jnp.asarray(np.asarray(site_of_machine, np.int32))
+        bks_all = st.backup[vict]                 # (M, k)
+
+        def step(carry, xs):
+            status, site, queue, qlen, cancelled = carry
+            kill_m, v, exh, bks, tt = xs
+            chosen = jnp.int32(-1)
+            for i in range(backup_k):
+                b = bks[i]
+                bc = jnp.clip(b, 0)
+                okb = ((chosen < 0) & (b >= 0) & alive_new[bc]
+                       & (qlen[bc] < Q))
+                chosen = jnp.where(okb, b, chosen)
+            fail_over = kill_m & ~exh & (chosen >= 0)
+            bc = jnp.clip(chosen, 0)
+            slot = jnp.clip(qlen[bc], 0, Q - 1)
+            queue = queue.at[bc, slot].set(
+                jnp.where(fail_over, v, queue[bc, slot])
+            )
+            qlen = qlen.at[bc].add(jnp.where(fail_over, 1, 0))
+            new_stat = jnp.where(
+                exh, CANCELLED, jnp.where(fail_over, QUEUED, PENDING)
+            )
+            status = status.at[v].set(
+                jnp.where(kill_m, new_stat, status[v])
+            )
+            new_site = jnp.where(
+                fail_over, sids[bc], jnp.where(exh, site[v], -1)
+            )
+            site = site.at[v].set(jnp.where(kill_m, new_site, site[v]))
+            cancelled = cancelled.at[tt].add(
+                jnp.where(kill_m & exh, 1, 0)
+            )
+            return (status, site, queue, qlen, cancelled), None
+
+        (status, site, queue, qlen, cancelled), _ = jax.lax.scan(
+            step, (status, site, queue, qlen, cancelled),
+            (kill, vict, r_exh, bks_all, ttype_v),
+        )
+
+    return st._replace(
+        alive=alive_new,
+        slowdown=slow_new,
+        status=status,
+        site=site,
+        queue=queue,
+        qlen=qlen,
+        retries=retries,
+        cancelled=cancelled,
+        run_task=jnp.where(kill, -1, st.run_task),
+        run_end_act=jnp.where(kill, jnp.inf, st.run_end_act),
+        run_end_exp=jnp.where(kill, st.now, st.run_end_exp),
+        run_success=jnp.where(kill, False, st.run_success),
+        e_dyn=e_dyn,
+        e_wasted=e_wasted,
+        busy_time=busy,
+    )
+
+
 def _stage_dispatch(st: SimState, trace: Trace, sysarr: SystemArrays,
                     dispatcher, site_of_machine: np.ndarray, n_sites: int,
-                    fairness_factor: float):
+                    fairness_factor: float, health: bool = False):
     """Assign newly-admitted tasks to federation sites (dispatch-once).
 
     A task is dispatched at the first event where it is PENDING and still
     siteless; its site never changes afterwards. With one site the
     dispatcher is bypassed entirely (every task -> site 0), so flat
     systems carry zero dispatch ops in the traced loop body.
+
+    With ``health`` (a non-trivial dynamics attached) the context's EET
+    table is health-masked — dead machines' columns read BIG, straggler
+    columns are slowdown-scaled — and ``ctx.alive`` carries the raw
+    mask, from which ``ctx.site_alive`` derives the heartbeat aggregate
+    ("site alive iff >= 1 healthy machine") that ``sequential_balance``
+    and ``health_aware`` route on. ``min_eet`` needs no code of its own:
+    a fully-dead site's ``eet_min_by_site`` column is BIG automatically.
     """
     new = (st.status == PENDING) & (st.site < 0)
     if n_sites == 1:
         return st._replace(site=jnp.where(new, 0, st.site))
+    eet = sysarr.eet
+    alive = None
+    if health:
+        alive = st.alive
+        eet = jnp.where(alive[None, :], eet * st.slowdown[None, :], BIG)
     ctx = DispatchContext(
         now=st.now,
         unassigned=new,
@@ -224,10 +415,11 @@ def _stage_dispatch(st: SimState, trace: Trace, sysarr: SystemArrays,
         running=st.run_task >= 0,
         completed=st.completed,
         arrived=st.arrived,
-        eet=sysarr.eet,
+        eet=eet,
         site_of_machine=site_of_machine,
         n_sites=n_sites,
         fairness_factor=fairness_factor,
+        alive=alive,
     )
     sites = jnp.clip(dispatcher.dispatch(ctx).astype(jnp.int32),
                      0, n_sites - 1)
@@ -237,7 +429,8 @@ def _stage_dispatch(st: SimState, trace: Trace, sysarr: SystemArrays,
 def _stage_map(st: SimState, trace: Trace, sysarr: SystemArrays,
                select_fn: Callable, fairness_factor: float, n_types: int,
                site_members: Optional[np.ndarray] = None,
-               site_of_machine: Optional[np.ndarray] = None):
+               site_of_machine: Optional[np.ndarray] = None,
+               health: bool = False, backup_k: int = 0):
     """Run the per-site mapping policy and apply the combined MapAction.
 
     ``site_members`` is the (F, M) partition grid — a host constant whose
@@ -261,25 +454,85 @@ def _stage_map(st: SimState, trace: Trace, sysarr: SystemArrays,
     ops), keeping flat runs bit-exact.
     """
     action = _map_action(st, trace, sysarr, select_fn, fairness_factor,
-                         site_members, site_of_machine)
-    return _apply_action(st, trace, action, n_types)
+                         site_members, site_of_machine, health)
+    st2 = _apply_action(st, trace, action, n_types)
+    if backup_k > 0:
+        st2 = _nominate_backups(st2, trace, sysarr, action, backup_k)
+    return st2
+
+
+def _nominate_backups(st: SimState, trace: Trace, sysarr: SystemArrays,
+                      action: MapAction, backup_k: int) -> SimState:
+    """Record k backup machines for each task enqueued this event.
+
+    FEST-style greedy: per assigned task, the k healthy machines
+    (primary excluded, disjoint among themselves) minimizing expected
+    completion ``avail_base + EET`` — iterative masked argmins, ties to
+    the lowest machine index. Backups are passive standbys written into
+    ``st.backup``; the faults stage reads them only when the primary
+    dies mid-run. ``-1`` marks "no eligible backup" (fewer than k
+    healthy candidates).
+    """
+    M, Q = st.queue.shape
+    n = st.status.shape[0]
+    a = jnp.clip(action.assign, 0)
+    ok = (action.assign >= 0) & (st.status[a] == QUEUED)
+    eet_eff = jnp.where(
+        st.alive[None, :], sysarr.eet * st.slowdown[None, :], BIG
+    )
+    avail_base = jnp.maximum(
+        jnp.where(st.run_task >= 0, st.run_end_exp, st.now), st.now
+    )
+    avail_base = jnp.where(st.alive, avail_base, BIG)
+    score = avail_base[None, :] + eet_eff[trace.task_type[a]]   # (M, M)
+    cols = jnp.arange(M)
+    score = jnp.where(cols[None, :] == cols[:, None], BIG, score)
+    picks = []
+    for _ in range(backup_k):
+        b = jnp.argmin(score, axis=1).astype(jnp.int32)
+        has = jnp.take_along_axis(score, b[:, None], axis=1)[:, 0] < BIG
+        picks.append(jnp.where(ok & has, b, -1))
+        score = jnp.where(cols[None, :] == b[:, None], BIG, score)
+    backup = st.backup.at[jnp.where(ok, a, n)].set(
+        jnp.stack(picks, axis=1), mode="drop"
+    )
+    return st._replace(backup=backup)
 
 
 def _map_action(st: SimState, trace: Trace, sysarr: SystemArrays,
                 select_fn: Callable, fairness_factor: float,
                 site_members: Optional[np.ndarray] = None,
-                site_of_machine: Optional[np.ndarray] = None) -> MapAction:
-    """The combined :class:`MapAction` of one mapping event (pre-apply)."""
+                site_of_machine: Optional[np.ndarray] = None,
+                health: bool = False) -> MapAction:
+    """The combined :class:`MapAction` of one mapping event (pre-apply).
+
+    With ``health`` the machine view is masked *before* the single-site /
+    block-diagonal / masked-vmap split: dead machines read avail=BIG,
+    empty queues, qlen=Q and EET=BIG — byte-identical to how out-of-site
+    machines already look — and straggler EET columns are slowdown-
+    scaled. Policies therefore route around failures with zero
+    policy-side code (in particular ``stale_hopeless`` cancels a dead
+    site's pending tasks: its fastest machine reads BIG).
+    """
     suffered = fairness.suffered_types(
         st.completed, st.arrived, fairness_factor
     )
     avail_base = jnp.maximum(
         jnp.where(st.run_task >= 0, st.run_end_exp, st.now), st.now
     )
+    queue_v, qlen_v = st.queue, st.qlen
+    if health:
+        Q = st.queue.shape[1]
+        sysarr = sysarr._replace(eet=jnp.where(
+            st.alive[None, :], sysarr.eet * st.slowdown[None, :], BIG
+        ))
+        avail_base = jnp.where(st.alive, avail_base, BIG)
+        queue_v = jnp.where(st.alive[:, None], st.queue, -1)
+        qlen_v = jnp.where(st.alive, st.qlen, Q)
     n_sites = 1 if site_members is None else site_members.shape[0]
     if n_sites == 1:
-        view = MachineView(avail_base=avail_base, queue=st.queue,
-                           qlen=st.qlen)
+        view = MachineView(avail_base=avail_base, queue=queue_v,
+                           qlen=qlen_v)
         return select_fn(
             st.now,
             st.status == PENDING,
@@ -324,8 +577,8 @@ def _map_action(st: SimState, trace: Trace, sysarr: SystemArrays,
 
         acts = jax.vmap(one_block)(
             avail_base.reshape(n_sites, m),
-            st.queue.reshape(n_sites, m, Q),
-            st.qlen.reshape(n_sites, m),
+            queue_v.reshape(n_sites, m, Q),
+            qlen_v.reshape(n_sites, m),
             jnp.moveaxis(sysarr.eet.reshape(S, n_sites, m), 0, 1),
             sysarr.p_dyn.reshape(n_sites, m),
             sysarr.p_idle.reshape(n_sites, m),
@@ -341,8 +594,8 @@ def _map_action(st: SimState, trace: Trace, sysarr: SystemArrays,
     def one_site(in_site, s):
         view_s = MachineView(
             avail_base=jnp.where(in_site, avail_base, BIG),
-            queue=jnp.where(in_site[:, None], st.queue, -1),
-            qlen=jnp.where(in_site, st.qlen, Q),
+            queue=jnp.where(in_site[:, None], queue_v, -1),
+            qlen=jnp.where(in_site, qlen_v, Q),
         )
         sysarr_s = sysarr._replace(
             eet=jnp.where(in_site[None, :], sysarr.eet, BIG)
@@ -413,21 +666,31 @@ def _apply_action(st: SimState, trace: Trace, action, n_types: int):
                        cancelled=cancelled)
 
 
-def _stage_start(st: SimState, trace: Trace, sysarr: SystemArrays):
+def _stage_start(st: SimState, trace: Trace, sysarr: SystemArrays,
+                 health: bool = False):
     """Idle machines pop their queue head (one pop per machine per event).
 
     A popped task whose deadline already passed "runs" for zero time with
     success=False and zero energy — the next loop iteration (same timestamp)
     finalizes it and pops again, which realizes Eq. 1/2's third row without
     an inner loop.
+
+    With ``health``, dead machines never pop (their queues are empty
+    anyway — the faults stage flushed them) and straggler machines run
+    every task ``slowdown``× longer, both in actual and expected time.
     """
     M = st.run_task.shape[0]
     can = (st.run_task < 0) & (st.qlen > 0)
+    if health:
+        can = can & st.alive
     head = jnp.where(can, st.queue[:, 0], 0)
     ttype = trace.task_type[head]
     dl = trace.deadline[head]
     e_act = trace.exec_actual[head, jnp.arange(M)]
     e_exp = sysarr.eet[ttype, jnp.arange(M)]
+    if health:
+        e_act = e_act * st.slowdown
+        e_exp = e_exp * st.slowdown
     dead_on_arrival = st.now >= dl
     end_act = jnp.where(
         dead_on_arrival, st.now, jnp.minimum(st.now + e_act, dl)
@@ -470,8 +733,20 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
                    max_steps: int | None = None,
                    observers: tuple = (),
                    dispatcher=None,
-                   site_of_machine: tuple | None = None) -> Callable:
+                   site_of_machine: tuple | None = None,
+                   dynamics=None) -> Callable:
     """Build ``simulate(trace)`` for one mapping policy.
+
+    ``dynamics`` is the machine-failure process — a registered
+    :mod:`repro.core.faults` name or :class:`~repro.core.faults.
+    MachineDynamics` instance, closed over statically like the policy.
+    ``None``/``"none"`` (the default) skips the faults stage entirely,
+    keeping the loop bit-exact with the pre-faults engine; any other
+    dynamics turns on health masking at the dispatch/map/start stages
+    and orphan re-dispatch at the ``faults`` stage. A ``with_backup``-
+    wrapped policy additionally activates k-failure backup nomination
+    (inert without a dynamics — backups only matter if machines can
+    die).
 
     ``select_fn(now, pending, task_type, deadline, view, sysarr, suffered)``
     is any :class:`repro.core.policy.Policy` (e.g. from
@@ -493,8 +768,17 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
     observer's name to its finalized pytree.
     """
     from repro.core import dispatch as dispatch_mod
+    from repro.core import faults as faults_mod
 
     S, M = sysarr.eet.shape
+    dynamics = faults_mod.resolve(dynamics)
+    if getattr(dynamics, "kind", None) == "none":
+        dynamics = None
+    backup_k = (int(getattr(select_fn, "backup_k", 0))
+                if dynamics is not None else 0)
+    wake = (tuple(float(w) for w in dynamics.wake_fracs())
+            if dynamics is not None and hasattr(dynamics, "wake_fracs")
+            else ())
     sites = ((0,) * M if site_of_machine is None
              else tuple(int(s) for s in site_of_machine))
     if len(sites) != M:
@@ -527,13 +811,19 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
     def simulate(trace: Trace):
         n = trace.arrival.shape[0]
         steps_cap = max_steps if max_steps is not None else 8 * n + 64
-        st = _init_state(trace, M, queue_size, S)
+        st = _init_state(trace, M, queue_size, S, backup_k=backup_k)
         aux = {ob.name: ob.init(trace, sysarr) for ob in observers}
+        health = dynamics is not None
+        horizon = (jnp.max(trace.deadline).astype(jnp.float32)
+                   if health else None)
+        wake_ts = (jnp.asarray(wake, jnp.float32) * horizon
+                   if wake else None)
 
         def cond(est: EngineState):
             st, aux = est
             halted = _halt(st, aux) if gaters else None
-            return (jnp.isfinite(_next_event_time(st, trace, halted))
+            return (jnp.isfinite(_next_event_time(st, trace, halted,
+                                                  wake_ts))
                     & (st.steps < steps_cap))
 
         def notify(stage, aux, st):
@@ -545,19 +835,23 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
         def body(est: EngineState):
             st, aux = est
             halted = _halt(st, aux) if gaters else None
-            t = _next_event_time(st, trace, halted)
+            t = _next_event_time(st, trace, halted, wake_ts)
             st = st._replace(now=jnp.maximum(t, st.now))
             st = _stage_finalize(st, trace, sysarr)
             aux = notify("finalize", aux, st)
             st = _stage_admit(st, trace, halted)
             aux = notify("admit", aux, st)
+            if health:
+                st = _stage_faults(st, trace, sysarr, dynamics, horizon, S,
+                                   backup_k, sites_np, n_sites)
+                aux = notify("faults", aux, st)
             st = _stage_dispatch(st, trace, sysarr, dispatcher, sites_np,
-                                 n_sites, fairness_factor)
+                                 n_sites, fairness_factor, health)
             aux = notify("dispatch", aux, st)
             st = _stage_map(st, trace, sysarr, select_fn, fairness_factor, S,
-                            site_members, sites_np)
+                            site_members, sites_np, health, backup_k)
             aux = notify("map", aux, st)
-            st = _stage_start(st, trace, sysarr)
+            st = _stage_start(st, trace, sysarr, health)
             aux = notify("start", aux, st)
             return EngineState(st._replace(steps=st.steps + 1), aux)
 
@@ -585,17 +879,20 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
 @functools.partial(jax.jit, static_argnames=("select_fn", "observers",
                                              "queue_size", "fairness_factor",
                                              "max_steps", "batched",
-                                             "dispatcher", "sites"))
+                                             "dispatcher", "sites",
+                                             "dynamics"))
 def _simulate_jit(trace, eet, p_dyn, p_idle, select_fn, observers,
                   queue_size, fairness_factor, max_steps, batched,
-                  dispatcher=None, sites=None):
+                  dispatcher=None, sites=None, dynamics=None):
     """The one cached jit entry point behind ``simulate``/``simulate_batch``.
 
-    Keyed on ``(select_fn, observers, dispatcher, sites, static config)``
-    — re-calling with the same (frozen, hashable) policy, observer and
-    dispatcher objects hits the jit cache instead of re-tracing,
-    including the vmapped batch path. ``sites`` is the static
-    site-partition tuple (``None`` = single site).
+    Keyed on ``(select_fn, observers, dispatcher, sites, dynamics,
+    static config)`` — re-calling with the same (frozen, hashable)
+    policy, observer, dispatcher and dynamics objects hits the jit cache
+    instead of re-tracing, including the vmapped batch path. ``sites``
+    is the static site-partition tuple (``None`` = single site);
+    ``dynamics`` is the static machine-dynamics instance (``None`` = no
+    faults stage).
     """
     sysarr = SystemArrays(
         eet=eet, p_dyn=p_dyn, p_idle=p_idle,
@@ -606,13 +903,15 @@ def _simulate_jit(trace, eet, p_dyn, p_idle, select_fn, observers,
         select_fn, sysarr, queue_size=queue_size,
         fairness_factor=fairness_factor, max_steps=max_steps,
         observers=observers, dispatcher=dispatcher, site_of_machine=sites,
+        dynamics=dynamics,
     )
     return jax.vmap(sim)(trace) if batched else sim(trace)
 
 
 def _simulate(trace, spec, heuristic, observers, max_steps, batched,
-              dispatcher=None):
+              dispatcher=None, dynamics=None):
     from repro.core import dispatch as dispatch_mod
+    from repro.core import faults as faults_mod
     from repro.core import observe, policy
 
     obs = observe.resolve(observers)
@@ -624,6 +923,12 @@ def _simulate(trace, spec, heuristic, observers, max_steps, batched,
     # pay a full recompile.
     disp = (None if sites is None or max(sites) == 0
             else dispatch_mod.resolve(dispatcher))
+    # Same idea for dynamics: the trivial "none" dynamics is normalized
+    # to None before the jit key, so ``dynamics="none"`` and the default
+    # share one cache entry (and one bit-exact program).
+    dyn = faults_mod.resolve(dynamics)
+    if getattr(dyn, "kind", None) == "none":
+        dyn = None
     return _simulate_jit(
         trace,
         jnp.asarray(spec.eet, jnp.float32),
@@ -637,31 +942,35 @@ def _simulate(trace, spec, heuristic, observers, max_steps, batched,
         batched,
         disp,
         sites,
+        dyn,
     )
 
 
 def simulate(trace: Trace, spec, heuristic: str, *, observers=(),
-             max_steps=None, dispatcher=None):
+             max_steps=None, dispatcher=None, dynamics=None):
     """Convenience entry point: one trace, one SystemSpec, one heuristic.
 
     The heuristic name is resolved through the policy registry, observer
-    names through the observer registry, and the dispatcher name through
-    the dispatcher registry — all *outside* the jit boundary; the
-    (frozen, hashable) policy/observer/dispatcher objects are the static
-    cache key — so re-registering a name with ``overwrite=True`` takes
-    effect instead of silently hitting a stale name-keyed jit cache.
+    names through the observer registry, the dispatcher name through the
+    dispatcher registry, and the dynamics name through the dynamics
+    registry — all *outside* the jit boundary; the (frozen, hashable)
+    policy/observer/dispatcher/dynamics objects are the static cache key
+    — so re-registering a name with ``overwrite=True`` takes effect
+    instead of silently hitting a stale name-keyed jit cache.
     ``spec.site_of_machine`` (if set) partitions the machines into
-    federation sites served through ``dispatcher``.
+    federation sites served through ``dispatcher``; ``dynamics``
+    (default ``None`` = ``"none"``) injects machine failures at the
+    ``faults`` stage (see :mod:`repro.core.faults`).
 
     Returns :class:`Metrics` when ``observers`` is empty, else
     ``(Metrics, aux)`` with ``aux`` keyed by observer name.
     """
     return _simulate(trace, spec, heuristic, observers, max_steps, False,
-                     dispatcher)
+                     dispatcher, dynamics)
 
 
 def simulate_batch(traces: Trace, spec, heuristic: str, *, observers=(),
-                   max_steps=None, dispatcher=None):
+                   max_steps=None, dispatcher=None, dynamics=None):
     """vmap over a stacked batch of traces (the paper's 30-trace studies).
 
     Shares the cached ``_simulate_jit`` with :func:`simulate`: calling it
@@ -669,4 +978,4 @@ def simulate_batch(traces: Trace, spec, heuristic: str, *, observers=(),
     rebuilding and re-jitting the vmapped simulator per call.
     """
     return _simulate(traces, spec, heuristic, observers, max_steps, True,
-                     dispatcher)
+                     dispatcher, dynamics)

@@ -1,0 +1,158 @@
+"""Registry-backed machine dynamics: failures, outages and stragglers.
+
+FELARE targets battery-powered edge fleets, but real HEC deployments
+lose machines and whole sites mid-trace — the on-time-completion
+objective is only meaningful if the scheduler survives that. This
+package makes failure a first-class, composable axis next to policies,
+scenarios, observers and dispatchers:
+
+    Run = Policy x Scenario x Dispatcher x Observers x **Dynamics**
+
+A :class:`MachineDynamics` evolves a per-machine ``(alive, slowdown)``
+health state at the engine's ``faults`` stage (after ``admit``, before
+``dispatch``), inside the single jitted event loop. Built-ins:
+
+  * ``none`` — no failures; the default, bit-exact with the pre-faults
+    engine (the stage is skipped entirely);
+  * ``bernoulli_updown`` — independent per-machine fail/recover Markov
+    chain, counter-hash keyed so failure traces are common random
+    numbers across the vmapped sweep grid;
+  * ``site_outage`` — scheduled correlated whole-site outage windows
+    (with engine wake-ups at the window edges);
+  * ``degrade`` — stragglers: a slowdown factor scaling EET rows rather
+    than killing the machine.
+
+Dead machines read avail=BIG/EET=BIG exactly like out-of-site machines;
+running tasks on a dying machine become *orphans* that re-enter the
+dispatch queue with a bounded retry count, and dispatchers see a
+heartbeat-style site-health mask ("site alive iff >= 1 healthy
+machine"). On top of the mask, :func:`with_backup` adds FEST/EnSuRe-
+style k-failure backup allocation as a policy wrapper, and the
+``health_aware`` dispatcher routes admissions around dead sites.
+
+All dynamics are frozen hashable dataclasses behind the shared
+:class:`~repro.core.registry.NameRegistry`, interpreted by the pure-
+Python oracle event-for-event, and serialize to JSON by kind + fields.
+See ``docs/faults.md`` for the stage contract, orphan semantics and a
+worked writing-a-dynamics example.
+"""
+from __future__ import annotations
+
+from repro.core.faults.backup import BackupPolicy, with_backup
+from repro.core.faults.base import (
+    FaultContext,
+    MachineDynamics,
+    hash_uniform,
+    hash_uniform_host,
+)
+from repro.core.faults.builtins import (
+    BernoulliUpDown,
+    Degrade,
+    NoDynamics,
+    SiteOutage,
+)
+from repro.core.faults.registry import (
+    get,
+    is_registered,
+    list_dynamics,
+    register,
+    unregister,
+)
+
+__all__ = [
+    "BackupPolicy",
+    "BernoulliUpDown",
+    "Degrade",
+    "FaultContext",
+    "MachineDynamics",
+    "NoDynamics",
+    "SiteOutage",
+    "describe",
+    "from_json_dict",
+    "get",
+    "hash_uniform",
+    "hash_uniform_host",
+    "is_registered",
+    "list_dynamics",
+    "register",
+    "resolve",
+    "to_json_dict",
+    "unregister",
+    "with_backup",
+]
+
+#: JSON ``kind`` -> built-in dynamics class, for spec round-tripping.
+_KINDS = {
+    "none": NoDynamics,
+    "bernoulli_updown": BernoulliUpDown,
+    "site_outage": SiteOutage,
+    "degrade": Degrade,
+}
+
+
+def resolve(dynamics) -> MachineDynamics:
+    """Normalize a name-or-instance to a MachineDynamics instance.
+
+    ``None`` resolves to :class:`NoDynamics` (the engine further
+    normalizes ``kind == "none"`` to "no faults stage at all", keeping
+    the default path bit-exact); strings resolve through the registry
+    (KeyError on unknown names lists what is registered).
+    """
+    if dynamics is None:
+        return NoDynamics()
+    if isinstance(dynamics, str):
+        return get(dynamics)
+    if not callable(getattr(dynamics, "step", None)):
+        raise TypeError(
+            f"dynamics must be a registered name or implement the "
+            f"MachineDynamics protocol, got {dynamics!r}"
+        )
+    return dynamics
+
+
+def describe(name_or_dynamics) -> str:
+    """One-line human description (for ``--list-dynamics``)."""
+    d = resolve(name_or_dynamics)
+    doc = (d.__class__.__doc__ or "").strip().splitlines()
+    return doc[0].rstrip(".") if doc else d.__class__.__name__
+
+
+def to_json_dict(dynamics) -> dict:
+    """``{"kind": ..., <param>: ...}`` for a built-in-style dynamics."""
+    import dataclasses
+
+    d = resolve(dynamics)
+    out = {"kind": d.kind}
+    for f in dataclasses.fields(d):
+        v = getattr(d, f.name)
+        if isinstance(v, tuple):
+            v = [list(x) if isinstance(x, tuple) else x for x in v]
+        out[f.name] = v
+    return out
+
+
+def from_json_dict(d: dict) -> MachineDynamics:
+    """Rebuild a built-in dynamics from its :func:`to_json_dict` form."""
+    kind = d.get("kind")
+    cls = _KINDS.get(kind)
+    if cls is None:
+        raise ValueError(
+            f"unknown dynamics kind {kind!r}; choose from {sorted(_KINDS)}"
+        )
+    params = {k: v for k, v in d.items() if k != "kind"}
+    for k, v in params.items():
+        if isinstance(v, list):
+            params[k] = tuple(
+                tuple(x) if isinstance(x, list) else x for x in v
+            )
+    return cls(**params)
+
+
+for _name, _dyn in [
+    ("none", NoDynamics()),
+    ("bernoulli_updown", BernoulliUpDown()),
+    ("site_outage", SiteOutage()),
+    ("degrade", Degrade()),
+]:
+    register(_name, _dyn)
+del _name, _dyn

@@ -1,0 +1,91 @@
+"""FEST/EnSuRe-style k-failure backup allocation as a policy wrapper.
+
+:func:`with_backup` wraps any mapping policy so that every task assigned
+a *primary* machine also gets ``k`` backup machines nominated on
+disjoint machines (FEST's primary/backup split, generalized to k
+failures like EnSuRe). The backups are passive standbys: nothing is
+reserved or executed on them while the primary is healthy — backup slots
+are simply *cancelled by construction* on primary success, realizing the
+"backup cancelled on primary success" half of FEST for free. Only when
+the primary machine dies mid-run does the orphaned task fail over: the
+engine's ``faults`` stage enqueues it directly on its first healthy,
+non-full backup, skipping the dispatch/map round-trip an unprotected
+orphan pays (and the extra retry risk that comes with it).
+
+Backups are chosen at assignment time by minimum expected completion
+(``avail_base + EET``) over healthy machines excluding the primary —
+the same greedy rule FEST uses for its backup slot — and recorded in the
+fixed-shape ``SimState.backup`` (N, k) table. The wrapper delegates
+everything else to the base policy unchanged, so ``with_backup(FELARE,
+k=1)`` maps exactly like FELARE until a failure happens; with
+``dynamics="none"`` the engine skips the backup machinery entirely and
+the wrapper is inert (bit-exact with the bare policy).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BackupPolicy:
+    """A mapping policy plus k-failure backup nomination (see module doc).
+
+    Frozen and hashable like every policy, so the engine closes over it
+    statically; ``backup_k`` is the attribute the engine keys the backup
+    machinery on (0 = none).
+    """
+
+    base: object
+    k: int = 1
+
+    def __post_init__(self):
+        if int(self.k) < 1:
+            raise ValueError(f"backup count k must be >= 1, got {self.k}")
+        if not (callable(self.base) or hasattr(self.base, "select")):
+            raise TypeError(
+                f"with_backup needs a mapping policy, got {self.base!r}"
+            )
+        object.__setattr__(self, "k", int(self.k))
+
+    @property
+    def backup_k(self) -> int:
+        return self.k
+
+    # -- pure delegation: mapping decisions are the base policy's ----------
+    def select(self, ctx):
+        return self.base.select(ctx)
+
+    def __call__(self, now, pending, task_type, deadline, view, sysarr,
+                 suffered):
+        return self.base(now, pending, task_type, deadline, view, sysarr,
+                         suffered)
+
+    def describe(self):
+        from repro.core import policy as policy_mod
+
+        return policy_mod.describe(self.base)._replace(backup_k=self.k)
+
+    @property
+    def supports_phase1_impl(self) -> bool:
+        return getattr(self.base, "supports_phase1_impl", False)
+
+    def with_phase1_impl(self, impl) -> "BackupPolicy":
+        if not self.supports_phase1_impl:
+            return self
+        return dataclasses.replace(
+            self, base=self.base.with_phase1_impl(impl)
+        )
+
+
+def with_backup(policy_or_name, k: int = 1) -> BackupPolicy:
+    """Wrap a policy (or registered policy name) with k-failure backups.
+
+        from repro.core import faults
+        pol = faults.with_backup("FELARE", k=1)
+        engine.simulate(trace, spec, pol, dynamics="site_outage")
+    """
+    from repro.core import policy as policy_mod
+
+    base = (policy_mod.get(policy_or_name)
+            if isinstance(policy_or_name, str) else policy_or_name)
+    return BackupPolicy(base, k)

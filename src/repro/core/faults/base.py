@@ -1,0 +1,123 @@
+"""The MachineDynamics protocol: per-machine health inside the jitted loop.
+
+A federation is only fault-tolerant if failure is a *modeled input*, not
+an exception path. This module defines the typed surface of the faults
+subsystem, mirroring the ArrivalProcess/Observer/Dispatcher pattern:
+
+  * :class:`FaultContext` — the frozen snapshot a dynamics reads at the
+    engine's ``faults`` stage (current time, event counter, trace
+    horizon, the health state it is evolving, and the static site
+    partition);
+  * :class:`MachineDynamics` — the protocol: frozen hashable dataclasses
+    with a ``kind`` tag and a pure ``step(ctx) -> (alive, slowdown)``
+    map, closed over statically by the engine (attaching a dynamics
+    never retraces per call, and the whole failure process rides inside
+    the single jitted — and vmapped — ``while_loop``);
+  * :func:`hash_uniform` — the counter-based uniform draw every
+    stochastic built-in keys on. It is a pure function of
+    ``(machine, event counter, seed)``, so failure traces are common
+    random numbers across the vmapped sweep grid (every heuristic in a
+    paired comparison sees the *same* failures) and the pure-Python
+    oracle reproduces each draw exactly (:func:`hash_uniform_host`).
+
+Health is two fixed-shape arrays threaded through ``SimState``:
+
+  ``alive``    (M,) bool — dead machines read avail=BIG/EET=BIG at the
+               dispatch and map stages, exactly like out-of-site
+               machines, so policies route around them with zero new
+               policy code;
+  ``slowdown`` (M,) f32  — a straggler factor scaling the machine's EET
+               column (and actual runtimes); 1.0 = nominal.
+
+See ``docs/faults.md`` for the stage contract, orphan semantics, and a
+worked writing-a-dynamics example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultContext:
+    """Frozen snapshot handed to :meth:`MachineDynamics.step` each event.
+
+    ``now``/``steps``/``alive``/``slowdown`` are traced arrays;
+    ``site_of_machine`` and ``n_sites`` are static host constants (the
+    partition shapes programs elsewhere in the engine, never here).
+    ``horizon`` is the trace horizon (max deadline) — the time scale
+    window-based dynamics (:class:`~repro.core.faults.builtins.
+    SiteOutage`) express their fractions against.
+    """
+
+    now: jnp.ndarray              # () f32 current event time
+    steps: jnp.ndarray            # () int32 completed loop iterations
+    horizon: jnp.ndarray          # () f32 trace horizon (max deadline)
+    alive: jnp.ndarray            # (M,) bool current health
+    slowdown: jnp.ndarray         # (M,) f32 current EET scale factors
+    site_of_machine: np.ndarray   # (M,) int — STATIC partition
+    n_sites: int                  # F — STATIC
+
+    @property
+    def n_machines(self) -> int:
+        return self.alive.shape[0]
+
+
+class MachineDynamics(Protocol):
+    """A per-machine health process evolved at the engine's ``faults`` stage.
+
+    Implementations are frozen (hashable) dataclasses with a ``kind`` tag
+    — the tag is what the pure-Python oracle and ``--list-dynamics`` key
+    on, so a dynamics is fully described by ``kind`` + its fields.
+
+    ``step`` returns the *next* ``(alive, slowdown)`` pair — both full
+    (M,) arrays, pure functions of the context (no hidden state: the
+    engine carries health in ``SimState``). ``wake_fracs`` lets
+    scheduled dynamics (outage windows) name horizon fractions at which
+    the engine must fire an event even if nothing else is due — without
+    it a quiet system would sleep through a scheduled recovery.
+    ``max_retries`` bounds orphan re-dispatch: a task orphaned more than
+    this many times is CANCELLED instead of re-entering the queue.
+    """
+
+    kind: str
+    max_retries: int
+
+    def step(self, ctx: FaultContext) -> Tuple[jnp.ndarray, jnp.ndarray]: ...
+
+    def wake_fracs(self) -> Tuple[float, ...]: ...
+
+
+def hash_uniform(machine, steps, seed: int) -> jnp.ndarray:
+    """Counter-based uniform draw in [0, 1), exact in float32.
+
+    A stateless multiplicative-xorshift hash of ``(machine, steps,
+    seed)`` on wrapping uint32 arithmetic; the top 24 bits become the
+    mantissa, so every value is an exact float32 (no rounding to diverge
+    on) and :func:`hash_uniform_host` reproduces each draw with plain
+    Python integers. No ``jax.random`` — the draw must not consume the
+    trace PRNG stream (CRN across the sweep grid) and must be cheap
+    enough to run every event.
+    """
+    u32 = jnp.uint32
+    x = (jnp.asarray(machine).astype(u32) * u32(0x9E3779B1)
+         + jnp.asarray(steps).astype(u32) * u32(0x85EBCA6B)
+         + u32((seed & 0xFFFFFFFF) * 0xC2B2AE35 & 0xFFFFFFFF))
+    x = x * u32(2654435761)
+    x = x ^ (x >> 13)
+    x = x * u32(2654435761)
+    return (x >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def hash_uniform_host(machine: int, steps: int, seed: int) -> np.float32:
+    """Plain-integer mirror of :func:`hash_uniform` (oracle side)."""
+    m32 = 0xFFFFFFFF
+    x = (machine * 0x9E3779B1 + steps * 0x85EBCA6B
+         + ((seed & m32) * 0xC2B2AE35 & m32)) & m32
+    x = (x * 2654435761) & m32
+    x ^= x >> 13
+    x = (x * 2654435761) & m32
+    return np.float32(np.float32(x >> 8) * np.float32(1.0 / (1 << 24)))

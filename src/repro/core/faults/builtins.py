@@ -1,0 +1,169 @@
+"""Built-in machine dynamics: the four failure processes.
+
+Each is a frozen (hashable) dataclass the engine closes over statically,
+and each is *data*: the pure-Python oracle (:mod:`repro.core.pyengine`)
+interprets ``kind`` + the dataclass fields with plain loops, so every
+built-in is cross-checkable event-for-event — including the failure
+draws themselves (:func:`~repro.core.faults.base.hash_uniform` is
+integer-exact on both sides).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.faults.base import FaultContext, hash_uniform
+
+
+@dataclasses.dataclass(frozen=True)
+class NoDynamics:
+    """No failures: every machine healthy forever (the default).
+
+    The engine treats this as the absence of a dynamics — the ``faults``
+    stage is skipped entirely and no health masking enters the traced
+    program, so ``dynamics="none"`` is *bit-exact* with the
+    pre-faults engine (pinned in ``tests/test_faults.py`` against a
+    frozen PR 6 snapshot).
+    """
+
+    kind = "none"
+    max_retries: int = 3
+
+    def step(self, ctx: FaultContext):
+        return ctx.alive, ctx.slowdown
+
+    def wake_fracs(self) -> Tuple[float, ...]:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliUpDown:
+    """Independent per-machine fail/recover Markov chain, one draw per event.
+
+    At each event every machine draws one :func:`hash_uniform` value
+    keyed on ``(machine, event counter, seed)``: an alive machine dies
+    with probability ``p_fail``, a dead one recovers with probability
+    ``p_recover``. Event-driven (not wall-clock-driven) by design — the
+    chain advances when the system does, which keeps the process inside
+    the fixed-shape event loop and identical across the vmapped sweep
+    grid (common random failures for paired comparisons).
+    """
+
+    kind = "bernoulli_updown"
+    p_fail: float = 0.02
+    p_recover: float = 0.2
+    seed: int = 0
+    max_retries: int = 3
+
+    def step(self, ctx: FaultContext):
+        u = hash_uniform(
+            jnp.arange(ctx.n_machines, dtype=jnp.uint32), ctx.steps,
+            self.seed,
+        )
+        alive = jnp.where(
+            ctx.alive,
+            u >= jnp.float32(self.p_fail),
+            u < jnp.float32(self.p_recover),
+        )
+        return alive, ctx.slowdown
+
+    def wake_fracs(self) -> Tuple[float, ...]:
+        return ()
+
+
+@dataclasses.dataclass(frozen=True)
+class SiteOutage:
+    """Scheduled correlated whole-site outages (power loss, backhaul cut).
+
+    ``outages`` is a tuple of ``(site, start_frac, end_frac)`` windows,
+    fractions of the trace horizon (max deadline): every machine of
+    ``site`` is dead for ``now in [start_frac * horizon, end_frac *
+    horizon)`` and healthy outside all of its windows. Health is a pure
+    function of time, so the process is trivially reproducible; the
+    window boundaries are reported as :meth:`wake_fracs` so the engine
+    fires an event at each outage start/end even when nothing else is
+    due (a recovery nobody observes never reschedules anything).
+    """
+
+    kind = "site_outage"
+    outages: Tuple[Tuple[int, float, float], ...] = ((0, 0.25, 0.5),)
+    max_retries: int = 3
+
+    def __post_init__(self):
+        norm = tuple(
+            (int(s), float(a), float(b)) for (s, a, b) in self.outages
+        )
+        for s, a, b in norm:
+            if not (0.0 <= a < b):
+                raise ValueError(
+                    f"outage window ({s}, {a}, {b}) needs 0 <= start < end"
+                )
+        object.__setattr__(self, "outages", norm)
+
+    def step(self, ctx: FaultContext):
+        site_ids = jnp.asarray(
+            np.asarray(ctx.site_of_machine, np.int32)
+        )
+        dead = jnp.zeros((ctx.n_machines,), bool)
+        for s, a, b in self.outages:
+            t0 = jnp.float32(a) * ctx.horizon
+            t1 = jnp.float32(b) * ctx.horizon
+            dead = dead | (
+                (site_ids == jnp.int32(s)) & (ctx.now >= t0) & (ctx.now < t1)
+            )
+        return ~dead, ctx.slowdown
+
+    def wake_fracs(self) -> Tuple[float, ...]:
+        return tuple(sorted({
+            float(f) for (_, a, b) in self.outages for f in (a, b)
+        }))
+
+
+@dataclasses.dataclass(frozen=True)
+class Degrade:
+    """Stragglers: a static set of machines runs slower, nothing dies.
+
+    The straggler set is either ``machines`` (explicit indices) or, when
+    ``None``, each machine independently with probability ``p`` (one
+    :func:`hash_uniform` draw keyed on ``(machine, 0, seed)`` — static
+    over the trace). Stragglers execute every task ``factor``× slower:
+    the engine scales their EET column *and* their actual runtimes, so
+    policies that consult the EET table see the degradation and route
+    around it (this is the paper's heterogeneity axis made dynamic).
+    """
+
+    kind = "degrade"
+    factor: float = 2.0
+    machines: Optional[Tuple[int, ...]] = None
+    p: float = 0.25
+    seed: int = 0
+    max_retries: int = 3
+
+    def __post_init__(self):
+        if self.machines is not None:
+            object.__setattr__(
+                self, "machines", tuple(int(j) for j in self.machines)
+            )
+        if self.factor <= 0:
+            raise ValueError(f"factor must be positive, got {self.factor}")
+
+    def step(self, ctx: FaultContext):
+        M = ctx.n_machines
+        if self.machines is not None:
+            mask = np.zeros((M,), bool)
+            mask[list(self.machines)] = True
+            straggler = jnp.asarray(mask)
+        else:
+            u = hash_uniform(
+                jnp.arange(M, dtype=jnp.uint32), jnp.uint32(0), self.seed
+            )
+            straggler = u < jnp.float32(self.p)
+        slow = jnp.where(straggler, jnp.float32(self.factor),
+                         jnp.float32(1.0))
+        return ctx.alive, slow
+
+    def wake_fracs(self) -> Tuple[float, ...]:
+        return ()

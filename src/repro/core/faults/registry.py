@@ -1,0 +1,61 @@
+"""Mutable, case-insensitive machine-dynamics registry.
+
+Dynamics are addressed by name everywhere — ``SweepSpec.dynamics``, the
+sweep CLI's ``--dynamics``, ``engine.simulate(dynamics=...)`` — so
+registering one here makes it flow through the single-jit sweep
+machinery untouched:
+
+    from repro.core import faults
+
+    faults.register("flaky", faults.BernoulliUpDown(p_fail=0.1))
+    # ... SweepSpec(system="paper_x2", dynamics="flaky") just works.
+
+The mechanics live in the shared
+:class:`repro.core.registry.NameRegistry` (also behind the policy,
+scenario, fleet, observer and dispatcher registries).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.registry import NameRegistry
+
+
+def _check(name, dynamics) -> None:
+    if not callable(getattr(dynamics, "step", None)):
+        raise TypeError(
+            f"dynamics {name!r} must implement the MachineDynamics "
+            f"protocol (a .step(ctx) method); got {dynamics!r}"
+        )
+
+
+_REGISTRY = NameRegistry("dynamics", case=str.lower, check=_check)
+
+
+def register(name: str, dynamics, *, overwrite: bool = False):
+    """Register ``dynamics`` under ``name`` (case-insensitive).
+
+    Re-registering an existing name raises unless ``overwrite=True``.
+    Returns the dynamics, so registration can be used expression-style.
+    """
+    return _REGISTRY.register(name, dynamics, overwrite=overwrite)
+
+
+def unregister(name: str) -> None:
+    """Remove a registered dynamics (KeyError if absent)."""
+    _REGISTRY.unregister(name)
+
+
+def is_registered(name: str) -> bool:
+    return _REGISTRY.is_registered(name)
+
+
+def get(name: str):
+    """Resolve a dynamics by (case-insensitive) name, or raise KeyError
+    listing every registered name."""
+    return _REGISTRY.get(name)
+
+
+def list_dynamics() -> List[str]:
+    """Sorted names of every registered machine dynamics."""
+    return _REGISTRY.names()

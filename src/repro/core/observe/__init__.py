@@ -20,7 +20,10 @@ vmapped — event loop with CRN preserved):
   * ``energy_budget`` — :class:`EnergyBudget`, the first *dynamic*
     observer: a finite battery capacity the engine consults to stop
     admitting work (Eq. 2's energy-limited regime; inert at the default
-    ``capacity=inf``).
+    ``capacity=inf``);
+  * ``health`` — :class:`Health`, K-bucket machine/site health and
+    orphan-pressure series from the faults subsystem
+    (:mod:`repro.core.faults`).
 
 See ``docs/engine.md`` for the event-stage contract and a worked
 "writing an observer" example.
@@ -33,6 +36,7 @@ from repro.core.observe.base import (
     forward_fill,
 )
 from repro.core.observe.energy import EnergyBudget
+from repro.core.observe.health import Health
 from repro.core.observe.registry import (
     get,
     is_registered,
@@ -47,6 +51,7 @@ from repro.core.observe.timeline import FairnessTrajectory, Timeline
 __all__ = [
     "EnergyBudget",
     "FairnessTrajectory",
+    "Health",
     "Observer",
     "TaskLog",
     "Timeline",
@@ -68,6 +73,7 @@ _KINDS = {
     "fairness_trajectory": FairnessTrajectory,
     "task_log": TaskLog,
     "energy_budget": EnergyBudget,
+    "health": Health,
 }
 
 
@@ -101,6 +107,7 @@ for _name, _ob in [
     ("fairness_trajectory", FairnessTrajectory()),
     ("task_log", TaskLog()),
     ("energy_budget", EnergyBudget()),
+    ("health", Health()),
 ]:
     register(_name, _ob)
 del _name, _ob

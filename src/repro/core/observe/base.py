@@ -13,8 +13,10 @@ Lifecycle, all inside the jitted simulator:
   * ``init(trace, sysarr) -> aux`` — allocate the fixed-shape state.
   * ``on_event(stage, aux, st, trace, sysarr) -> aux`` — called after
     every stage of every event, in :data:`repro.core.engine.STAGES` order
-    (``finalize``/``admit``/``map``/``start``); ``stage`` is a static
-    Python string, so per-stage branching costs nothing at runtime.
+    (``finalize``/``admit``/``faults``/``dispatch``/``map``/``start``;
+    the ``faults`` stage only fires when a machine dynamics is
+    attached); ``stage`` is a static Python string, so per-stage
+    branching costs nothing at runtime.
   * ``finalize(aux, st) -> pytree`` — shape the carried state into the
     result returned next to :class:`~repro.core.types.Metrics`.
 

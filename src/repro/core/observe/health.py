@@ -1,0 +1,120 @@
+"""Fleet-health telemetry observer (``health``).
+
+Samples the faults subsystem's per-machine health state
+(:mod:`repro.core.faults`) into K uniform time buckets over the trace
+horizon, like :class:`~repro.core.observe.timeline.Timeline` — healthy
+machine counts (fleet-wide and per-site), the site heartbeat mask the
+``health_aware`` dispatcher consults, and the cumulative orphan/retry
+pressure failures put on the workload. With no dynamics attached the
+series are trivially flat (everything alive, zero orphans), so the
+observer composes with any run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.observe.base import Observer, bucket_index, forward_fill
+from repro.core.types import SimState, SystemArrays, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class Health(Observer):
+    """K-bucket machine/site health and orphan-pressure series.
+
+    Result pytree (leaves lead with the K=``n_buckets`` axis):
+      ``t``            (K,)   right edge of each bucket (seconds)
+      ``healthy``      (K,)   alive machines at the last event <= t
+      ``site_healthy`` (K,F)  alive machines per federation site
+      ``site_alive``   (K,F)  heartbeat mask: site has >= 1 healthy machine
+      ``orphans``      (K,)   cumulative orphan re-dispatches (sum of
+                              per-task retry counters)
+      ``retried``      (K,)   tasks orphaned at least once so far
+      ``horizon``      ()     the sampled time horizon (max deadline)
+
+    The F axis sizes from the engine-bound site partition
+    (:meth:`with_engine_config`, like :class:`Timeline`'s per-site
+    series); flat systems get F=1.
+    """
+
+    n_buckets: int = 64
+    name: str = "health"
+    site_of_machine: tuple | None = None  # engine-bound, not serialized
+
+    def with_engine_config(self, *, site_of_machine=None, **config):
+        if site_of_machine is None:
+            return self
+        return dataclasses.replace(
+            self, site_of_machine=tuple(int(s) for s in site_of_machine)
+        )
+
+    @property
+    def _n_sites(self) -> int:
+        if self.site_of_machine is None:
+            return 1
+        return max(self.site_of_machine) + 1
+
+    def _site_ids(self, n_machines: int) -> jnp.ndarray:
+        return jnp.asarray(
+            self.site_of_machine or (0,) * n_machines, jnp.int32
+        )
+
+    def init(self, trace: Trace, sysarr: SystemArrays):
+        K, F = self.n_buckets, self._n_sites
+        M = sysarr.eet.shape[1]
+        return {
+            "horizon": jnp.max(trace.deadline).astype(jnp.float32),
+            "touched": jnp.zeros((K,), bool),
+            "healthy": jnp.zeros((K,), jnp.int32),
+            "site_healthy": jnp.zeros((K, F), jnp.int32),
+            "site_alive": jnp.zeros((K, F), bool),
+            "orphans": jnp.zeros((K,), jnp.int32),
+            "retried": jnp.zeros((K,), jnp.int32),
+            # pre-first-event fill: the whole fleet starts healthy
+            "init_site_healthy": jax.ops.segment_sum(
+                jnp.ones((M,), jnp.int32), self._site_ids(M), F
+            ),
+        }
+
+    def on_event(self, stage, aux, st: SimState, trace, sysarr):
+        if stage != "start":  # sample once per event, at end-of-event state
+            return aux
+        b = bucket_index(st.now, aux["horizon"], self.n_buckets)
+        alive = st.alive.astype(jnp.int32)
+        site_healthy = jax.ops.segment_sum(
+            alive, self._site_ids(alive.shape[0]), self._n_sites
+        )
+        return {
+            **aux,
+            "touched": aux["touched"].at[b].set(True),
+            "healthy": aux["healthy"].at[b].set(alive.sum()),
+            "site_healthy": aux["site_healthy"].at[b].set(site_healthy),
+            "site_alive": aux["site_alive"].at[b].set(site_healthy > 0),
+            "orphans": aux["orphans"].at[b].set(
+                st.retries.sum().astype(jnp.int32)),
+            "retried": aux["retried"].at[b].set(
+                (st.retries > 0).sum().astype(jnp.int32)),
+        }
+
+    def finalize(self, aux, st: SimState):
+        K, F = self.n_buckets, self._n_sites
+        series = {k: aux[k] for k in ("healthy", "site_healthy",
+                                      "site_alive", "orphans", "retried")}
+        init = {
+            "healthy": aux["init_site_healthy"].sum(),
+            "site_healthy": aux["init_site_healthy"],
+            "site_alive": aux["init_site_healthy"] > 0,
+            "orphans": jnp.zeros((), jnp.int32),
+            "retried": jnp.zeros((), jnp.int32),
+        }
+        filled = forward_fill(aux["touched"], series, init)
+        width = aux["horizon"] / K
+        filled["t"] = jnp.arange(1, K + 1, dtype=jnp.float32) * width
+        filled["horizon"] = aux["horizon"]
+        return filled
+
+    def to_json_dict(self) -> dict:
+        return {"kind": "health", "n_buckets": self.n_buckets,
+                "name": self.name}

@@ -30,6 +30,12 @@ class TaskLog(Observer):
       ``site``       int32, the federation site it was dispatched to
                      (−1 = never dispatched; 0 on single-site systems)
       ``status``     int32, final status code (see ``types.STATUS_NAMES``)
+      ``retries``    int32, orphan re-dispatches the task suffered from
+                     machine failures (0 with no dynamics attached)
+
+    ``machine`` reflects the *last* machine the task ran on, so a task
+    failed over to a backup or re-dispatched after a machine death logs
+    its final placement.
     """
 
     name: str = "task_log"
@@ -64,7 +70,8 @@ class TaskLog(Observer):
         }
 
     def finalize(self, aux, st: SimState):
-        return {**aux, "site": st.site, "status": st.status}
+        return {**aux, "site": st.site, "status": st.status,
+                "retries": st.retries}
 
     def to_json_dict(self) -> dict:
         return {"kind": "task_log", "name": self.name}

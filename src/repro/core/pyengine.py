@@ -20,6 +20,15 @@ over the site's own pending tasks and machines, with site-local
 feasibility (``hopeless``/``rescuable`` consult the site's fastest
 machine, exactly like the engine's BIG-masked EET rows).
 
+Machine dynamics (:mod:`repro.core.faults`) are interpreted too: a
+``faults`` step between arrivals and dispatch evolves per-machine
+``(alive, slowdown)`` (each built-in ``kind`` has a plain-loop mirror,
+down to the integer hash driving ``bernoulli_updown``), orphans the
+dead machines' tasks with the engine's exact retry/cancel/failover
+rules, and every decision table (EET columns, availability, per-site
+fastest machine) is re-derived with dead machines masked to BIG —
+byte-identical to how the engine masks out-of-site machines.
+
 Precision note: trace times are dyadic (the tests round them), so event
 timestamps are exact in both engines. Everything derived from the EET table
 (availability sums, feasibility boundaries, energy keys, the fairness limit)
@@ -80,12 +89,15 @@ def _lookup(table, kind, what):
 def _dispatch_interpreter(dispatcher, n_sites: int):
     """``kind`` + fields -> a plain-loop ``assign_sites`` closure.
 
-    ``assign_sites(new, ttype, suffered, load, eet_min_site)`` returns
-    ``{task index: site}`` for the indices in ``new`` (walked in
+    ``assign_sites(new, ttype, suffered, load, eet_min_site, site_alive)``
+    returns ``{task index: site}`` for the indices in ``new`` (walked in
     ascending order), mutating ``load`` for the load-balancing kinds
     exactly like the engine's ``sequential_balance`` scan;
     ``eet_min_site`` is the (S, F) per-site fastest-machine table
-    ``min_eet`` consults.
+    ``min_eet`` consults. ``site_alive`` is the faults subsystem's
+    heartbeat mask (``None`` with no dynamics attached); the caller has
+    already folded the engine's dead-site load penalty into ``load``, so
+    only ``health_aware`` reads the mask directly (for its home check).
     """
     from repro.core import dispatch as dispatch_mod
 
@@ -96,14 +108,14 @@ def _dispatch_interpreter(dispatcher, n_sites: int):
         return ((k * 2654435761 + salt) & 0xFFFFFFFF) % F
 
     if d.kind == "sticky":
-        def assign(new, ttype, suffered, load, eet_min_site):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
             return {k: (ttype[k] % F if d.by_type else _hash(k, d.salt))
                     for k in new}
     elif d.kind == "round_robin":
-        def assign(new, ttype, suffered, load, eet_min_site):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
             return {k: k % F for k in new}
     elif d.kind == "least_queued":
-        def assign(new, ttype, suffered, load, eet_min_site):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
             out = {}
             for k in new:  # ascending index order, like the engine's scan
                 s = int(np.argmin(load))
@@ -111,14 +123,24 @@ def _dispatch_interpreter(dispatcher, n_sites: int):
                 out[k] = s
             return out
     elif d.kind == "min_eet":
-        def assign(new, ttype, suffered, load, eet_min_site):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
             return {k: int(np.argmin(eet_min_site[ttype[k]])) for k in new}
     elif d.kind == "fair_spill":
-        def assign(new, ttype, suffered, load, eet_min_site):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
             out = {}
             for k in new:
                 s = (int(np.argmin(load)) if suffered[ttype[k]]
                      else _hash(k, d.salt))
+                load[s] += 1
+                out[k] = s
+            return out
+    elif d.kind == "health_aware":
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
+            out = {}
+            for k in new:
+                home = _hash(k, d.salt)
+                s = (home if site_alive is None or site_alive[home]
+                     else int(np.argmin(load)))
                 load[s] += 1
                 out[k] = s
             return out
@@ -129,16 +151,18 @@ def _dispatch_interpreter(dispatcher, n_sites: int):
     return assign
 
 
-def simulate(trace, spec, heuristic: str, dispatcher=None):
+def simulate(trace, spec, heuristic: str, dispatcher=None, dynamics=None):
     """Run one trace; returns a dict mirroring Metrics.
 
     The dict also carries a ``"task_log"`` entry mirroring the JAX
     engine's ``task_log`` observer (:mod:`repro.core.observe`): per-task
-    map/start/end times, machine, federation site and final status,
-    stamped at the same event timestamps — the cross-check is
-    event-for-event, not just end-of-trace.
+    map/start/end times, machine, federation site, final status and
+    orphan retry count, stamped at the same event timestamps — the
+    cross-check is event-for-event, not just end-of-trace.
     """
+    from repro.core import faults as faults_mod
     from repro.core import policy as policy_mod
+    from repro.core.faults.base import hash_uniform_host
 
     desc = policy_mod.describe(heuristic)
     eet = np.asarray(spec.eet, np.float32)
@@ -159,14 +183,41 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
     F_sites = int(sites.max()) + 1
     site_machines = [[j for j in range(M) if sites[j] == s]
                      for s in range(F_sites)]
-    # (S, F) f32 — each type's fastest machine per site (site-local
-    # feasibility mirror of the engine's BIG-masked EET rows).
-    eet_min_site = np.stack(
-        [eet[:, ms].min(axis=1) for ms in site_machines], axis=1
-    )
     task_site = np.full(n, -1, int)
     assign_sites = (_dispatch_interpreter(dispatcher, F_sites)
                     if F_sites > 1 else None)
+
+    # --- machine dynamics (None = no faults step, like the engine) ---------
+    dyn = faults_mod.resolve(dynamics)
+    if getattr(dyn, "kind", None) == "none":
+        dyn = None
+    backup_k = int(getattr(desc, "backup_k", 0)) if dyn is not None else 0
+    max_retries = int(getattr(dyn, "max_retries", 3))
+    horizon = F(dl.max())
+    wake_ts = ([float(F(F(w) * horizon)) for w in dyn.wake_fracs()]
+               if dyn is not None and hasattr(dyn, "wake_fracs") else [])
+    alive = np.ones(M, bool)
+    slowdown = np.ones(M, np.float32)
+    retries = np.zeros(n, int)
+    backup = np.full((n, backup_k), -1, int)
+
+    # Decision tables, re-derived whenever health changes: dead machines'
+    # EET columns read BIG (the engine's out-of-site masking, reused) and
+    # straggler columns are slowdown-scaled. With no dynamics these are
+    # exactly the raw tables (x * 1.0 is f32-exact).
+    eet_c = eet
+    eet_min_site = np.stack(
+        [eet[:, ms].min(axis=1) for ms in site_machines], axis=1
+    )
+
+    def _refresh_tables():
+        nonlocal eet_c, eet_min_site
+        eet_c = np.where(
+            alive[None, :], (eet * slowdown[None, :]).astype(F), F(BIG)
+        ).astype(F)
+        eet_min_site = np.stack(
+            [eet_c[:, ms].min(axis=1) for ms in site_machines], axis=1
+        )
 
     status = np.full(n, UNARRIVED)
     machines = [_Machine(j) for j in range(M)]
@@ -178,7 +229,9 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
     e_wasted = 0.0
     now = 0.0
 
-    # task_log mirror: stamped once, at the event that made the transition.
+    # task_log mirror: stamped once, at the event that made the transition
+    # (``machine`` restamps at every start — it reports the task's last
+    # placement, which moves on failover/re-dispatch).
     log_map = np.full(n, -1.0)
     log_start = np.full(n, -1.0)
     log_end = np.full(n, -1.0)
@@ -192,16 +245,19 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
         ts = [arr[k] for k in range(n) if status[k] == UNARRIVED]
         ts += [m.run_end_act for m in machines if m.run >= 0]
         ts += [dl[k] for k in range(n) if status[k] == PENDING]
+        ts += [w for w in wake_ts if w > now]  # outage window edges
         return min(ts) if ts else np.inf
 
     def avail_base(m):
+        if not alive[m.j]:
+            return F(BIG)
         return F(max(now, m.run_end_exp if m.run >= 0 else now))
 
     def qsum(m):
         # f32 slot-order reduction, like the engine's queued_eet(...).sum(1)
         s = F(0.0)
         for k in m.queue:
-            s = F(s + eet[ttype[k], m.j])
+            s = F(s + eet_c[ttype[k], m.j])
         return s
 
     def avail(m):
@@ -225,7 +281,7 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
             best = None
             for j in free:
                 s = avail(machines[j])
-                e = eet[ttype[k], j]
+                e = eet_c[ttype[k], j]
                 if F(s + e) <= dl[k]:
                     ec = F(p_dyn[j] * e)
                     if best is None or ec < best[2]:
@@ -240,7 +296,7 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
             best = None
             for j in free:
                 s = avail(machines[j])
-                c = _completion(s, eet[ttype[k], j], dl[k])
+                c = _completion(s, eet_c[ttype[k], j], dl[k])
                 if best is None or c < best[2]:
                     best = (k, j, c)
             if best:
@@ -252,7 +308,7 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
         for k in pend:
             best = None
             for j in free:
-                e = eet[ttype[k], j]
+                e = eet_c[ttype[k], j]
                 if best is None or e < best[2]:
                     best = (k, j, e)
             if best:
@@ -267,7 +323,7 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
     # --- Phase-II keys (lower = better), float32 with the engine's op order
     # so tie-breaking is bit-identical --------------------------------------
     def _key_urgency(k, j, val):
-        slack = F(F(F(dl[k]) - F(now)) - eet[ttype[k], j])
+        slack = F(F(F(dl[k]) - F(now)) - eet_c[ttype[k], j])
         if abs(slack) < 1e-9:
             slack = F(1e-9)
         return F(-(F(1.0) / slack))
@@ -316,8 +372,15 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
             [sum(len(machines[j].queue) for j in site_machines[s])
              + sum(1 for j in site_machines[s] if machines[j].run >= 0)
              for s in range(F_sites)], int)
+        site_alive = None
+        if dyn is not None:
+            site_alive = np.asarray(
+                [any(alive[j] for j in site_machines[s])
+                 for s in range(F_sites)])
+            # engine's sequential_balance dead-site penalty
+            load = load + np.where(site_alive, 0, 1_000_000)
         for k, s in assign_sites(new, ttype, suffered, load,
-                                 eet_min_site).items():
+                                 eet_min_site, site_alive).items():
             task_site[k] = min(max(int(s), 0), F_sites - 1)
 
     def mapping_event():
@@ -348,8 +411,8 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
                 k for k in pend
                 if suffered[ttype[k]]
                 and not any(
-                    F(avail(machines[j]) + eet[ttype[k], j]) <= dl[k]
-                    for j in msite if len(machines[j].queue) < Q
+                    F(avail(machines[j]) + eet_c[ttype[k], j]) <= dl[k]
+                    for j in msite if alive[j] and len(machines[j].queue) < Q
                 )
                 and F(F(now) + eet_min_site[ttype[k], s]) <= dl[k]
             ]
@@ -357,10 +420,10 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
                 k = min(resc, key=lambda k: dl[k])
                 mstar = min(
                     msite,
-                    key=lambda j: F(avail(machines[j]) + eet[ttype[k], j]),
+                    key=lambda j: F(avail(machines[j]) + eet_c[ttype[k], j]),
                 )
                 m = machines[mstar]
-                e_tgt = eet[ttype[k], mstar]
+                e_tgt = eet_c[ttype[k], mstar]
                 evict = []
                 base = avail_base(m)
                 rem = qsum(m)
@@ -370,7 +433,7 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
                         break
                     if not suffered[ttype[t]]:
                         evict.append(qi)
-                        rem = F(rem - eet[ttype[t], mstar])
+                        rem = F(rem - eet_c[ttype[t], mstar])
                 if F(F(base + rem) + e_tgt) <= dl[k]:
                     for qi in evict:
                         t = m.queue.pop(qi)
@@ -378,7 +441,7 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
                         cancelled[ttype[t]] += 1
                         _end(t)
 
-        free = [j for j in msite if len(machines[j].queue) < Q]
+        free = [j for j in msite if alive[j] and len(machines[j].queue) < Q]
 
         # Phase-I + Phase-II (fairness: suffered-type pairs claim machines
         # first, remaining machines serve the non-suffered pairs).
@@ -412,34 +475,145 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
                 status[k] = QUEUED
                 if log_map[k] < 0:
                     log_map[k] = now
+                if backup_k:
+                    _nominate_backup(k, j)
+
+    def _nominate_backup(k, jprim):
+        """k cheapest completion-score backups, primary/dead masked to BIG.
+
+        Mirrors the engine's ``_nominate_backups``: score is the *current*
+        base availability (queue backlog ignored, FEST-style) plus the
+        health-masked EET, and the iterative argmin naturally yields
+        distinct machines in score order (picked slots are re-masked).
+        """
+        sc = np.empty(M, F)
+        for j2 in range(M):
+            if j2 == jprim:
+                sc[j2] = F(BIG)
+                continue
+            m2 = machines[j2]
+            ab = (F(BIG) if not alive[j2]
+                  else F(max(now, m2.run_end_exp if m2.run >= 0 else now)))
+            sc[j2] = F(ab + eet_c[ttype[k], j2])
+        for slot in range(backup_k):
+            b = int(np.argmin(sc))
+            backup[k, slot] = b if sc[b] < F(BIG) else -1
+            sc[b] = F(BIG)
 
     def start_tasks():
         # One pop per machine per event; a dead-on-arrival task becomes a
         # zero-duration run (finalized as MISSED with zero energy at the same
         # timestamp) — mirrors the JAX engine's event structure exactly.
         for m in machines:
-            if m.run < 0 and m.queue:
+            if m.run < 0 and m.queue and alive[m.j]:
                 k = m.queue.pop(0)
                 m.run = k
                 m.run_start = now
                 status[k] = RUNNING
                 if log_start[k] < 0:
                     log_start[k] = now
-                    log_machine[k] = m.j
+                log_machine[k] = m.j  # last placement (moves on failover)
                 if now >= dl[k]:
                     m.run_success = False
                     m.run_end_act = now
                     m.run_end_exp = F(now)
                 else:
-                    e_act = exec_act[k, m.j]
+                    e_act = exec_act[k, m.j] * float(slowdown[m.j])
                     m.run_success = now + e_act <= dl[k]
                     m.run_end_act = min(now + e_act, dl[k])
                     m.run_end_exp = F(
-                        _completion(F(now), eet[ttype[k], m.j], F(dl[k]))
+                        _completion(F(now), eet_c[ttype[k], m.j], F(dl[k]))
                     )
 
+    # --- faults step: evolve health, orphan the dead machines' tasks -------
+    def dyn_step(it):
+        """Plain-loop mirror of the registered dynamics' ``step``."""
+        alive_new = alive.copy()
+        slow_new = slowdown.copy()
+        if dyn.kind == "bernoulli_updown":
+            for j in range(M):
+                u = hash_uniform_host(j, it, dyn.seed)
+                alive_new[j] = (u >= F(dyn.p_fail)) if alive[j] \
+                    else (u < F(dyn.p_recover))
+        elif dyn.kind == "site_outage":
+            dead = np.zeros(M, bool)
+            for (s, a, b) in dyn.outages:
+                t0 = F(F(a) * horizon)
+                t1 = F(F(b) * horizon)
+                dead |= (sites == s) & (now >= t0) & (now < t1)
+            alive_new = ~dead
+        elif dyn.kind == "degrade":
+            if dyn.machines is not None:
+                mask = np.asarray(
+                    [j in dyn.machines for j in range(M)])
+            else:
+                mask = np.asarray(
+                    [hash_uniform_host(j, 0, dyn.seed) < F(dyn.p)
+                     for j in range(M)])
+            slow_new = np.where(mask, F(dyn.factor), F(1.0)).astype(F)
+        else:
+            raise NotImplementedError(
+                f"oracle has no interpretation for dynamics {dyn.kind!r}"
+            )
+        return alive_new, slow_new
+
+    def faults_event(it):
+        nonlocal e_dyn, e_wasted
+        alive_new, slow_new = dyn_step(it)
+        died = alive & ~alive_new
+        # flush dead machines' queues (machine index order, like the scan)
+        for m in machines:
+            if not died[m.j]:
+                continue
+            for k in m.queue:
+                retries[k] += 1
+                if retries[k] > max_retries:
+                    status[k] = CANCELLED
+                    cancelled[ttype[k]] += 1
+                    _end(k)  # site kept: records where it gave up
+                else:
+                    status[k] = PENDING
+                    task_site[k] = -1  # re-enters dispatch this event
+            m.queue.clear()
+        # kill running tasks: partial energy is spent AND wasted
+        for m in machines:
+            if not (died[m.j] and m.run >= 0):
+                continue
+            k = m.run
+            dur = now - m.run_start
+            en = float(p_dyn[m.j]) * dur
+            e_dyn += en
+            e_wasted += en
+            m.busy += dur
+            retries[k] += 1
+            if retries[k] > max_retries:
+                status[k] = CANCELLED
+                cancelled[ttype[k]] += 1
+                _end(k)
+            else:
+                fb = -1  # first live backup with queue room
+                for b in backup[k] if backup_k else ():
+                    if b >= 0 and alive_new[b] and \
+                            len(machines[b].queue) < Q:
+                        fb = int(b)
+                        break
+                if fb >= 0:
+                    machines[fb].queue.append(k)
+                    status[k] = QUEUED
+                    task_site[k] = int(sites[fb])
+                else:
+                    status[k] = PENDING
+                    task_site[k] = -1
+            m.run = -1
+            m.run_end_act = np.inf
+            m.run_end_exp = F(now)
+            m.run_success = False
+        alive[:] = alive_new
+        slowdown[:] = slow_new
+        _refresh_tables()
+
     max_steps = 16 * n + 64
-    for _ in range(max_steps):
+    for it in range(max_steps):
         t = next_event()
         if not np.isfinite(t):
             break
@@ -468,6 +642,8 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
             if status[k] == UNARRIVED and arr[k] <= now:
                 status[k] = PENDING
                 arrived[ttype[k]] += 1
+        if dyn is not None:
+            faults_event(it)
         dispatch_event()
         mapping_event()
         start_tasks()
@@ -482,6 +658,7 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
         energy_wasted=e_wasted,
         energy_idle=e_idle,
         makespan=makespan,
+        backup=backup.copy(),
         task_log=dict(
             map_time=log_map,
             start_time=log_start,
@@ -489,5 +666,6 @@ def simulate(trace, spec, heuristic: str, dispatcher=None):
             machine=log_machine,
             site=task_site.copy(),
             status=status.copy(),
+            retries=retries.copy(),
         ),
     )

@@ -163,6 +163,17 @@ class SimState(NamedTuple):
     through ``lax.while_loop`` and vmaps over trace batches. Observers
     (:mod:`repro.core.observe`) receive this read-only at every event
     stage; their own state rides next to it in :class:`EngineState.aux`.
+
+    The trailing health fields belong to the faults subsystem
+    (:mod:`repro.core.faults`): ``alive``/``slowdown`` are the
+    per-machine health state a :class:`~repro.core.faults.
+    MachineDynamics` evolves at the ``faults`` stage, ``retries`` counts
+    each task's orphan re-dispatches, and ``backup`` holds the k-failure
+    backup nominations of :func:`~repro.core.faults.with_backup`
+    (shape (N, 0) when no backups are in play). With ``dynamics="none"``
+    they are constant carries — present in the state, never read by any
+    stage — which keeps the default program bit-exact with the
+    pre-faults engine.
     """
 
     now: jnp.ndarray            # ()
@@ -183,6 +194,10 @@ class SimState(NamedTuple):
     cancelled: jnp.ndarray      # (S,) int32
     arrived: jnp.ndarray        # (S,) int32
     steps: jnp.ndarray          # () int32
+    alive: Optional[jnp.ndarray] = None     # (M,) bool machine health
+    slowdown: Optional[jnp.ndarray] = None  # (M,) f32 straggler factors
+    retries: Optional[jnp.ndarray] = None   # (N,) int32 orphan re-dispatches
+    backup: Optional[jnp.ndarray] = None    # (N, k) int32 backup machines
 
 
 class EngineState(NamedTuple):

@@ -24,11 +24,12 @@ from repro.experiments.results import SweepResult
 from repro.experiments.spec import SweepSpec
 
 # Trace-time observability: one (heuristic, scenario label, dispatcher
-# label) entry is appended each time a per-heuristic simulator body is
-# *traced* (not dispatched). Tests read this to pin the single-jit
-# contract — every (policy, dispatcher, scenario) triple of a sweep must
-# trace exactly once inside one XLA program. Bounded to the most recent
-# entries so long-lived processes don't accumulate.
+# label, dynamics label) entry is appended each time a per-heuristic
+# simulator body is *traced* (not dispatched). Tests read this to pin the
+# single-jit contract — every (policy, dispatcher, dynamics, scenario)
+# tuple of a sweep must trace exactly once inside one XLA program.
+# Bounded to the most recent entries so long-lived processes don't
+# accumulate.
 _TRACE_LOG: list = []
 _TRACE_LOG_MAX = 256
 
@@ -49,7 +50,8 @@ def _select_fns(names, use_pallas: bool):
 def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
                    *, use_pallas_phase1: bool = False,
                    max_steps=None, trace_label: str = "",
-                   observers=(), dispatcher=None, shard: bool = False):
+                   observers=(), dispatcher=None, dynamics=None,
+                   shard: bool = False):
     """Simulate a flat batch of traces under every heuristic, in one jit.
 
     Args:
@@ -70,7 +72,12 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
         or :class:`repro.core.dispatch.Dispatcher` instance (``None`` =
         the default ``sticky``; inert on single-site systems). Closed
         over statically like the policies: one trace per
-        (policy, dispatcher, scenario) triple.
+        (policy, dispatcher, dynamics, scenario) tuple.
+      dynamics: the machine-failure process — a registered
+        :mod:`repro.core.faults` name or
+        :class:`repro.core.faults.MachineDynamics` instance
+        (``None``/``"none"`` = no failures, bit-exact with pre-faults
+        sweeps). Closed over statically like the policies.
       shard: split the trace batch across every visible device with
         ``jax.shard_map`` (``repro.distributed.sharding.sweep_mesh``) —
         each device simulates its slice of the batch; the batch is
@@ -85,12 +92,16 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
       to its pytree with the same (H, B, ...) leading dims.
     """
     from repro.core import dispatch as dispatch_mod
+    from repro.core import faults as faults_mod
     from repro.core import observe
 
     obs = observe.resolve(observers)
     disp = dispatch_mod.resolve(dispatcher)
     disp_label = (dispatcher if isinstance(dispatcher, str)
                   else getattr(disp, "kind", type(disp).__name__))
+    dyn = faults_mod.resolve(dynamics)
+    dyn_label = (dynamics if isinstance(dynamics, str)
+                 else getattr(dyn, "kind", type(dyn).__name__))
     sysarr = system.as_jax()
     sims = [
         engine.make_simulator(
@@ -98,6 +109,7 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
             fairness_factor=float(system.fairness_factor),
             max_steps=max_steps, observers=obs,
             dispatcher=disp, site_of_machine=system.sites,
+            dynamics=dyn,
         )
         for fn in _select_fns(heuristic_names, use_pallas_phase1)
     ]
@@ -105,7 +117,8 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
     def run_all(tr):
         per_h = []
         for name, sim in zip(heuristic_names, sims):
-            _TRACE_LOG.append((name, trace_label, disp_label))  # trace-time
+            _TRACE_LOG.append(
+                (name, trace_label, disp_label, dyn_label))  # trace-time
             per_h.append(jax.vmap(sim)(tr))
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_h)
 
@@ -168,7 +181,7 @@ def run_sweep(spec: SweepSpec, *, shard: bool = False) -> SweepResult:
         flat, system, spec.heuristics,
         use_pallas_phase1=spec.use_pallas_phase1, max_steps=spec.max_steps,
         trace_label=label, observers=observers, dispatcher=spec.dispatcher,
-        shard=shard,
+        dynamics=spec.dynamics, shard=shard,
     )
     metrics, aux = out if observers else (out, {})
     H = len(spec.heuristics)

@@ -106,6 +106,12 @@ class SweepSpec:
         (``SystemSpec.site_of_machine``); single-site systems bypass the
         dispatch stage entirely, so the default ``"sticky"`` keeps flat
         sweeps bit-identical to pre-federation ones.
+      dynamics: the machine-failure process — a registered dynamics name
+        (built-ins: ``"none"``, ``"bernoulli_updown"``, ``"site_outage"``,
+        ``"degrade"``; see :func:`repro.core.faults.list_dynamics`) or a
+        :class:`repro.core.faults.MachineDynamics` instance. The default
+        ``"none"`` skips the engine's faults stage entirely and is
+        bit-exact with pre-faults sweeps.
     """
 
     system: Union[str, SystemSpec, None] = None
@@ -122,6 +128,7 @@ class SweepSpec:
     scenario: Union[str, "object"] = "poisson"  # name or scenarios.Scenario
     observers: tuple = ()  # names or observe.Observer instances
     dispatcher: Union[str, "object"] = "sticky"  # name or dispatch.Dispatcher
+    dynamics: Union[str, "object"] = "none"  # name or faults.MachineDynamics
 
     def __post_init__(self):
         object.__setattr__(self, "rates",
@@ -174,6 +181,22 @@ class SweepSpec:
                 f"dispatcher must be a registered name or a "
                 f"dispatch.Dispatcher, got {self.dispatcher!r}"
             )
+        from repro.core import faults
+
+        if isinstance(self.dynamics, str):
+            name = self.dynamics.strip().lower()
+            if not faults.is_registered(name):
+                raise ValueError(
+                    f"unknown dynamics {self.dynamics!r}; "
+                    f"choose from {faults.list_dynamics()} "
+                    f"(or faults.register(...) your own)"
+                )
+            object.__setattr__(self, "dynamics", name)
+        elif not callable(getattr(self.dynamics, "step", None)):
+            raise ValueError(
+                f"dynamics must be a registered name or a "
+                f"faults.MachineDynamics, got {self.dynamics!r}"
+            )
         from repro.core import observe
 
         obs = []
@@ -220,6 +243,12 @@ class SweepSpec:
         from repro.core import dispatch
 
         return dispatch.resolve(self.dispatcher)
+
+    def resolve_dynamics(self):
+        """Materialize the :class:`repro.core.faults.MachineDynamics`."""
+        from repro.core import faults
+
+        return faults.resolve(self.dynamics)
 
     def resolve_system(self) -> SystemSpec:
         """Materialize the SystemSpec, applying queue/fairness overrides.
@@ -279,6 +308,10 @@ class SweepSpec:
 
         dispatcher = (self.dispatcher if isinstance(self.dispatcher, str)
                       else dispatch.to_json_dict(self.dispatcher))
+        from repro.core import faults
+
+        dynamics = (self.dynamics if isinstance(self.dynamics, str)
+                    else faults.to_json_dict(self.dynamics))
         observers = []
         for ob in self.observers:
             if isinstance(ob, str):
@@ -295,6 +328,7 @@ class SweepSpec:
             "scenario": scenario,
             "observers": observers,
             "dispatcher": dispatcher,
+            "dynamics": dynamics,
             "rates": list(self.rates),
             "reps": self.reps,
             "n_tasks": self.n_tasks,
@@ -338,11 +372,17 @@ class SweepSpec:
         dispatcher = d.get("dispatcher", "sticky")
         if isinstance(dispatcher, dict):
             dispatcher = dispatch.from_json_dict(dispatcher)
+        from repro.core import faults
+
+        dynamics = d.get("dynamics", "none")
+        if isinstance(dynamics, dict):
+            dynamics = faults.from_json_dict(dynamics)
         return cls(
             system=system,
             scenario=scenario,
             observers=observers,
             dispatcher=dispatcher,
+            dynamics=dynamics,
             rates=tuple(d["rates"]),
             reps=int(d["reps"]),
             n_tasks=int(d["n_tasks"]),

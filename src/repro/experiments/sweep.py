@@ -25,7 +25,7 @@ import sys
 import time
 
 from repro import scenarios
-from repro.core import dispatch, observe, policy
+from repro.core import dispatch, faults, observe, policy
 from repro.experiments.results import SweepResult
 from repro.experiments.runner import run_sweep
 from repro.experiments.spec import (
@@ -76,6 +76,12 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
     ap.add_argument("--list-dispatchers", action="store_true",
                     help="list the registered federation dispatchers and "
                          "exit")
+    ap.add_argument("--dynamics", default="none",
+                    help="machine-failure process to inject (default: none;"
+                         " see --list-dynamics). 'none' is bit-exact with a"
+                         " fault-free sweep.")
+    ap.add_argument("--list-dynamics", action="store_true",
+                    help="list the registered machine dynamics and exit")
     ap.add_argument("--observers", default="",
                     help="comma list of registered engine observers to "
                          "attach (e.g. timeline,task_log; see "
@@ -112,6 +118,9 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
     if args.list_dispatchers:
         print_dispatcher_list()
         raise SystemExit(0)
+    if args.list_dynamics:
+        print_dynamics_list()
+        raise SystemExit(0)
 
     heuristics = tuple(
         h.strip() for h in args.heuristics.split(",") if h.strip()
@@ -143,6 +152,12 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
             "dispatchers: " + ", ".join(dispatch.list_dispatchers())
             + " (run with --list-dispatchers for details)"
         )
+    if not faults.is_registered(args.dynamics):
+        ap.error(
+            f"unknown dynamics {args.dynamics!r}; registered dynamics: "
+            + ", ".join(faults.list_dynamics())
+            + " (run with --list-dynamics for details)"
+        )
     observers = tuple(
         o.strip() for o in args.observers.split(",") if o.strip()
     )
@@ -169,6 +184,7 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
             use_pallas_phase1=args.pallas_phase1,
             observers=observers,
             dispatcher=args.dispatcher,
+            dynamics=args.dynamics,
         )
     except ValueError as e:
         ap.error(str(e))  # clean exit 2 instead of a traceback
@@ -218,6 +234,13 @@ def print_dispatcher_list(file=None) -> None:
         print(f"{name:14s} {dispatch.describe(name)}", file=file)
 
 
+def print_dynamics_list(file=None) -> None:
+    """One line per registered machine dynamics: name + description."""
+    file = file if file is not None else sys.stdout
+    for name in faults.list_dynamics():
+        print(f"{name:18s} {faults.describe(name)}", file=file)
+
+
 def print_summary(result: SweepResult, file=None) -> None:
     """Human-readable per-cell table (one line per heuristic x rate)."""
     file = file if file is not None else sys.stdout
@@ -244,6 +267,8 @@ def main(argv=None) -> SweepResult:
     n_sites = spec.resolve_system().n_sites
     fed = (f" sites={n_sites} dispatcher={args.dispatcher}"
            if n_sites > 1 else "")
+    if args.dynamics != "none":
+        fed += f" dynamics={args.dynamics}"
     shard_note = ""
     if args.shard:
         import jax

@@ -1,86 +1,94 @@
-"""Elastic-rescale demo: train on mesh A, checkpoint, resume on mesh B.
+"""Elastic federation demo: sites leave and rejoin the fleet mid-trace.
 
-Runs with placeholder devices so the rescale story is visible on one host:
+Drives the engine's faults subsystem (:mod:`repro.core.faults`) as an
+*elasticity* mechanism: a :class:`~repro.core.faults.SiteOutage` window
+per departing site models planned downtime (maintenance, spot
+reclamation), the ``health_aware`` dispatcher re-homes admissions onto
+the remaining sites via the site-health mask, and the ``health``
+observer reports the capacity timeline the fleet actually delivered —
+the same machinery that absorbs an *unplanned* outage, pointed at
+planned rescale events.
 
-  PYTHONPATH=src python -m repro.launch.elastic --devices 8 \
-      --mesh-a 4,2 --mesh-b 2,4 --steps 20
+  PYTHONPATH=src python -m repro.launch.elastic \
+      --fleet paper_x4 --tasks 400 --rate 6 --down 1:0.25:0.5,2:0.5:0.75
 
-The checkpoint layout is mesh-agnostic (host-gathered leaves); restore uses
-``jax.make_array_from_callback`` against the new mesh's shardings — the same
-machinery a fleet uses when a pod is added or lost between incarnations.
+``--down site:start:end`` windows are horizon fractions; the default
+takes one site out for the middle half of the trace.
 """
+from __future__ import annotations
+
 import argparse
-import os
-import tempfile
+
+import jax
+import numpy as np
+
+from repro import scenarios
+from repro.core import engine, faults, workload
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--devices", type=int, default=8)
-    ap.add_argument("--mesh-a", default="4,2")
-    ap.add_argument("--mesh-b", default="2,4")
-    ap.add_argument("--steps", type=int, default=20)
-    args = ap.parse_args()
+def _parse_down(text: str):
+    """``site:start:end`` comma list -> SiteOutage windows."""
+    out = []
+    for part in text.split(","):
+        if not part.strip():
+            continue
+        s, a, b = part.split(":")
+        out.append((int(s), float(a), float(b)))
+    return tuple(out)
 
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={args.devices} "
-        + os.environ.get("XLA_FLAGS", ""))
 
-    import jax
-    import numpy as np
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.elastic",
+        description="Elastic federation: scheduled site departures, "
+                    "health-masked dispatch, capacity timeline.",
+    )
+    ap.add_argument("--fleet", default="paper_x4",
+                    help="registered fleet builder (default: paper_x4)")
+    ap.add_argument("--tasks", type=int, default=400)
+    ap.add_argument("--rate", type=float, default=6.0,
+                    help="arrival rate, tasks/sec (default: 6)")
+    ap.add_argument("--heuristic", default="FELARE")
+    ap.add_argument("--down", default="1:0.25:0.75",
+                    help="comma list of site:start:end departure windows "
+                         "(horizon fractions; default: 1:0.25:0.75)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
 
-    from repro.checkpoint import ckpt
-    from repro.configs import registry
-    from repro.datapipe.synthetic import SyntheticLM
-    from repro.distributed import sharding as sh
-    from repro.launch.mesh import make_mesh
-    from repro.models import transformer as tf
-    from repro.optim.adamw import AdamW
-    from repro.train.steps import make_train_step
+    spec = scenarios.get_fleet(args.fleet).build()
+    trace = workload.poisson_trace(
+        jax.random.PRNGKey(args.seed), n_tasks=args.tasks,
+        arrival_rate=args.rate, eet=spec.eet,
+    )
+    outage = faults.SiteOutage(outages=_parse_down(args.down))
+    m, aux = engine.simulate(
+        trace, spec, heuristic=args.heuristic, dispatcher="health_aware",
+        dynamics=outage, observers=("health",),
+    )
+    health = jax.tree.map(np.asarray, aux["health"])
 
-    cfg = registry.get_smoke_config("internlm2-1.8b")
-    opt = AdamW(lr=1e-3)
-    data = SyntheticLM(cfg, batch=8, seq=32, accum=2)
-
-    def run_phase(mesh_shape, start, stop, ckpt_dir):
-        mesh = make_mesh(tuple(int(x) for x in mesh_shape.split(",")),
-                         ("data", "model"))
-        pshapes = tf.param_shapes(cfg)
-        oshapes = jax.eval_shape(opt.init, pshapes)
-        pshard = sh.param_shardings(pshapes, mesh, cfg)
-        oshard = sh.opt_state_shardings(pshapes, mesh, cfg)
-        if ckpt.latest_step(ckpt_dir) is None:
-            params = tf.init(jax.random.PRNGKey(0), cfg)
-            opt_state = opt.init(params)
-        else:
-            state, at = ckpt.restore(
-                ckpt_dir, {"p": pshapes, "o": oshapes},
-                shardings={"p": pshard, "o": oshard})
-            params, opt_state = state["p"], state["o"]
-            print(f"  restored step {at} onto mesh {mesh.shape}")
-        step_fn = make_train_step(cfg, opt, mesh, donate=False)
-        b0 = data.batch_at(start)
-        with mesh:
-            jitted = step_fn.jit_for(jax.tree.map(
-                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), b0))
-            for s in range(start, stop):
-                params, opt_state, m = jitted(params, opt_state,
-                                              data.batch_at(s))
-        print(f"  mesh {mesh.shape}: steps {start}..{stop - 1}, "
-              f"final loss {float(m['loss']):.4f}")
-        ckpt.save(ckpt_dir, stop, {"p": params, "o": opt_state})
-        return params
-
-    with tempfile.TemporaryDirectory() as d:
-        half = args.steps // 2
-        print(f"phase 1 on mesh ({args.mesh_a}):")
-        run_phase(args.mesh_a, 0, half, d)
-        print(f"phase 2 on mesh ({args.mesh_b}) — elastic rescale:")
-        p_b = run_phase(args.mesh_b, half, args.steps, d)
-
-    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(p_b))
-    print(f"done: {args.steps} steps across two mesh shapes "
-          f"({n/1e6:.1f}M params); checkpoints were mesh-agnostic.")
+    done = float(m.completed_by_type.sum())
+    arrived = float(m.arrived_by_type.sum())
+    ontime = done / max(arrived, 1.0)
+    fleet_size = int(health["healthy"].max())
+    print(f"elastic fleet {args.fleet}: {args.tasks} tasks @ "
+          f"{args.rate:g}/s, departures {args.down}")
+    print(f"on-time {100 * ontime:.1f}%  orphan re-dispatches "
+          f"{int(health['orphans'][-1])}")
+    print("\ncapacity timeline (healthy machines per bucket):")
+    K = len(health["healthy"])
+    for b in range(0, K, max(1, K // 16)):
+        bar = "#" * int(health["healthy"][b])
+        live = int(health["site_alive"][b].sum())
+        print(f"  t={health['t'][b]:7.2f}  {bar:{fleet_size}s} "
+              f"{int(health['healthy'][b]):3d} machines, {live} sites live")
+    return {
+        "ontime": ontime,
+        "orphans": int(health["orphans"][-1]),
+        "healthy": health["healthy"],
+        "site_alive": health["site_alive"],
+        "min_sites_live": int(health["site_alive"].sum(axis=1).min()),
+    }
 
 
 if __name__ == "__main__":
