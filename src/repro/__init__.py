@@ -4,10 +4,18 @@ Also installs a small compatibility alias: ``jax.shard_map`` graduated out
 of ``jax.experimental`` only in newer JAX releases, while this codebase
 (and its tests) use the top-level spelling. On older JAX we alias the
 experimental implementation so both spellings work everywhere.
-"""
-import jax as _jax
 
-if not hasattr(_jax, "shard_map"):  # JAX < 0.4.x graduation
+JAX itself is optional at import time: the static analyzer's AST layer
+(``repro.analysis``, Layer 1) runs on the JAX-less CI lint runner, so a
+missing JAX must not break ``import repro`` — only the subpackages that
+actually trace (core, scenarios, experiments, ...) require it.
+"""
+try:
+    import jax as _jax
+except ImportError:  # JAX-less lint runner: Layer 1 analysis only
+    _jax = None
+
+if _jax is not None and not hasattr(_jax, "shard_map"):  # < 0.4.x graduation
     import functools as _functools
 
     from jax.experimental.shard_map import shard_map as _experimental_shard_map
@@ -22,7 +30,7 @@ if not hasattr(_jax, "shard_map"):  # JAX < 0.4.x graduation
 
     _jax.shard_map = _shard_map
 
-if not hasattr(_jax.lax, "pcast"):
+if _jax is not None and not hasattr(_jax.lax, "pcast"):
     # jax.lax.pcast marks values as varying over manual mesh axes for the
     # graduated shard_map's replication tracking. The experimental shard_map
     # with check_rep=False has no such tracking, so identity is correct.

@@ -1,0 +1,54 @@
+"""Static analysis of jit discipline: AST lint + jaxpr audit.
+
+The invariants PRs 2-7 pinned by hand — single-jit six-stage loop, CRN
+discipline, frozen-hashable registry objects, the float32-mirrored
+oracle — machine-checked as a registry of named checks behind one CLI::
+
+    python -m repro.analysis.check [--list-checks] [--json OUT]
+
+Layer 1 (``astlint``, rules JD001-JD005) is pure ``ast`` and imports no
+JAX — it runs on the CI lint runner. Layer 2 (``jaxpr_audit``, rules
+JX101-JX104) traces representative engine programs and audits the
+jaxprs; it imports JAX lazily inside ``run()`` so ``import
+repro.analysis`` itself stays JAX-free. See ``docs/analysis.md`` for the
+check catalog and the escape-hatch annotation syntax.
+"""
+from repro.analysis import astlint, jaxpr_audit  # noqa: F401  (register checks)
+from repro.analysis.config import AnalysisConfig, find_repo_root, load_config
+from repro.analysis.findings import Finding, format_findings, report_dict
+from repro.analysis.registry import CHECKS, get, is_registered, names, register
+
+__all__ = [
+    "AnalysisConfig",
+    "CHECKS",
+    "Finding",
+    "find_repo_root",
+    "format_findings",
+    "get",
+    "is_registered",
+    "load_config",
+    "names",
+    "register",
+    "report_dict",
+    "run_checks",
+]
+
+
+def run_checks(check_names=None, *, root=None, layers=(1, 2)):
+    """Run checks by name (default: all registered) against ``root``.
+
+    Returns ``(findings, errors)`` — ``errors`` are ``"name: exc"``
+    strings for checks that crashed (a crash must fail the gate, not
+    silently pass it).
+    """
+    cfg = load_config(root)
+    selected = [get(n) for n in (check_names or names())]
+    findings, errors = [], []
+    for check in selected:
+        if check.layer not in layers:
+            continue
+        try:
+            findings.extend(check.run(cfg))
+        except Exception as exc:  # noqa: BLE001 — gate must see the crash
+            errors.append(f"{check.name}: {type(exc).__name__}: {exc}")
+    return findings, errors

@@ -1,0 +1,701 @@
+"""Layer 1: AST lint — jit-discipline rules that need no JAX import.
+
+Five repo-specific rules over ``src/repro/core/`` and
+``src/repro/scenarios/`` (the code that ends up inside the single jit or
+feeds it static configuration):
+
+  JD001 registry-frozen   registered objects must be frozen dataclasses
+                          (or NamedTuples) with hashable field types —
+                          they are jit static-argument cache keys.
+  JD002 crn-discipline    no ``jax.random.PRNGKey``/``split`` outside the
+                          sanctioned CRN helpers; ad-hoc key material
+                          breaks common-random-number pairing.
+  JD003 host-effects      no host-side effects (``time.*``,
+                          ``np.random.*``, ``print``, ``datetime``,
+                          ``jax.debug``) inside jit-body functions.
+  JD004 traced-branch     no Python ``if``/``while`` on traced values in
+                          jit bodies (including ``bool()``/``int()``
+                          coercions) — they retrace or crash under jit.
+  JD005 oracle-f32        the pyengine oracle must keep every mirrored
+                          decision quantity in ``np.float32``; a stray
+                          float64 literal silently de-pairs the oracle
+                          from the engine at ULP scale.
+
+Everything here is pure ``ast`` — importable (and correct) on the CI
+lint runner, which has ruff and nothing else. Escape hatches are the
+``# repro: allow-<name>[reason]`` annotations parsed by
+:mod:`repro.analysis.config`; a marker with no ``[reason]`` is itself a
+finding.
+
+Heuristics, stated honestly: "jit body" is resolved by NAME — engine
+stage functions (``_stage_*`` and the ``make_simulator`` inner
+functions), the protocol methods the registries dispatch on
+(``__call__``, ``step``, ``select``, ``nominate``, ``key``, ``drop``,
+``dispatch``, ``on_event``, ``init``, ``finalize``, ``sample``) — plus
+any function opted in with a ``# repro: jit-body`` marker on its ``def``
+line. Taint for JD004 starts from the parameter names the engine
+actually passes traced values under (``st``, ``ctx``, ``key``, ...), so
+``self`` (a frozen config) and static closure parameters stay
+branchable. A helper that only ever runs traced but matches neither net
+is a coverage gap, not a false positive — mark it ``jit-body``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import registry as _registry
+from repro.analysis.config import AnalysisConfig, line_markers
+from repro.analysis.findings import Finding
+
+#: Repo-relative directories Layer 1 scans.
+SCOPE_DIRS = ("src/repro/core", "src/repro/scenarios")
+
+#: Method names the engine/registries invoke on traced values.
+JIT_BODY_METHODS = frozenset({
+    "__call__", "step", "select", "nominate", "key", "drop", "dispatch",
+    "on_event", "init", "finalize", "sample",
+})
+
+#: Free-function names that are jit bodies (``make_simulator`` inners).
+JIT_BODY_FUNCS = frozenset({"body", "cond", "simulate", "notify"})
+
+#: Parameter names under which the engine passes traced values.
+TRACED_PARAMS = frozenset({
+    "st", "state", "ctx", "est", "trace", "traces", "tr", "nom", "view",
+    "aux", "carry", "xs", "key", "keys", "halted_state", "suffered",
+    "action", "sysarr", "avail", "pending", "task", "tasks", "mask",
+    "values", "val", "qstate", "t_now",
+})
+
+#: Call roots banned inside jit bodies (dotted-prefix match).
+HOST_EFFECT_ROOTS = (
+    "time.", "datetime.", "numpy.random.", "random.", "jax.debug.",
+)
+HOST_EFFECT_NAMES = frozenset({"print", "input", "open", "breakpoint"})
+
+#: Field-annotation tokens that make a registry object unhashable.
+UNHASHABLE_TOKENS = frozenset({
+    "list", "List", "dict", "Dict", "set", "Set", "bytearray", "ndarray",
+    "Array",
+})
+
+
+# --------------------------------------------------------------------------
+# Parsing + shared per-file state
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParsedFile:
+    path: str
+    rel: str
+    source: str
+    tree: ast.AST
+    allows: Dict[int, Dict[str, str]]   # line -> {marker-name: reason}
+    jit_body_lines: Tuple[int, ...]     # lines carrying "# repro: jit-body"
+    aliases: Dict[str, str]             # import alias -> dotted module
+
+
+def _import_aliases(tree: ast.AST) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def parse_file(cfg: AnalysisConfig, path: str) -> ParsedFile:
+    with open(path) as fh:
+        source = fh.read()
+    tree = ast.parse(source, filename=path)
+    allows, jit_body = line_markers(source)
+    return ParsedFile(
+        path=path, rel=cfg.relpath(path).replace(os.sep, "/"),
+        source=source, tree=tree, allows=allows,
+        jit_body_lines=tuple(jit_body), aliases=_import_aliases(tree))
+
+
+def parse_scope(cfg: AnalysisConfig,
+                dirs: Sequence[str] = SCOPE_DIRS) -> List[ParsedFile]:
+    return [parse_file(cfg, p) for p in cfg.python_files(*dirs)]
+
+
+def _suppressed(pf: ParsedFile, lineno: int, marker: str,
+                check: str, rule: str,
+                out: List[Finding]) -> bool:
+    """True if an ``allow-<marker>`` annotation covers ``lineno`` (same
+    line or the line above). An empty ``[reason]`` still suppresses the
+    original finding but emits an unexplained-suppression finding."""
+    for ln in (lineno, lineno - 1):
+        got = pf.allows.get(ln, {})
+        if marker in got:
+            if not got[marker]:
+                out.append(Finding(
+                    path=pf.rel, line=ln, rule=rule, check=check,
+                    message=(f"allow-{marker} without a [reason] — "
+                             "explain the suppression")))
+            return True
+    return False
+
+
+def dotted_name(node: ast.AST,
+                aliases: Optional[Dict[str, str]] = None) -> Optional[str]:
+    """``jax.random.split`` for an Attribute/Name chain, alias-resolved."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = node.id
+    if aliases and root in aliases:
+        root = aliases[root]
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def _jit_body_functions(pf: ParsedFile) -> List[ast.AST]:
+    """Every function node the jit-body rules apply to (see module doc)."""
+    marked = set(pf.jit_body_lines)
+    out = []
+    for node in ast.walk(pf.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        name = node.name
+        if (name.startswith("_stage_") or name in JIT_BODY_FUNCS
+                or name in JIT_BODY_METHODS
+                or node.lineno in marked or (node.lineno - 1) in marked):
+            out.append(node)
+    return out
+
+
+def _body_without_nested(fn: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function body without descending into nested defs/lambdas
+    (nested jit-body defs are visited in their own right)."""
+    stack = list(getattr(fn, "body", []))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+# --------------------------------------------------------------------------
+# JD001 — registry objects must be frozen + hashable
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _ClassInfo:
+    rel: str
+    lineno: int
+    is_dataclass: bool
+    frozen: bool
+    is_protocol: bool
+    is_namedtuple: bool
+    fields: Tuple[Tuple[str, str, int], ...]  # (name, annotation, lineno)
+
+
+def _class_info(node: ast.ClassDef, rel: str) -> _ClassInfo:
+    is_dc = frozen = False
+    for dec in node.decorator_list:
+        call = dec if isinstance(dec, ast.Call) else None
+        target = call.func if call else dec
+        name = dotted_name(target) or ""
+        if name.split(".")[-1] == "dataclass":
+            is_dc = True
+            if call:
+                for kw in call.keywords:
+                    if (kw.arg == "frozen"
+                            and isinstance(kw.value, ast.Constant)):
+                        frozen = bool(kw.value.value)
+    bases = {dotted_name(b) or "" for b in node.bases}
+    base_tails = {b.split(".")[-1] for b in bases}
+    fields = tuple(
+        (stmt.target.id, ast.unparse(stmt.annotation), stmt.lineno)
+        for stmt in node.body
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                          ast.Name))
+    return _ClassInfo(
+        rel=rel, lineno=node.lineno, is_dataclass=is_dc, frozen=frozen,
+        is_protocol="Protocol" in base_tails,
+        is_namedtuple="NamedTuple" in base_tails, fields=fields)
+
+
+def _registered_class_names(pf: ParsedFile) -> Set[str]:
+    """Class names reachable from ``register(...)`` calls in this file.
+
+    Resolves the three idioms the repo uses: direct
+    ``register("x", Ctor(...))``; module-level ``X = Ctor(...)`` then
+    ``register("x", X)``; and the loop idiom ``for _n, _x in [("x",
+    Ctor(...)), ...]: register(_n, _x)``. Constructor calls NESTED in a
+    registered expression (``TwoPhasePolicy(MinEnergyFeasible(), ...)``)
+    are collected too — component classes are fields of the cache key and
+    must be just as hashable.
+    """
+    assigns: Dict[str, ast.expr] = {}
+    for stmt in pf.tree.body if isinstance(pf.tree, ast.Module) else ():
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            assigns[stmt.targets[0].id] = stmt.value
+
+    def classes_in(expr: ast.AST, depth: int = 0) -> Set[str]:
+        found: Set[str] = set()
+        if depth > 4:
+            return found
+        if isinstance(expr, ast.Name) and expr.id in assigns:
+            return classes_in(assigns[expr.id], depth + 1)
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name and name[0].isupper():
+                    found.add(name.split(".")[-1])
+        return found
+
+    loop_items: Dict[str, List[ast.expr]] = {}
+    for node in ast.walk(pf.tree):
+        if (isinstance(node, ast.For) and isinstance(node.target, ast.Tuple)
+                and len(node.target.elts) == 2
+                and isinstance(node.target.elts[1], ast.Name)
+                and isinstance(node.iter, (ast.List, ast.Tuple))):
+            item_var = node.target.elts[1].id
+            loop_items[item_var] = [
+                elt.elts[1] for elt in node.iter.elts
+                if isinstance(elt, ast.Tuple) and len(elt.elts) == 2]
+
+    out: Set[str] = set()
+    for node in ast.walk(pf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = (dotted_name(node.func) or "").split(".")[-1]
+        if fname not in ("register", "register_fleet") or len(node.args) < 2:
+            continue
+        item = node.args[1]
+        if isinstance(item, ast.Name) and item.id in loop_items:
+            for expr in loop_items[item.id]:
+                out |= classes_in(expr)
+        else:
+            out |= classes_in(item)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RegistryFrozenCheck:
+    """JD001: registered objects are frozen dataclasses, hashable fields."""
+
+    name: str = "registry-frozen"
+    rule: str = "JD001"
+    layer: int = 1
+    dirs: Tuple[str, ...] = SCOPE_DIRS
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        files = parse_scope(cfg, self.dirs)
+        index: Dict[str, _ClassInfo] = {}
+        for pf in files:
+            for node in ast.walk(pf.tree):
+                if isinstance(node, ast.ClassDef):
+                    index.setdefault(node.name, _class_info(node, pf.rel))
+        registered: Set[str] = set()
+        for pf in files:
+            registered |= _registered_class_names(pf)
+
+        out: List[Finding] = []
+        by_rel = {pf.rel: pf for pf in files}
+        for cname in sorted(registered):
+            info = index.get(cname)
+            if info is None or info.is_protocol:
+                continue  # helper function / out-of-scope class
+            pf = by_rel.get(info.rel)
+            if info.is_namedtuple:
+                continue  # immutable + hashable by construction
+            if not (info.is_dataclass and info.frozen):
+                if pf and _suppressed(pf, info.lineno, "registry",
+                                      self.name, self.rule, out):
+                    continue
+                out.append(Finding(
+                    path=info.rel, line=info.lineno, rule=self.rule,
+                    check=self.name,
+                    message=(f"registered class {cname} must be a "
+                             "@dataclass(frozen=True) — registry objects "
+                             "are jit static-arg cache keys")))
+                continue
+            for fname, ann, lineno in info.fields:
+                tokens = set(
+                    t for t in
+                    ann.replace("[", " ").replace("]", " ")
+                       .replace(".", " ").replace(",", " ").split())
+                bad = tokens & UNHASHABLE_TOKENS
+                if bad:
+                    if pf and _suppressed(pf, lineno, "registry",
+                                          self.name, self.rule, out):
+                        continue
+                    out.append(Finding(
+                        path=info.rel, line=lineno, rule=self.rule,
+                        check=self.name,
+                        message=(f"{cname}.{fname}: unhashable field type "
+                                 f"{ann!r} ({sorted(bad)[0]}) breaks the "
+                                 "registry object's use as a jit cache "
+                                 "key")))
+        return out
+
+
+# --------------------------------------------------------------------------
+# JD002 — CRN discipline: PRNGKey/split only in sanctioned helpers
+# --------------------------------------------------------------------------
+
+#: Modules allowed to mint/split key material (repo-relative prefixes).
+CRN_SANCTIONED = (
+    "src/repro/datapipe/synthetic.py",
+    "src/repro/core/faults/base.py",     # hash_uniform counter PRNG
+)
+
+_PRNG_CALLS = frozenset({"jax.random.PRNGKey", "jax.random.split",
+                         "jax.random.key", "jax.random.fold_in"})
+
+
+@dataclasses.dataclass(frozen=True)
+class CrnDisciplineCheck:
+    """JD002: PRNGKey/split only in sanctioned CRN helpers (or marked)."""
+
+    name: str = "crn-discipline"
+    rule: str = "JD002"
+    layer: int = 1
+    dirs: Tuple[str, ...] = SCOPE_DIRS
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        out: List[Finding] = []
+        for pf in parse_scope(cfg, self.dirs):
+            if any(pf.rel.startswith(p) for p in CRN_SANCTIONED):
+                continue
+            for node in ast.walk(pf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func, pf.aliases)
+                if name not in _PRNG_CALLS:
+                    continue
+                if _suppressed(pf, node.lineno, "prng", self.name,
+                               self.rule, out):
+                    continue
+                out.append(Finding(
+                    path=pf.rel, line=node.lineno, rule=self.rule,
+                    check=self.name,
+                    message=(f"{name} outside sanctioned CRN helpers — "
+                             "ad-hoc key material breaks common-random-"
+                             "number pairing across policies; derive keys "
+                             "in datapipe.synthetic or use "
+                             "faults.hash_uniform")))
+        return out
+
+
+# --------------------------------------------------------------------------
+# JD003 — no host effects in jit bodies
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HostEffectsCheck:
+    """JD003: no time/np.random/print/datetime calls in jit bodies."""
+
+    name: str = "host-effects"
+    rule: str = "JD003"
+    layer: int = 1
+    dirs: Tuple[str, ...] = SCOPE_DIRS
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        out: List[Finding] = []
+        for pf in parse_scope(cfg, self.dirs):
+            if pf.rel.endswith("core/pyengine.py"):
+                continue  # the oracle is host-side by design
+            for fn in _jit_body_functions(pf):
+                for node in _body_without_nested(fn):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    name = dotted_name(node.func, pf.aliases) or ""
+                    banned = (name in HOST_EFFECT_NAMES or any(
+                        name.startswith(root) for root in
+                        HOST_EFFECT_ROOTS))
+                    if not banned:
+                        continue
+                    if _suppressed(pf, node.lineno, "host", self.name,
+                                   self.rule, out):
+                        continue
+                    out.append(Finding(
+                        path=pf.rel, line=node.lineno, rule=self.rule,
+                        check=self.name,
+                        message=(f"host-side effect {name}() inside jit "
+                                 f"body {fn.name}() — runs at trace time "
+                                 "only (or crashes), never per step")))
+        return out
+
+
+# --------------------------------------------------------------------------
+# JD004 — no Python branches on traced values in jit bodies
+# --------------------------------------------------------------------------
+
+_LAUNDER_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "aval"})
+_TAINT_CALL_PREFIXES = ("jnp.", "jax.", "lax.", "jax.numpy.", "jax.lax.")
+
+
+class _TaintVisitor:
+    """Forward taint pass over one function body.
+
+    Names bound from traced roots (or from jnp/lax call results) are
+    tainted; ``.shape``-style attribute access, ``len()``, and
+    ``is``/``is not`` comparisons launder. Run statements in source
+    order; good enough for the straight-line jnp code jit bodies are
+    (that being the point of the rule).
+    """
+
+    def __init__(self, fn: ast.AST, aliases: Dict[str, str]):
+        self.aliases = aliases
+        self.tainted: Set[str] = set()
+        args = fn.args
+        for a in (list(args.posonlyargs) + list(args.args)
+                  + list(args.kwonlyargs)
+                  + ([args.vararg] if args.vararg else [])
+                  + ([args.kwarg] if args.kwarg else [])):
+            if a.arg in TRACED_PARAMS:
+                self.tainted.add(a.arg)
+
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _LAUNDER_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_tainted(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            ops = node.ops
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in ops):
+                return False  # `x is None` is a static structure test
+            return (self.is_tainted(node.left)
+                    or any(self.is_tainted(c) for c in node.comparators))
+        if isinstance(node, ast.Call):
+            fname = dotted_name(node.func, self.aliases) or ""
+            if fname == "len" or fname.endswith(".shape"):
+                return False
+            if any(fname.startswith(p) for p in _TAINT_CALL_PREFIXES):
+                return True
+            if isinstance(node.func, ast.Attribute):  # x.astype(...), x.sum()
+                return self.is_tainted(node.func.value)
+            return any(self.is_tainted(a) for a in node.args)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        if isinstance(node, ast.Starred):
+            return self.is_tainted(node.value)
+        return False
+
+    def bind(self, target: ast.AST, tainted: bool) -> None:
+        if isinstance(target, ast.Name):
+            (self.tainted.add if tainted
+             else self.tainted.discard)(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self.bind(e, tainted)
+        elif isinstance(target, ast.Starred):
+            self.bind(target.value, tainted)
+
+
+@dataclasses.dataclass(frozen=True)
+class TracedBranchCheck:
+    """JD004: no Python if/while/bool()/int() on traced values in jit."""
+
+    name: str = "traced-branch"
+    rule: str = "JD004"
+    layer: int = 1
+    dirs: Tuple[str, ...] = SCOPE_DIRS
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        out: List[Finding] = []
+        for pf in parse_scope(cfg, self.dirs):
+            if pf.rel.endswith("core/pyengine.py"):
+                continue  # host-side oracle: Python control flow is its job
+            for fn in _jit_body_functions(pf):
+                self._scan_function(pf, fn, out)
+        return out
+
+    def _scan_function(self, pf: ParsedFile, fn: ast.AST,
+                       out: List[Finding]) -> None:
+        tv = _TaintVisitor(fn, pf.aliases)
+
+        def emit(node: ast.AST, what: str) -> None:
+            if _suppressed(pf, node.lineno, "branch", self.name,
+                           self.rule, out):
+                return
+            out.append(Finding(
+                path=pf.rel, line=node.lineno, rule=self.rule,
+                check=self.name,
+                message=(f"{what} on a traced value in jit body "
+                         f"{fn.name}() — use lax.cond/jnp.where; Python "
+                         "control flow is resolved once at trace time")))
+
+        def visit_stmts(stmts: Sequence[ast.stmt]) -> None:
+            for stmt in stmts:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    continue  # nested defs scanned in their own right
+                if isinstance(stmt, ast.Assign):
+                    t = tv.is_tainted(stmt.value)
+                    for tgt in stmt.targets:
+                        tv.bind(tgt, t)
+                elif isinstance(stmt, ast.AugAssign):
+                    if tv.is_tainted(stmt.value):
+                        tv.bind(stmt.target, True)
+                elif isinstance(stmt, ast.AnnAssign) and stmt.value:
+                    tv.bind(stmt.target, tv.is_tainted(stmt.value))
+                elif isinstance(stmt, ast.If):
+                    if tv.is_tainted(stmt.test):
+                        emit(stmt, "Python `if`")
+                    visit_stmts(stmt.body)
+                    visit_stmts(stmt.orelse)
+                    continue
+                elif isinstance(stmt, ast.While):
+                    if tv.is_tainted(stmt.test):
+                        emit(stmt, "Python `while`")
+                    visit_stmts(stmt.body)
+                    visit_stmts(stmt.orelse)
+                    continue
+                elif isinstance(stmt, ast.Assert):
+                    if tv.is_tainted(stmt.test):
+                        emit(stmt, "`assert`")
+                for node in ast.walk(stmt):
+                    if isinstance(node, ast.IfExp) and tv.is_tainted(
+                            node.test):
+                        emit(node, "conditional expression")
+                    elif (isinstance(node, ast.Call)
+                          and isinstance(node.func, ast.Name)
+                          and node.func.id in ("bool", "int")
+                          and node.args
+                          and tv.is_tainted(node.args[0])):
+                        emit(node, f"`{node.func.id}()` coercion")
+                if isinstance(stmt, (ast.For, ast.With, ast.Try)):
+                    for body in (getattr(stmt, "body", []),
+                                 getattr(stmt, "orelse", []),
+                                 getattr(stmt, "finalbody", [])):
+                        visit_stmts(body)
+
+        visit_stmts(getattr(fn, "body", []))
+
+
+# --------------------------------------------------------------------------
+# JD005 — pyengine oracle arithmetic stays np.float32
+# --------------------------------------------------------------------------
+
+#: Helper-name patterns whose bodies mirror engine decision arithmetic.
+_ORACLE_HELPER_PREFIXES = ("_nominate", "_key_", "avail", "phase2")
+_ORACLE_HELPER_NAMES = frozenset({"qsum", "suffered_mask",
+                                  "_refresh_tables"})
+_F32_WRAPPERS = frozenset({"F", "np.float32", "numpy.float32"})
+
+
+@dataclasses.dataclass(frozen=True)
+class OracleF32Check:
+    """JD005: pyengine decision arithmetic stays in np.float32."""
+
+    name: str = "oracle-f32"
+    rule: str = "JD005"
+    layer: int = 1
+    oracle_rel: str = "src/repro/core/pyengine.py"
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        path = os.path.join(cfg.root, self.oracle_rel)
+        if not os.path.exists(path):
+            return [Finding(
+                path=self.oracle_rel, line=0, rule=self.rule,
+                check=self.name, message="pyengine oracle not found")]
+        pf = parse_file(cfg, path)
+        out: List[Finding] = []
+        for fn in ast.walk(pf.tree):
+            is_lambda = isinstance(fn, ast.Lambda)
+            if not (is_lambda or isinstance(fn, ast.FunctionDef)):
+                continue
+            if not is_lambda and not self._is_decision_helper(fn.name):
+                continue
+            body = [fn.body] if is_lambda else fn.body
+            label = "<lambda>" if is_lambda else fn.name + "()"
+            for stmt in body:
+                self._scan(pf, stmt, label, out)
+        return out
+
+    @staticmethod
+    def _is_decision_helper(name: str) -> bool:
+        return (name in _ORACLE_HELPER_NAMES
+                or any(name.startswith(p)
+                       for p in _ORACLE_HELPER_PREFIXES))
+
+    def _scan(self, pf: ParsedFile, root: ast.AST, label: str,
+              out: List[Finding]) -> None:
+        parents: Dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(root):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+
+        def emit(node: ast.AST, msg: str) -> None:
+            if _suppressed(pf, node.lineno, "oracle-f32", self.name,
+                           self.rule, out):
+                return
+            out.append(Finding(path=pf.rel, line=node.lineno,
+                               rule=self.rule, check=self.name,
+                               message=f"{msg} in oracle helper {label}"))
+
+        for node in ast.walk(root):
+            name = dotted_name(node, pf.aliases) if isinstance(
+                node, (ast.Attribute, ast.Name)) else None
+            if name in ("np.float64", "numpy.float64", "np.double",
+                        "numpy.double"):
+                emit(node, "np.float64 reference — mirrored decision "
+                           "arithmetic must stay np.float32")
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                tgt = dotted_name(node.args[0], pf.aliases) or (
+                    node.args[0].id if isinstance(node.args[0], ast.Name)
+                    else "")
+                if tgt in ("float", "np.float64", "numpy.float64"):
+                    emit(node, f"astype({tgt}) upcast")
+            if (isinstance(node, ast.Constant)
+                    and isinstance(node.value, float)):
+                parent = parents.get(node)
+                if isinstance(parent, ast.BinOp):
+                    emit(node, f"bare float literal {node.value!r} in "
+                               "arithmetic — wrap in F(...) so the "
+                               "operation stays float32")
+                elif (isinstance(parent, ast.Call)
+                      and (dotted_name(parent.func, pf.aliases) or "")
+                      not in _F32_WRAPPERS
+                      and not isinstance(parents.get(parent),
+                                         (ast.Call,))):
+                    pass  # float args to non-arithmetic calls are fine
+        return None
+
+
+# --------------------------------------------------------------------------
+# Registration — the registry idiom, applied to the analyzer itself.
+# --------------------------------------------------------------------------
+
+for _name, _check in [
+    ("registry-frozen", RegistryFrozenCheck()),
+    ("crn-discipline", CrnDisciplineCheck()),
+    ("host-effects", HostEffectsCheck()),
+    ("traced-branch", TracedBranchCheck()),
+    ("oracle-f32", OracleF32Check()),
+]:
+    _registry.register(_name, _check)
+del _name, _check

@@ -1,0 +1,195 @@
+"""Analyzer configuration: scan roots, shared excludes, escape hatches.
+
+The exclude list is SHARED with ruff via ``pyproject.toml`` — the frozen
+DO-NOT-EDIT snapshots (``tests/_legacy_*.py``) are listed once under
+``[tool.repro.analysis] exclude`` and mirrored into ruff's
+``extend-exclude``, replacing per-file ``# noqa`` scatter. Python 3.10
+has no ``tomllib``, so a minimal line-oriented fallback parser handles
+exactly the shapes this repo's pyproject uses (string lists under a
+known key).
+
+Escape hatches are source annotations, one per line::
+
+    # repro: allow-<name>[reason]      suppress rule <name> on this line
+    # repro: jit-body                  opt a function INTO the jit-body rules
+
+``<name>`` is the check name (``host``, ``prng``, ``branch``, ...); the
+bracketed reason is mandatory — an unexplained suppression is itself a
+finding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_ALLOW_RE = re.compile(
+    r"#\s*repro:\s*allow-(?P<name>[a-z0-9-]+)\s*"
+    r"(?:\[(?P<reason>[^\]]*)\])?")
+_JIT_BODY_RE = re.compile(r"#\s*repro:\s*jit-body\b")
+
+
+def find_repo_root(start: Optional[str] = None) -> str:
+    """Walk up from ``start`` (default: this file) to the pyproject dir."""
+    d = os.path.abspath(start or os.path.dirname(__file__))
+    while True:
+        if os.path.exists(os.path.join(d, "pyproject.toml")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:  # filesystem root: fall back to cwd
+            return os.getcwd()
+        d = parent
+
+
+def _parse_toml(text: str) -> dict:
+    """pyproject → nested dict; stdlib tomllib when present, else a
+    minimal parser covering tables + string/int/bool/string-list values
+    (all this repo's pyproject contains)."""
+    try:
+        import tomllib  # Python 3.11+
+        return tomllib.loads(text)
+    except ModuleNotFoundError:
+        pass
+    root: dict = {}
+    table = root
+    buf: Optional[Tuple[str, str]] = None  # (key, partial value) for
+    for raw in text.splitlines():          # multi-line lists
+        line = raw.strip()
+        if buf is not None:
+            buf = (buf[0], buf[1] + " " + line)
+            if "]" in line:
+                key, val = buf
+                table[key] = _parse_value(val)
+                buf = None
+            continue
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            table = root
+            for part in line[1:-1].strip().strip('"').split("."):
+                table = table.setdefault(part, {})
+            continue
+        if "=" in line:
+            key, _, val = line.partition("=")
+            key, val = key.strip().strip('"'), val.strip()
+            if val.startswith("[") and "]" not in val:
+                buf = (key, val)
+            else:
+                table[key] = _parse_value(val)
+    return root
+
+
+def _parse_value(val: str):
+    val = val.strip()
+    if val.startswith("["):
+        inner = val[val.index("[") + 1: val.rindex("]")]
+        return [_parse_value(v) for v in _split_items(inner)]
+    if val.startswith(("'", '"')):
+        return val[1:-1]
+    if val in ("true", "false"):
+        return val == "true"
+    try:
+        return int(val)
+    except ValueError:
+        return val
+
+
+def _split_items(inner: str) -> List[str]:
+    items, depth, cur = [], 0, ""
+    in_str: Optional[str] = None
+    for ch in inner:
+        if in_str:
+            cur += ch
+            if ch == in_str:
+                in_str = None
+            continue
+        if ch in "'\"":
+            in_str = ch
+            cur += ch
+        elif ch == "[":
+            depth += 1
+            cur += ch
+        elif ch == "]":
+            depth -= 1
+            cur += ch
+        elif ch == "," and depth == 0:
+            if cur.strip():
+                items.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        items.append(cur.strip())
+    return items
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalysisConfig:
+    """Resolved config a check receives: where to look, what to skip."""
+
+    root: str                       # repo root (dir holding pyproject)
+    exclude: Tuple[str, ...] = ()   # glob patterns, repo-relative
+
+    def is_excluded(self, path: str) -> bool:
+        rel = self.relpath(path).replace(os.sep, "/")
+        return any(
+            fnmatch.fnmatch(rel, pat) or fnmatch.fnmatch(
+                os.path.basename(rel), pat)
+            for pat in self.exclude)
+
+    def relpath(self, path: str) -> str:
+        ap = os.path.abspath(path)
+        try:
+            return os.path.relpath(ap, self.root)
+        except ValueError:
+            return ap
+
+    def python_files(self, *rel_dirs: str) -> List[str]:
+        """Non-excluded ``.py`` files under repo-relative directories."""
+        out: List[str] = []
+        for rel in rel_dirs:
+            base = os.path.join(self.root, rel)
+            for dirpath, dirnames, filenames in os.walk(base):
+                dirnames.sort()
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        p = os.path.join(dirpath, fn)
+                        if not self.is_excluded(p):
+                            out.append(p)
+        return out
+
+
+def load_config(root: Optional[str] = None) -> AnalysisConfig:
+    root = root or find_repo_root()
+    pyproject = os.path.join(root, "pyproject.toml")
+    exclude: Sequence[str] = ()
+    if os.path.exists(pyproject):
+        with open(pyproject) as fh:
+            data = _parse_toml(fh.read())
+        tool = data.get("tool", {})
+        exclude = tuple(
+            tool.get("repro", {}).get("analysis", {}).get("exclude", ()))
+    return AnalysisConfig(root=os.path.abspath(root), exclude=tuple(exclude))
+
+
+def line_markers(source: str) -> Tuple[Dict[int, Dict[str, str]], List[int]]:
+    """Scan source for escape-hatch annotations.
+
+    Returns ``(allows, jit_body_lines)`` where ``allows`` maps 1-based
+    line number → {rule-name: reason}; an ``allow`` with an empty or
+    missing ``[reason]`` maps to the empty string (flagged separately as
+    an unexplained suppression).
+    """
+    allows: Dict[int, Dict[str, str]] = {}
+    jit_body: List[int] = []
+    for i, line in enumerate(source.splitlines(), start=1):
+        if "repro:" not in line:
+            continue
+        for m in _ALLOW_RE.finditer(line):
+            allows.setdefault(i, {})[m.group("name")] = (
+                m.group("reason") or "").strip()
+        if _JIT_BODY_RE.search(line):
+            jit_body.append(i)
+    return allows, jit_body

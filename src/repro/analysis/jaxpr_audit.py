@@ -1,0 +1,268 @@
+"""Layer 2: jaxpr audit — discipline rules checked on the traced program.
+
+Where Layer 1 reads source, Layer 2 reads what jit actually saw: it
+traces representative engine programs (:mod:`repro.analysis.programs`)
+and walks the jaxprs with the shared visitor
+(:mod:`repro.roofline.jaxpr_walk`). Four rules:
+
+  JX101 jaxpr-flatness   the site count F is data, not program — the
+                         recursive equation count and primitive multiset
+                         of the simulator are identical across fleets
+                         (the reusable form of
+                         ``tests/test_compile_flatness.py``).
+  JX102 jaxpr-dtype      no float64/complex128 anywhere in the traced
+                         program, and no weak-typed floating output —
+                         weak types re-promote under ``jax_enable_x64``
+                         and silently de-pair CRN comparisons.
+  JX103 jaxpr-effects    no callback/debug effect primitives inside the
+                         loop (``pure_callback``, ``io_callback``,
+                         ``debug_callback``, ``debug_print``) — each one
+                         is a host round-trip per step.
+  JX104 retrace-audit    replay the runner trace log: every (policy x
+                         scenario x dispatcher x dynamics) tuple traces
+                         exactly once across a repeated sweep.
+
+JAX is imported lazily inside ``run()`` — importing this module (so the
+checks register for ``--list-checks``) works on the JAX-less lint
+runner; *running* a Layer 2 check without JAX reports a single
+structured finding instead of crashing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.analysis import registry as _registry
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.findings import Finding
+from repro.analysis.programs import DEFAULT_PROGRAMS, simulator_program
+
+#: Effect primitives that smuggle host work into the loop.
+EFFECT_PRIMITIVES = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "debug_print",
+    "callback", "outside_call", "host_callback_call",
+})
+
+
+def _no_jax(check, rule) -> List[Finding]:
+    return [Finding(
+        path=f"jaxpr:{check}", line=0, rule=rule, check=check,
+        message="JAX unavailable — Layer 2 requires the full runtime "
+                "(run on the tests runner, not the lint runner)")]
+
+
+def _path_str(name: str, path: Tuple[int, ...]) -> str:
+    return f"jaxpr:{name}:" + ".".join(str(i) for i in path)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatnessCheck:
+    """JX101: primitive-multiset equality of the simulator across F."""
+
+    name: str = "jaxpr-flatness"
+    rule: str = "JX101"
+    layer: int = 2
+    fleets: Tuple[str, ...] = ("paper_x2", "paper_x32")
+    heuristic: str = "FELARE"
+    dispatcher: str = "fair_spill"
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        try:
+            import jax
+        except ImportError:
+            return _no_jax(self.name, self.rule)
+        from repro.roofline.jaxpr_walk import count_eqns, primitive_counts
+
+        out: List[Finding] = []
+        baseline = None
+        for fleet in self.fleets:
+            fn, args = simulator_program(
+                fleet=fleet, heuristic=self.heuristic,
+                dispatcher=self.dispatcher)
+            jx = jax.make_jaxpr(fn)(*args).jaxpr
+            stats = (fleet, count_eqns(jx), primitive_counts(jx))
+            if baseline is None:
+                baseline = stats
+                continue
+            f0, n0, p0 = baseline
+            f1, n1, p1 = stats
+            if n0 != n1:
+                out.append(Finding(
+                    path=f"jaxpr:{f1}/{self.heuristic}", line=0,
+                    rule=self.rule, check=self.name,
+                    message=(f"site count leaked into the program: "
+                             f"{n1} equations at {f1} vs {n0} at {f0}")))
+            for prim in sorted(set(p0) | set(p1)):
+                if p0.get(prim, 0) != p1.get(prim, 0):
+                    out.append(Finding(
+                        path=f"jaxpr:{f1}/{self.heuristic}", line=0,
+                        rule=self.rule, check=self.name,
+                        message=(f"primitive multiset differs at {prim}: "
+                                 f"{p1.get(prim, 0)} at {f1} vs "
+                                 f"{p0.get(prim, 0)} at {f0}")))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DtypeAuditCheck:
+    """JX102: no float64/complex128 avals; no weak-typed float outputs."""
+
+    name: str = "jaxpr-dtype"
+    rule: str = "JX102"
+    layer: int = 2
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        try:
+            import jax
+        except ImportError:
+            return _no_jax(self.name, self.rule)
+        from jax.tree_util import tree_flatten_with_path
+
+        from repro.analysis.programs import trace_program
+        from repro.roofline.jaxpr_walk import iter_eqns
+
+        out: List[Finding] = []
+        for pname, params in DEFAULT_PROGRAMS:
+            name, closed, out_shapes = trace_program(pname, params)
+            seen = set()
+            for eqn, path in iter_eqns(closed.jaxpr):
+                for v in eqn.outvars:
+                    dt = getattr(getattr(v, "aval", None), "dtype", None)
+                    if dt is None:
+                        continue
+                    if str(dt) in ("float64", "complex128", "int64"):
+                        key = (eqn.primitive.name, str(dt))
+                        if key in seen:
+                            continue  # one finding per (prim, dtype)
+                        seen.add(key)
+                        out.append(Finding(
+                            path=_path_str(name, path), line=0,
+                            rule=self.rule, check=self.name,
+                            message=(f"{dt} value produced by "
+                                     f"{eqn.primitive.name} — the engine "
+                                     "contract is float32/int32 "
+                                     "throughout")))
+            leaves, _ = tree_flatten_with_path(out_shapes)
+            for keypath, leaf in leaves:
+                dt = getattr(leaf, "dtype", None)
+                if dt is None:
+                    continue
+                kp = "".join(str(k) for k in keypath)
+                if str(dt) in ("float64", "complex128"):
+                    out.append(Finding(
+                        path=f"jaxpr:{name}:out{kp}", line=0,
+                        rule=self.rule, check=self.name,
+                        message=f"output {kp} has dtype {dt}"))
+                elif (getattr(leaf, "weak_type", False)
+                      and jax.numpy.issubdtype(dt, jax.numpy.floating)):
+                    out.append(Finding(
+                        path=f"jaxpr:{name}:out{kp}", line=0,
+                        rule=self.rule, check=self.name,
+                        message=(f"output {kp} is weak-typed {dt} — a "
+                                 "python-scalar-derived value whose dtype "
+                                 "flips under jax_enable_x64; anchor it "
+                                 "with jnp.float32(...)")))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class EffectsAuditCheck:
+    """JX103: no callback/debug effect primitives in the traced loop."""
+
+    name: str = "jaxpr-effects"
+    rule: str = "JX103"
+    layer: int = 2
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            return _no_jax(self.name, self.rule)
+        from repro.analysis.programs import trace_program
+        from repro.roofline.jaxpr_walk import iter_eqns
+
+        out: List[Finding] = []
+        for pname, params in DEFAULT_PROGRAMS:
+            name, closed, _ = trace_program(pname, params)
+            for eqn, path in iter_eqns(closed.jaxpr):
+                if eqn.primitive.name in EFFECT_PRIMITIVES:
+                    out.append(Finding(
+                        path=_path_str(name, path), line=0,
+                        rule=self.rule, check=self.name,
+                        message=(f"effect primitive {eqn.primitive.name} "
+                                 "inside the traced loop — a host round-"
+                                 "trip per step; use an observer or "
+                                 "post-hoc analysis instead")))
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RetraceAuditCheck:
+    """JX104: replay the runner trace log — one trace per config tuple.
+
+    Replays a multi-config sweep sequence (two dispatchers x two
+    policies, all distinct tuples) and fails on any (policy x scenario x
+    dispatcher x dynamics) tuple appearing in the trace log more than
+    once. A duplicate means something traced twice for one config — a
+    policy object rebuilt un-hashably mid-sweep, a vmap falling out of
+    the single jit, a dispatcher leaking per-call state — i.e. the
+    single-jit contract ``tests/test_compile_flatness.py`` pins, checked
+    as an analysis.
+    """
+
+    name: str = "retrace-audit"
+    rule: str = "JX104"
+    layer: int = 2
+    heuristics: Tuple[str, ...] = ("ELARE", "FELARE")
+    fleet: str = "paper_x2"
+    dispatchers: Tuple[str, ...] = ("round_robin", "fair_spill")
+    n_tasks: int = 24
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            return _no_jax(self.name, self.rule)
+        from repro import experiments
+        from repro.experiments import runner
+
+        runner._TRACE_LOG.clear()
+        for dispatcher in self.dispatchers:
+            experiments.run_sweep(experiments.SweepSpec(
+                system=self.fleet, rates=(3.0,), reps=2,
+                n_tasks=self.n_tasks, heuristics=self.heuristics, seed=1,
+                dispatcher=dispatcher))
+        log = list(runner._TRACE_LOG)
+        runner._TRACE_LOG.clear()
+
+        out: List[Finding] = []
+        counts: dict = {}
+        for tup in log:
+            counts[tup] = counts.get(tup, 0) + 1
+        for tup, n in sorted(counts.items()):
+            if n > 1:
+                out.append(Finding(
+                    path=f"jaxpr:retrace:{'x'.join(tup)}", line=0,
+                    rule=self.rule, check=self.name,
+                    message=(f"config tuple {tup} traced {n} times in one "
+                             "sweep replay — a simulator fell out of the "
+                             "single jit for this config")))
+        expected = {(h, "poisson", d, "none")
+                    for h in self.heuristics for d in self.dispatchers}
+        for tup in sorted(expected - set(counts)):
+            out.append(Finding(
+                path=f"jaxpr:retrace:{'x'.join(tup)}", line=0,
+                rule=self.rule, check=self.name,
+                message=(f"expected config tuple {tup} never traced — "
+                         "trace-log instrumentation drifted")))
+        return out
+
+
+for _name, _check in [
+    ("jaxpr-flatness", FlatnessCheck()),
+    ("jaxpr-dtype", DtypeAuditCheck()),
+    ("jaxpr-effects", EffectsAuditCheck()),
+    ("retrace-audit", RetraceAuditCheck()),
+]:
+    _registry.register(_name, _check)
+del _name, _check

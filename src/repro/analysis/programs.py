@@ -1,0 +1,68 @@
+"""Representative engine programs for the jaxpr audit (Layer 2).
+
+One builder, parameterized the way the engine is: fleet x heuristic x
+dispatcher x observers x dynamics. Returns ``(fn, args)`` ready for
+``jax.make_jaxpr(fn)(*args)`` — the same construction path as
+``tests/test_compile_flatness.py`` and the production runner, so what
+the audit traces is what CI ships.
+
+JAX is imported lazily inside the builders: importing
+:mod:`repro.analysis` (and running Layer 1) must work on the JAX-less
+lint runner.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+#: The default audit matrix: the paper pair on the heaviest builtins,
+#: once bare and once with the full observer + faults stack (the aux
+#: paths are where weak-type promotions hide).
+DEFAULT_PROGRAMS: Tuple[Tuple[str, dict], ...] = (
+    ("paper_x2/ELARE", dict(fleet="paper_x2", heuristic="ELARE")),
+    ("paper_x2/FELARE", dict(fleet="paper_x2", heuristic="FELARE")),
+    ("paper_x2/FELARE+aux", dict(
+        fleet="paper_x2", heuristic="FELARE",
+        observers=("timeline", "task_log", "health"),
+        dynamics="bernoulli_updown")),
+)
+
+
+def simulator_program(fleet: str = "paper_x2", heuristic: str = "FELARE",
+                      dispatcher: str = "fair_spill",
+                      observers: Sequence[str] = (),
+                      dynamics: str | None = None,
+                      n_tasks: int = 24, seed: int = 0, rate: float = 4.0):
+    """Build ``(simulate, (trace,))`` for one engine configuration."""
+    import jax
+
+    from repro import scenarios
+    from repro.core import dispatch, engine, faults, observe, policy, workload
+
+    system = scenarios.get_fleet(fleet).build()
+    sim = engine.make_simulator(
+        policy.get(heuristic), system.as_jax(),
+        queue_size=system.queue_size,
+        fairness_factor=float(system.fairness_factor),
+        dispatcher=dispatch.resolve(dispatcher),
+        site_of_machine=system.sites,
+        observers=observe.resolve(observers),
+        dynamics=faults.resolve(dynamics) if dynamics is not None else None,
+    )
+    trace = workload.poisson_trace(
+        jax.random.PRNGKey(seed), n_tasks, rate, system.eet)
+    return sim, (trace,)
+
+
+def trace_program(name: str, params):
+    """``(name, closed_jaxpr, out_shapes)`` for one audit-matrix entry.
+
+    ``params`` is either a kwargs dict for :func:`simulator_program` or a
+    zero-arg callable returning ``(fn, args)`` — the latter lets tests
+    audit seeded-bad programs through the same checks.
+    """
+    import jax
+
+    fn, args = params() if callable(params) else simulator_program(**params)
+    closed = jax.make_jaxpr(fn)(*args)
+    out_shapes = jax.eval_shape(fn, *args)
+    return name, closed, out_shapes

@@ -1,0 +1,71 @@
+"""The check registry: named, frozen check objects behind a NameRegistry.
+
+Mirrors the policy/scenario/dispatcher/faults idiom — checks are frozen
+dataclasses registered under case-insensitive names, so ``--checks
+host-effects,crn-discipline`` resolves the same way ``--policy FELARE``
+does, and the analyzer can enumerate itself for ``--list-checks``.
+
+The registry class itself is ``repro.core.registry.NameRegistry``, but we
+must NOT import it through ``repro.core`` — that package's ``__init__``
+pulls in the engine and therefore JAX, and Layer 1 is contractually
+importable on a JAX-less interpreter (the CI lint job has only ruff).
+``core/registry.py`` imports nothing beyond ``typing``, so when
+``repro.core.registry`` is not already loaded we side-load the file
+directly by path.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import sys
+from typing import Callable, List, Protocol, runtime_checkable
+
+from repro.analysis.findings import Finding
+
+
+def _load_name_registry():
+    mod = sys.modules.get("repro.core.registry")
+    if mod is None:
+        here = os.path.dirname(os.path.abspath(__file__))
+        path = os.path.join(os.path.dirname(here), "core", "registry.py")
+        spec = importlib.util.spec_from_file_location(
+            "repro._analysis_core_registry", path)
+        mod = importlib.util.module_from_spec(spec)
+        spec.loader.exec_module(mod)
+    return mod.NameRegistry
+
+
+NameRegistry = _load_name_registry()
+
+
+@runtime_checkable
+class Check(Protocol):
+    """One named analysis: scans the tree (or traced programs) for one rule.
+
+    ``rule`` is the stable finding id (``JD00x`` / ``JX10x``); ``layer``
+    is 1 (AST, no JAX) or 2 (jaxpr audit, needs JAX). ``run(cfg)``
+    returns findings — empty means clean.
+    """
+
+    name: str
+    rule: str
+    layer: int
+
+    def run(self, cfg) -> List[Finding]: ...
+
+
+def _check_check(name, item) -> None:
+    for attr in ("name", "rule", "layer", "run"):
+        if not hasattr(item, attr):
+            raise TypeError(f"check {name!r} lacks .{attr}: {item!r}")
+    if item.layer not in (1, 2):
+        raise TypeError(f"check {name!r}: layer must be 1 or 2")
+
+
+CHECKS: "NameRegistry" = NameRegistry(
+    "analysis check", case=str.lower, check=_check_check)
+
+register: Callable = CHECKS.register
+get: Callable = CHECKS.get
+names: Callable = CHECKS.names
+is_registered: Callable = CHECKS.is_registered

@@ -49,6 +49,7 @@ def cvb_eet(key, n_task_types, n_machines, mean_task=3.0, cv_task=0.6, cv_mach=0
     Gamma with mean q_i and CV ``cv_mach``. CVs control task/machine
     heterogeneity (inconsistent heterogeneity emerges naturally).
     """
+    # repro: allow-prng[CVB synthesis splits the caller's key; CRN-safe]
     k_task, k_mach = jax.random.split(key)
     shape_t = 1.0 / cv_task**2
     scale_t = mean_task * cv_task**2

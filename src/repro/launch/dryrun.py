@@ -17,7 +17,6 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", "")
 )
 
-# ruff: noqa: E402  (jax import must follow the env var)
 import argparse
 import json
 import pathlib

@@ -11,6 +11,11 @@ else contributes its *output* once (producer->consumer fusion).
 Numbers are GLOBAL (pre-SPMD); per-device = global / chips for our even
 shardings. Used for the §Roofline compute/memory terms; cost_analysis() is
 reported alongside as the raw artifact.
+
+The recursion through call-like primitives lives in the shared visitor
+:mod:`repro.roofline.jaxpr_walk` (also behind the jit-discipline
+analyzer's jaxpr audit); this module contributes only the per-equation
+FLOP/byte model.
 """
 from __future__ import annotations
 
@@ -18,6 +23,8 @@ import math
 from functools import partial
 
 import jax
+
+from repro.roofline.jaxpr_walk import sub_jaxprs, walk
 
 
 def _nbytes(aval) -> int:
@@ -54,79 +61,46 @@ def _conv_flops(eqn) -> int:
     return 2 * _nelems(out) * kernel // max(rhs.shape[-1], 1)
 
 
-_CALL_JAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
-
-
-def _sub_jaxprs(eqn):
-    """(jaxpr, multiplier) pairs for call-like primitives."""
+def _visit_cost(eqn, mult: int, acc: dict):
+    """Per-equation FLOP/byte model (the shared walker handles recursion)."""
     name = eqn.primitive.name
-    p = eqn.params
-    if name == "scan":
-        yield p["jaxpr"], int(p["length"])
-        return
-    if name == "while":
-        # bounded model loops only (none in our stacks); count body once
-        # per a conservative static bound if present, else once.
-        yield p["body_jaxpr"], 1
-        yield p["cond_jaxpr"], 1
-        return
-    if name == "cond":
-        for br in p["branches"]:
-            yield br, 1
-        return
-    for key in _CALL_JAXPR_PARAMS:
-        if key in p:
-            yield p[key], 1
-    if name == "custom_vjp_call" or name == "custom_jvp_call":
-        pass
-
-
-def _walk(jaxpr, mult: int, acc: dict):
-    for eqn in jaxpr.eqns:
-        name = eqn.primitive.name
-        subs = list(_sub_jaxprs(eqn))
-        if subs:
-            for sub, m in subs:
-                inner = sub.jaxpr if hasattr(sub, "jaxpr") else sub
-                _walk(inner, mult * m, acc)
-            if name == "scan":
-                # scan carries + stacked ys stream once per iteration
-                carry_bytes = sum(
-                    _nbytes(v.aval) for v in eqn.outvars)
-                acc["bytes"] += mult * carry_bytes
-            continue
-        out_b = sum(_nbytes(v.aval) for v in eqn.outvars)
-        out_e = sum(_nelems(v.aval) for v in eqn.outvars)
-        if name == "dot_general":
-            f = _dot_flops(eqn)
-            acc["flops"] += mult * f
-            acc["bytes"] += mult * (
-                sum(_nbytes(v.aval) for v in eqn.invars) + out_b)
-            acc["matmul_flops"] += mult * f
-        elif name in ("conv_general_dilated",):
-            acc["flops"] += mult * _conv_flops(eqn)
-            acc["bytes"] += mult * (
-                sum(_nbytes(v.aval) for v in eqn.invars) + out_b)
-        elif name in ("gather", "dynamic_slice"):
-            acc["bytes"] += mult * (out_b + out_b)  # read region + write out
-            acc["flops"] += mult * out_e
-        elif name in ("scatter", "scatter-add", "scatter_add",
-                      "dynamic_update_slice"):
-            # in-place update (donated buffer): traffic = touched region
-            # read-modify-write, NOT a full-operand copy.
-            upd_idx = 1 if name == "dynamic_update_slice" else 2
-            upd_b = (_nbytes(eqn.invars[upd_idx].aval)
-                     if len(eqn.invars) > upd_idx else out_b)
-            acc["bytes"] += mult * 2 * upd_b
-            acc["flops"] += mult * (upd_b // 4 + 1)
-        else:
-            acc["flops"] += mult * out_e            # elementwise estimate
-            acc["bytes"] += mult * out_b            # fused: write output once
-    return acc
+    if next(sub_jaxprs(eqn), None) is not None:
+        if name == "scan":
+            # scan carries + stacked ys stream once per iteration
+            acc["bytes"] += mult * sum(_nbytes(v.aval) for v in eqn.outvars)
+        return  # nested bodies are visited by the walker itself
+    out_b = sum(_nbytes(v.aval) for v in eqn.outvars)
+    out_e = sum(_nelems(v.aval) for v in eqn.outvars)
+    if name == "dot_general":
+        f = _dot_flops(eqn)
+        acc["flops"] += mult * f
+        acc["bytes"] += mult * (
+            sum(_nbytes(v.aval) for v in eqn.invars) + out_b)
+        acc["matmul_flops"] += mult * f
+    elif name in ("conv_general_dilated",):
+        acc["flops"] += mult * _conv_flops(eqn)
+        acc["bytes"] += mult * (
+            sum(_nbytes(v.aval) for v in eqn.invars) + out_b)
+    elif name in ("gather", "dynamic_slice"):
+        acc["bytes"] += mult * (out_b + out_b)  # read region + write out
+        acc["flops"] += mult * out_e
+    elif name in ("scatter", "scatter-add", "scatter_add",
+                  "dynamic_update_slice"):
+        # in-place update (donated buffer): traffic = touched region
+        # read-modify-write, NOT a full-operand copy.
+        upd_idx = 1 if name == "dynamic_update_slice" else 2
+        upd_b = (_nbytes(eqn.invars[upd_idx].aval)
+                 if len(eqn.invars) > upd_idx else out_b)
+        acc["bytes"] += mult * 2 * upd_b
+        acc["flops"] += mult * (upd_b // 4 + 1)
+    else:
+        acc["flops"] += mult * out_e            # elementwise estimate
+        acc["bytes"] += mult * out_b            # fused: write output once
 
 
 def jaxpr_cost(fn, *args, **kwargs) -> dict:
     """Trip-count-exact {flops, bytes, matmul_flops} (global, pre-SPMD)."""
     closed = jax.make_jaxpr(partial(fn, **kwargs))(*args)
     acc = {"flops": 0, "bytes": 0, "matmul_flops": 0}
-    return _walk(closed.jaxpr, 1, acc)
+    walk(closed.jaxpr, lambda eqn, mult, path: _visit_cost(eqn, mult, acc))
+    return acc

@@ -1,0 +1,108 @@
+"""Shared jaxpr visitor: one recursion, many analyses.
+
+Three consumers walk (post-trace) jaxprs in this repo — the roofline
+FLOP/byte accounting (:mod:`repro.roofline.jaxpr_cost`), the compile-
+flatness pins (``tests/test_compile_flatness.py``), and the jit-discipline
+static analyzer (:mod:`repro.analysis.jaxpr_audit`) — and each needs the
+same awkward piece: recursing through the call-like primitives
+(``scan``/``while``/``cond``/``pjit``/``custom_*``) that hide nested
+jaxprs inside their params, with the static trip multiplier that makes a
+scan body count ``length`` times.
+
+This module implements that recursion exactly once:
+
+  * :func:`sub_jaxprs` — the ``(jaxpr, trip multiplier)`` pairs hidden in
+    one equation's params;
+  * :func:`walk` — depth-first ``visit(eqn, mult, path)`` over every
+    equation, multiplying trip counts down the call tree; ``path`` is the
+    equation-index chain (e.g. ``(3, 0, 7)`` = eqn 7 inside the callee of
+    eqn 0 inside eqn 3) so analyses can report a stable location;
+  * :func:`iter_eqns` / :func:`primitive_counts` / :func:`count_eqns` —
+    multiplicity-free traversal helpers for program-*shape* questions
+    ("same primitive multiset at F=2 and F=32?"), where a scan body must
+    count once however many times it runs.
+
+Keeping the recursion shared means a new call-like primitive (say a JAX
+upgrade renaming ``pjit``) is taught to every analysis in one place.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, Optional, Tuple
+
+_CALL_JAXPR_PARAMS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "cond_jaxpr")
+
+
+def _inner(maybe_closed):
+    """Unwrap a ClosedJaxpr to its Jaxpr (identity for open jaxprs)."""
+    return maybe_closed.jaxpr if hasattr(maybe_closed, "jaxpr") else maybe_closed
+
+
+def sub_jaxprs(eqn) -> Iterator[Tuple[object, int]]:
+    """(jaxpr, trip multiplier) pairs for call-like primitives.
+
+    ``scan`` yields its body once with ``length`` as the multiplier;
+    ``while`` bodies count once (a conservative static bound — our stacks
+    carry no unbounded model loops); every ``cond`` branch counts once
+    (both branches are traced and compiled); ``pjit``/``remat``/
+    ``custom_vjp`` call primitives pass straight through.
+    """
+    name = eqn.primitive.name
+    p = eqn.params
+    if name == "scan":
+        yield p["jaxpr"], int(p["length"])
+        return
+    if name == "while":
+        yield p["body_jaxpr"], 1
+        yield p["cond_jaxpr"], 1
+        return
+    if name == "cond":
+        for br in p["branches"]:
+            yield br, 1
+        return
+    for key in _CALL_JAXPR_PARAMS:
+        if key in p:
+            yield p[key], 1
+
+
+def walk(jaxpr, visit: Callable, *, mult: int = 1,
+         path: Tuple[int, ...] = ()) -> None:
+    """Depth-first ``visit(eqn, mult, path)`` over every equation.
+
+    ``mult`` is the product of enclosing static trip counts (scan
+    lengths); ``path`` the equation-index chain from the root. ``visit``
+    may return the string ``"skip"`` to not descend into a call-like
+    equation's nested jaxprs (default: always descend).
+    """
+    for i, eqn in enumerate(jaxpr.eqns):
+        here = path + (i,)
+        if visit(eqn, mult, here) == "skip":
+            continue
+        for sub, m in sub_jaxprs(eqn):
+            walk(_inner(sub), visit, mult=mult * m, path=here)
+
+
+def iter_eqns(jaxpr, path: Tuple[int, ...] = ()) -> Iterator[tuple]:
+    """Yield ``(eqn, path)`` for every equation, each nested body ONCE.
+
+    The multiplicity-free traversal: a scan body appears a single time
+    regardless of its trip count, which is what program-shape comparisons
+    (equation counts, primitive multisets) want.
+    """
+    for i, eqn in enumerate(jaxpr.eqns):
+        here = path + (i,)
+        yield eqn, here
+        for sub, _ in sub_jaxprs(eqn):
+            yield from iter_eqns(_inner(sub), here)
+
+
+def count_eqns(jaxpr) -> int:
+    """Total equation count, descending into nested jaxprs (each once)."""
+    return sum(1 for _ in iter_eqns(jaxpr))
+
+
+def primitive_counts(jaxpr, out: Optional[dict] = None) -> dict:
+    """``{primitive name: count}`` multiset, each nested body counted once."""
+    out = {} if out is None else out
+    for eqn, _ in iter_eqns(jaxpr):
+        out[eqn.primitive.name] = out.get(eqn.primitive.name, 0) + 1
+    return out

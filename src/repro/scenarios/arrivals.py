@@ -78,6 +78,7 @@ class MMPPArrivals:
             )
 
     def sample(self, key, n_tasks: int, rate) -> jnp.ndarray:
+        # repro: allow-prng[component-local fan-out of the arrival subkey]
         k_exp, k_switch, k_init = jax.random.split(key, 3)
         e = jax.random.exponential(k_exp, (n_tasks,))
         u = jax.random.uniform(k_switch, (n_tasks,))

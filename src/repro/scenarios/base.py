@@ -172,6 +172,7 @@ class Scenario:
         eet = jnp.asarray(eet)
         if n_task_types is None:
             n_task_types = eet.shape[0]
+        # repro: allow-prng[pinned CRN fan-out of the caller's trace key]
         k_arr, k_type, k_exec = jax.random.split(key, 3)
         arrival = self.arrivals.sample(k_arr, n_tasks, rate)
         task_type = self.mix.sample(k_type, n_tasks, n_task_types)
@@ -190,6 +191,7 @@ class Scenario:
 
         Returns a Trace whose leaves carry leading dims (R, K).
         """
+        # repro: allow-prng[per-replicate CRN split; rate axis reuses keys]
         rep_keys = jax.random.split(key, reps)                    # (K, 2)
         rates_arr = jnp.asarray(rates, jnp.float32)               # (R,)
 

@@ -108,7 +108,9 @@ class CvbFleet:
             raise ValueError("fleet must have >= 1 task type and machine")
 
     def build(self) -> SystemSpec:
+        # repro: allow-prng[host-side fleet synthesis from a static seed]
         key = jax.random.PRNGKey(self.seed)
+        # repro: allow-prng[host-side fleet synthesis from a static seed]
         k_eet, k_dyn, k_idle = jax.random.split(key, 3)
         eet = np.asarray(eet_mod.cvb_eet(
             k_eet, self.n_task_types, self.n_machines,
@@ -154,7 +156,9 @@ class RangeFleet:
             raise ValueError("fleet must have >= 1 task type and machine")
 
     def build(self) -> SystemSpec:
+        # repro: allow-prng[host-side fleet synthesis from a static seed]
         key = jax.random.PRNGKey(self.seed)
+        # repro: allow-prng[host-side fleet synthesis from a static seed]
         k_eet, k_dyn, k_idle = jax.random.split(key, 3)
         eet = np.asarray(jax.random.uniform(
             k_eet, (self.n_task_types, self.n_machines),
@@ -246,9 +250,11 @@ class MixedSitesFleet:
             raise ValueError("every site needs >= 1 machine")
 
     def build(self) -> SystemSpec:
+        # repro: allow-prng[host-side fleet synthesis from a static seed]
         key = jax.random.PRNGKey(self.seed)
         eet_cols, p_dyn_cols, p_idle_cols, sites = [], [], [], []
         for s, (m, cv) in enumerate(zip(self.site_machines, self.cv_mach)):
+            # repro: allow-prng[per-site chain split of the static seed]
             key, k_eet, k_dyn, k_idle = jax.random.split(key, 4)
             eet_cols.append(np.asarray(eet_mod.cvb_eet(
                 k_eet, self.n_task_types, m,

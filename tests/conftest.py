@@ -97,6 +97,6 @@ def _install_hypothesis_fallback() -> None:
 
 
 try:  # pragma: no cover - depends on the environment
-    import hypothesis  # noqa: F401
+    import hypothesis
 except ImportError:  # pragma: no cover
     _install_hypothesis_fallback()
