@@ -6,8 +6,9 @@ human-readable block per figure.
   PYTHONPATH=src python -m benchmarks.run [--only fig4] [--full]
 
 ``--perf-out DIR`` instead runs the engine perf benchmarks (the hot
-vmapped sweep with observers off/on, plus the federation compile/warm
-scaling sweep over F) and appends a ``BENCH_<n>.json`` artifact under DIR
+vmapped sweep with observers off/on, the federation compile/warm scaling
+sweep over F, and the tiered edge-cloud network sweep) and appends a
+``BENCH_<n>.json`` artifact under DIR
 — one numbered file per run, so the directory accumulates the project's
 wall-clock/compile-time trajectory over time. ``--perf-baseline PATH``
 additionally compares the fresh warm times against a checked-in baseline
@@ -173,6 +174,50 @@ def perf_federation_scaling(*, site_counts=(1, 2, 8, 32), reps: int = 2,
     }
 
 
+def perf_tiered_sweep(*, reps: int = 4, n_tasks: int = 300,
+                      rates=(2.0, 4.0)) -> dict:
+    """Warm/cold wall clock of the tiered edge-cloud network path.
+
+    Same shape as :func:`perf_vmapped_sweep` but on the ``tiered_x4``
+    fleet with the ``tiered`` network model and the ``tier_aware``
+    dispatcher — the full per-link ready-time/energy machinery inside the
+    single jit. Its warm row is gated against ``benchmarks/BENCH_1.json``
+    like every other configuration.
+    """
+    import jax
+
+    from repro import scenarios
+    from repro.core import engine
+    from repro.datapipe import synthetic
+
+    system = scenarios.get_fleet("tiered_x4").build()
+    stacked = synthetic.trace_stack(
+        jax.random.PRNGKey(0), tuple(rates), reps, n_tasks, system.eet
+    )
+    flat = jax.tree.map(
+        lambda x: x.reshape((len(rates) * reps,) + x.shape[2:]), stacked
+    )
+    t0 = time.perf_counter()
+    out = engine.simulate_batch(flat, system, "FELARE",
+                                dispatcher="tier_aware", network="tiered")
+    jax.block_until_ready(out)
+    cold_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = engine.simulate_batch(flat, system, "FELARE",
+                                dispatcher="tier_aware", network="tiered")
+    jax.block_until_ready(out)
+    warm_s = time.perf_counter() - t0
+    return {
+        "bench": "tiered_sweep",
+        "config": {"reps": reps, "n_tasks": n_tasks, "rates": list(rates),
+                   "heuristic": "FELARE", "fleet": "tiered_x4",
+                   "dispatcher": "tier_aware", "network": "tiered"},
+        "cold_s": round(cold_s, 4),
+        "warm_s": round(warm_s, 4),
+        "compile_s": round(cold_s - warm_s, 4),
+    }
+
+
 def write_perf_artifact(outdir, baseline=None) -> pathlib.Path:
     """Run the perf benches and write the next ``BENCH_<n>.json`` in outdir.
 
@@ -188,6 +233,7 @@ def write_perf_artifact(outdir, baseline=None) -> pathlib.Path:
     path = outdir / f"BENCH_{max(seen, default=-1) + 1}.json"
     payload = perf_vmapped_sweep()
     payload["federation_scaling"] = perf_federation_scaling()
+    payload["tiered_sweep"] = perf_tiered_sweep()
     path.write_text(json.dumps(payload, indent=2))
     print(json.dumps(payload, indent=2))
     print(f"wrote {path}")
@@ -244,6 +290,11 @@ def compare_to_baseline(payload: dict, baseline) -> bool:
         if ref:
             check(f"federation F={row['n_sites']}", row["warm_s"],
                   ref.get("warm_s"))
+    tiered = payload.get("tiered_sweep")
+    base_tiered = base.get("tiered_sweep")
+    if tiered and base_tiered:
+        check("tiered_x4 network=tiered", tiered["warm_s"],
+              base_tiered.get("warm_s"))
     if not ok:
         print(f"FAIL: warm time regressed past {WARM_TOLERANCE}x baseline")
     return ok

@@ -19,8 +19,9 @@ and walks the jaxprs with the shared visitor
                          ``debug_callback``, ``debug_print``) — each one
                          is a host round-trip per step.
   JX104 retrace-audit    replay the runner trace log: every (policy x
-                         scenario x dispatcher x dynamics) tuple traces
-                         exactly once across a repeated sweep.
+                         scenario x dispatcher x dynamics x network)
+                         tuple traces exactly once across a repeated
+                         sweep.
 
 JAX is imported lazily inside ``run()`` — importing this module (so the
 checks register for ``--list-checks``) works on the JAX-less lint
@@ -57,7 +58,13 @@ def _path_str(name: str, path: Tuple[int, ...]) -> str:
 
 @dataclasses.dataclass(frozen=True)
 class FlatnessCheck:
-    """JX101: primitive-multiset equality of the simulator across F."""
+    """JX101: primitive-multiset equality of the simulator across F.
+
+    Two fleet groups are compared independently (programs are only
+    expected to match *within* a group): the flat federation pair, and
+    the tiered pair with the network subsystem attached — the transfer
+    arithmetic must be as site-count-flat as the rest of the loop.
+    """
 
     name: str = "jaxpr-flatness"
     rule: str = "JX101"
@@ -65,20 +72,21 @@ class FlatnessCheck:
     fleets: Tuple[str, ...] = ("paper_x2", "paper_x32")
     heuristic: str = "FELARE"
     dispatcher: str = "fair_spill"
+    tiered_fleets: Tuple[str, ...] = ("tiered_x4", "tiered_x16")
+    tiered_dispatcher: str = "tier_aware"
+    tiered_network: str = "tiered"
 
-    def run(self, cfg: AnalysisConfig) -> List[Finding]:
-        try:
-            import jax
-        except ImportError:
-            return _no_jax(self.name, self.rule)
+    def _compare_group(self, fleets, dispatcher, network) -> List[Finding]:
+        import jax
+
         from repro.roofline.jaxpr_walk import count_eqns, primitive_counts
 
         out: List[Finding] = []
         baseline = None
-        for fleet in self.fleets:
+        for fleet in fleets:
             fn, args = simulator_program(
                 fleet=fleet, heuristic=self.heuristic,
-                dispatcher=self.dispatcher)
+                dispatcher=dispatcher, network=network)
             jx = jax.make_jaxpr(fn)(*args).jaxpr
             stats = (fleet, count_eqns(jx), primitive_counts(jx))
             if baseline is None:
@@ -100,6 +108,16 @@ class FlatnessCheck:
                         message=(f"primitive multiset differs at {prim}: "
                                  f"{p1.get(prim, 0)} at {f1} vs "
                                  f"{p0.get(prim, 0)} at {f0}")))
+        return out
+
+    def run(self, cfg: AnalysisConfig) -> List[Finding]:
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            return _no_jax(self.name, self.rule)
+        out = self._compare_group(self.fleets, self.dispatcher, None)
+        out += self._compare_group(
+            self.tiered_fleets, self.tiered_dispatcher, self.tiered_network)
         return out
 
 
@@ -202,8 +220,8 @@ class RetraceAuditCheck:
 
     Replays a multi-config sweep sequence (two dispatchers x two
     policies, all distinct tuples) and fails on any (policy x scenario x
-    dispatcher x dynamics) tuple appearing in the trace log more than
-    once. A duplicate means something traced twice for one config — a
+    dispatcher x dynamics x network) tuple appearing in the trace log
+    more than once. A duplicate means something traced twice for one config — a
     policy object rebuilt un-hashably mid-sweep, a vmap falling out of
     the single jit, a dispatcher leaking per-call state — i.e. the
     single-jit contract ``tests/test_compile_flatness.py`` pins, checked
@@ -247,7 +265,7 @@ class RetraceAuditCheck:
                     message=(f"config tuple {tup} traced {n} times in one "
                              "sweep replay — a simulator fell out of the "
                              "single jit for this config")))
-        expected = {(h, "poisson", d, "none")
+        expected = {(h, "poisson", d, "none", "none")
                     for h in self.heuristics for d in self.dispatchers}
         for tup in sorted(expected - set(counts)):
             out.append(Finding(

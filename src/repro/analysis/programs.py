@@ -24,6 +24,10 @@ DEFAULT_PROGRAMS: Tuple[Tuple[str, dict], ...] = (
         fleet="paper_x2", heuristic="FELARE",
         observers=("timeline", "task_log", "health"),
         dynamics="bernoulli_updown")),
+    ("tiered_x4/FELARE+net", dict(
+        fleet="tiered_x4", heuristic="FELARE",
+        dispatcher="tier_aware", network="tiered",
+        observers=("network", "task_log"))),
 )
 
 
@@ -31,12 +35,14 @@ def simulator_program(fleet: str = "paper_x2", heuristic: str = "FELARE",
                       dispatcher: str = "fair_spill",
                       observers: Sequence[str] = (),
                       dynamics: str | None = None,
+                      network: str | None = None,
                       n_tasks: int = 24, seed: int = 0, rate: float = 4.0):
     """Build ``(simulate, (trace,))`` for one engine configuration."""
     import jax
 
     from repro import scenarios
     from repro.core import dispatch, engine, faults, observe, policy, workload
+    from repro.core import network as network_mod
 
     system = scenarios.get_fleet(fleet).build()
     sim = engine.make_simulator(
@@ -47,6 +53,9 @@ def simulator_program(fleet: str = "paper_x2", heuristic: str = "FELARE",
         site_of_machine=system.sites,
         observers=observe.resolve(observers),
         dynamics=faults.resolve(dynamics) if dynamics is not None else None,
+        network=(network_mod.resolve(network) if network is not None
+                 else None),
+        tier_of_site=system.tiers,
     )
     trace = workload.poisson_trace(
         jax.random.PRNGKey(seed), n_tasks, rate, system.eet)

@@ -139,7 +139,7 @@ class StudyResult:
 def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
               n_traces: int = 30, n_tasks: int = 2000, seed: int = 0,
               cv_run: float = 0.1, scenario="poisson", observers=(),
-              dispatcher="sticky", dynamics="none"):
+              dispatcher="sticky", dynamics="none", network="none"):
     """The paper's experiment template for one heuristic.
 
     Thin wrapper over :func:`repro.experiments.run_sweep`: synthesizes
@@ -175,6 +175,10 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
         (:func:`repro.core.faults.list_dynamics`) or a
         :class:`repro.core.faults.MachineDynamics` instance; the default
         ``"none"`` keeps studies bit-identical to fault-free ones.
+      network: edge-cloud transfer-cost model — a registered name
+        (:func:`repro.core.network.list_networks`) or a
+        :class:`repro.core.network.NetworkModel` instance; the default
+        ``"none"`` keeps studies bit-identical to network-free ones.
 
     Returns:
       list[StudyResult] of length R, in ``arrival_rates`` order.
@@ -193,6 +197,7 @@ def run_study(heuristic: str, arrival_rates, spec: SystemSpec, *,
         observers=tuple(observers),
         dispatcher=dispatcher,
         dynamics=dynamics,
+        network=network,
     )
     result = experiments.run_sweep(sweep_spec)
 

@@ -20,7 +20,9 @@ a site-masked machine view. Built-ins:
     the least-loaded site (FELARE's fairness signal at dispatch level);
   * ``health_aware`` — sticky homes, but tasks whose home site is down
     (per the faults subsystem's heartbeat mask) re-route to the
-    least-loaded healthy site.
+    least-loaded healthy site;
+  * ``tier_aware`` — ``min_eet`` plus the network subsystem's transfer
+    latency: the cheapest site *including the cost of getting there*.
 
 All are frozen hashable dataclasses behind the shared
 :class:`~repro.core.registry.NameRegistry`, interpreted by the pure-
@@ -42,6 +44,7 @@ from repro.core.dispatch.builtins import (
     MinEet,
     RoundRobin,
     Sticky,
+    TierAware,
 )
 from repro.core.dispatch.registry import (
     get,
@@ -60,6 +63,7 @@ __all__ = [
     "MinEet",
     "RoundRobin",
     "Sticky",
+    "TierAware",
     "describe",
     "from_json_dict",
     "get",
@@ -80,6 +84,7 @@ _KINDS = {
     "min_eet": MinEet,
     "fair_spill": FairSpill,
     "health_aware": HealthAware,
+    "tier_aware": TierAware,
 }
 
 
@@ -139,6 +144,7 @@ for _name, _disp in [
     ("min_eet", MinEet()),
     ("fair_spill", FairSpill()),
     ("health_aware", HealthAware()),
+    ("tier_aware", TierAware()),
 ]:
     register(_name, _disp)
 del _name, _disp

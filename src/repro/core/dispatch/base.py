@@ -52,6 +52,12 @@ class DispatchContext:
     n_sites: int              # F — STATIC
     fairness_factor: float    # Eq. 3's f — STATIC engine config
     alive: Optional[jnp.ndarray] = None  # (M,) bool health (None = no faults)
+    #: (N, F) f32 per-task transfer latency to each site (None = free
+    #: network): row ``k`` prices task k's ``origin -> site`` links, as
+    #: computed by the attached :mod:`repro.core.network` model.
+    xfer_lat: Optional[jnp.ndarray] = None
+    #: (N, F) f32 per-task transfer energy to each site (None = free).
+    xfer_energy: Optional[jnp.ndarray] = None
 
     # -- static shapes ------------------------------------------------------
     @property

@@ -119,6 +119,29 @@ class FairSpill:
 
 
 @dataclasses.dataclass(frozen=True)
+class TierAware:
+    """EET-aware cheapest site *including the cost of getting there*.
+
+    Scores each site by ``EET of its fastest machine for the task's type
+    + transfer latency from the task's origin`` and takes the argmin
+    (ties -> lowest site id). This is :class:`MinEet` made network-
+    conscious: a slow-to-reach cloud site must win by more than the WAN
+    latency it costs — the joint delay term of MEL's task-allocation
+    formulation at the dispatch level. With no network attached
+    (``ctx.xfer_lat is None``) the latency term vanishes and this *is*
+    ``min_eet``, bit-for-bit.
+    """
+
+    kind = "tier_aware"
+
+    def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
+        score = ctx.eet_min_by_site[ctx.task_type]  # (N, F)
+        if ctx.xfer_lat is not None:
+            score = score + ctx.xfer_lat
+        return jnp.argmin(score, axis=1).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
 class HealthAware:
     """Sticky homes, but tasks whose home site is *down* re-route to the
     least-loaded healthy site.

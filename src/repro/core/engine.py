@@ -43,6 +43,15 @@ spec built before the federation layer) the dispatch stage degenerates
 to "site 0" and the map stage is the exact pre-federation computation,
 so flat runs stay bit-identical.
 
+With a non-trivial :mod:`repro.core.network` model attached, the
+dispatch stage additionally *pays each task's link*: the chosen site's
+transfer latency shifts the task's ready time (the mapper cannot place
+an in-transit task until it lands — landings drive events of their own)
+and the link's transfer energy is charged to Eq. 2's dynamic account
+(and tallied per destination tier for the ``network`` observer). With
+the default ``network="none"`` every network field stays out of the
+state pytree and the loop is bit-exact with the pre-network engine.
+
 After every stage, each attached :class:`~repro.core.observe.Observer`
 folds the stage name and the fresh :class:`~repro.core.types.SimState`
 into its own fixed-shape ``aux`` pytree, so time-resolved telemetry
@@ -89,7 +98,8 @@ STAGES = ("finalize", "admit", "faults", "dispatch", "map", "start")
 
 
 def _init_state(trace: Trace, n_machines: int, queue_size: int,
-                n_types: int, *, backup_k: int = 0) -> SimState:
+                n_types: int, *, backup_k: int = 0,
+                network: bool = False, n_tiers: int = 1) -> SimState:
     n = trace.arrival.shape[0]
     M, Q, S = n_machines, queue_size, n_types
     f = jnp.float32
@@ -116,6 +126,11 @@ def _init_state(trace: Trace, n_machines: int, queue_size: int,
         slowdown=jnp.ones((M,), f),
         retries=jnp.zeros((n,), jnp.int32),
         backup=jnp.full((n, backup_k), -1, jnp.int32),
+        # network fields stay absent (None) with network="none" so the
+        # default pytree — and therefore the traced program — is exactly
+        # the pre-network one.
+        ready=(trace.arrival.astype(f) if network else None),
+        e_xfer=(jnp.zeros((n_tiers,), f) if network else None),
     )
 
 
@@ -134,6 +149,13 @@ def _next_event_time(st: SimState, trace: Trace,
     # even when no machine is busy and no arrivals remain).
     t_dead = jnp.min(jnp.where(pending, trace.deadline, jnp.inf))
     t = jnp.minimum(jnp.minimum(t_arr, t_comp), t_dead)
+    if st.ready is not None:
+        # in-transit landings: a dispatched task becomes mappable at its
+        # site-arrival time, which must drive an event even when no
+        # machine is busy and no arrivals remain.
+        t_ready = jnp.min(jnp.where(pending & (st.ready > st.now),
+                                    st.ready, jnp.inf))
+        t = jnp.minimum(t, t_ready)
     if wake_ts is not None:
         # scheduled-dynamics wake-ups (outage window edges): each fires at
         # most once — strictly future times only, and the event it drives
@@ -382,7 +404,8 @@ def _stage_faults(st: SimState, trace: Trace, sysarr: SystemArrays,
 
 def _stage_dispatch(st: SimState, trace: Trace, sysarr: SystemArrays,
                     dispatcher, site_of_machine: np.ndarray, n_sites: int,
-                    fairness_factor: float, health: bool = False):
+                    fairness_factor: float, health: bool = False,
+                    net=None):
     """Assign newly-admitted tasks to federation sites (dispatch-once).
 
     A task is dispatched at the first event where it is PENDING and still
@@ -397,33 +420,73 @@ def _stage_dispatch(st: SimState, trace: Trace, sysarr: SystemArrays,
     ("site alive iff >= 1 healthy machine") that ``sequential_balance``
     and ``health_aware`` route on. ``min_eet`` needs no code of its own:
     a fully-dead site's ``eet_min_by_site`` column is BIG automatically.
+
+    With ``net`` (a non-trivial network model attached — a 4-tuple
+    ``(lat_task, en_task, site_tier, n_tiers)`` of per-task (N, F) link
+    costs and the static tier map) each fresh dispatch *pays its link*:
+
+      * the task's ready time at the chosen site becomes ``now +
+        lat_task[k, site]`` — the map stage will not place it before it
+        lands (dispatch decisions are made at admission, on the
+        information available then; the transfer is committed);
+      * ``en_task[k, site]`` joules are charged to the Eq. 2 dynamic
+        account and tallied per destination tier (``e_xfer``);
+      * in-transit tasks whose deadline passes before they land are
+        CANCELLED here (the map stage cannot see them, so the stale-drop
+        policies never get the chance) — the transfer energy already
+        spent stays spent, but is not counted as *wasted* compute
+        energy, matching Eq. 2's row-3 zero-compute-energy drop.
+
+    An orphan re-dispatched by the faults stage (site cleared) pays the
+    transfer again from its origin; a backup failover does not — FEST-
+    style backups pre-stage their inputs at nomination time.
     """
     new = (st.status == PENDING) & (st.site < 0)
     if n_sites == 1:
-        return st._replace(site=jnp.where(new, 0, st.site))
-    eet = sysarr.eet
-    alive = None
-    if health:
-        alive = st.alive
-        eet = jnp.where(alive[None, :], eet * st.slowdown[None, :], BIG)
-    ctx = DispatchContext(
-        now=st.now,
-        unassigned=new,
-        task_type=trace.task_type,
-        deadline=trace.deadline,
-        qlen=st.qlen,
-        running=st.run_task >= 0,
-        completed=st.completed,
-        arrived=st.arrived,
-        eet=eet,
-        site_of_machine=site_of_machine,
-        n_sites=n_sites,
-        fairness_factor=fairness_factor,
-        alive=alive,
+        sites = 0  # scalar — broadcasts in the wheres below, like PR 8
+    else:
+        eet = sysarr.eet
+        alive = None
+        if health:
+            alive = st.alive
+            eet = jnp.where(alive[None, :], eet * st.slowdown[None, :], BIG)
+        ctx = DispatchContext(
+            now=st.now,
+            unassigned=new,
+            task_type=trace.task_type,
+            deadline=trace.deadline,
+            qlen=st.qlen,
+            running=st.run_task >= 0,
+            completed=st.completed,
+            arrived=st.arrived,
+            eet=eet,
+            site_of_machine=site_of_machine,
+            n_sites=n_sites,
+            fairness_factor=fairness_factor,
+            alive=alive,
+            xfer_lat=None if net is None else net[0],
+            xfer_energy=None if net is None else net[1],
+        )
+        sites = jnp.clip(dispatcher.dispatch(ctx).astype(jnp.int32),
+                         0, n_sites - 1)
+    st = st._replace(site=jnp.where(new, sites, st.site))
+    if net is None:
+        return st
+    lat_task, en_task, site_tier, n_tiers = net
+    s = jnp.clip(jnp.where(new, sites, 0), 0, n_sites - 1)
+    lat = jnp.take_along_axis(lat_task, s[:, None], axis=1)[:, 0]
+    en = jnp.take_along_axis(en_task, s[:, None], axis=1)[:, 0]
+    ready = jnp.where(new, st.now + lat, st.ready)
+    pay = jnp.where(new, en, 0.0)
+    e_xfer = st.e_xfer + jax.ops.segment_sum(pay, site_tier[s], n_tiers)
+    stale = ((st.status == PENDING) & (ready > st.now)
+             & (st.now >= trace.deadline))
+    status = jnp.where(stale, CANCELLED, st.status)
+    cancelled = st.cancelled + jax.ops.segment_sum(
+        stale.astype(jnp.int32), trace.task_type, st.cancelled.shape[0]
     )
-    sites = jnp.clip(dispatcher.dispatch(ctx).astype(jnp.int32),
-                     0, n_sites - 1)
-    return st._replace(site=jnp.where(new, sites, st.site))
+    return st._replace(ready=ready, e_dyn=st.e_dyn + pay.sum(),
+                       e_xfer=e_xfer, status=status, cancelled=cancelled)
 
 
 def _stage_map(st: SimState, trace: Trace, sysarr: SystemArrays,
@@ -517,6 +580,11 @@ def _map_action(st: SimState, trace: Trace, sysarr: SystemArrays,
     suffered = fairness.suffered_types(
         st.completed, st.arrived, fairness_factor
     )
+    pending = st.status == PENDING
+    if st.ready is not None:
+        # network subsystem: in-transit tasks (dispatched, not yet landed
+        # at their site) are invisible to the mapper until they arrive.
+        pending = pending & (st.ready <= st.now)
     avail_base = jnp.maximum(
         jnp.where(st.run_task >= 0, st.run_end_exp, st.now), st.now
     )
@@ -535,7 +603,7 @@ def _map_action(st: SimState, trace: Trace, sysarr: SystemArrays,
                            qlen=qlen_v)
         return select_fn(
             st.now,
-            st.status == PENDING,
+            pending,
             trace.task_type,
             trace.deadline,
             view,
@@ -544,7 +612,6 @@ def _map_action(st: SimState, trace: Trace, sysarr: SystemArrays,
         )
 
     M, Q = st.queue.shape
-    pending = st.status == PENDING
     owner_np = np.asarray(site_of_machine, np.int32)
     m = M // n_sites
     if M % n_sites == 0 and (
@@ -734,7 +801,9 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
                    observers: tuple = (),
                    dispatcher=None,
                    site_of_machine: tuple | None = None,
-                   dynamics=None) -> Callable:
+                   dynamics=None,
+                   network=None,
+                   tier_of_site: tuple | None = None) -> Callable:
     """Build ``simulate(trace)`` for one mapping policy.
 
     ``dynamics`` is the machine-failure process — a registered
@@ -747,6 +816,17 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
     wrapped policy additionally activates k-failure backup nomination
     (inert without a dynamics — backups only matter if machines can
     die).
+
+    ``network`` is the inter-site cost model — a registered
+    :mod:`repro.core.network` name or :class:`~repro.core.network.
+    NetworkModel` instance, closed over statically. ``None``/``"none"``
+    (the default) skips all transfer arithmetic, keeping the loop
+    bit-exact with the pre-network engine; any other model prices each
+    task's ``origin -> chosen site`` link at the dispatch stage (ready-
+    time shift + Eq. 2 transfer energy; see :func:`_stage_dispatch`).
+    ``tier_of_site`` is the static (F,) site-tier partition (device=0 /
+    edge=1 / cloud=2; ``None`` = all device-tier) the model prices and
+    the ``network`` observer aggregates on.
 
     ``select_fn(now, pending, task_type, deadline, view, sysarr, suffered)``
     is any :class:`repro.core.policy.Policy` (e.g. from
@@ -769,6 +849,7 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
     """
     from repro.core import dispatch as dispatch_mod
     from repro.core import faults as faults_mod
+    from repro.core import network as network_mod
 
     S, M = sysarr.eet.shape
     dynamics = faults_mod.resolve(dynamics)
@@ -790,10 +871,26 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
     site_members = (site_membership(sites_np, n_sites)
                     if n_sites > 1 else None)
     dispatcher = dispatch_mod.resolve(dispatcher)
+    tiers = ((0,) * n_sites if tier_of_site is None
+             else tuple(int(t) for t in tier_of_site))
+    if len(tiers) != n_sites:
+        raise ValueError(
+            f"tier_of_site has {len(tiers)} entries for {n_sites} sites"
+        )
+    network = network_mod.resolve(network)
+    if getattr(network, "kind", None) == "none":
+        network = None
+    if network is not None:
+        n_tiers = max(tiers) + 1
+        lat_np, en_np = network.cost_tables(tiers, S)
+        origins = network_mod.origin_sites(tiers)
+        net_salt = int(getattr(network, "salt", 0))
+        tiers_np = np.asarray(tiers, np.int32)
     observers = tuple(
         ob.with_engine_config(fairness_factor=fairness_factor,
                               queue_size=queue_size,
-                              site_of_machine=sites)
+                              site_of_machine=sites,
+                              tier_of_site=tiers)
         if hasattr(ob, "with_engine_config") else ob
         for ob in observers
     )
@@ -811,7 +908,20 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
     def simulate(trace: Trace):
         n = trace.arrival.shape[0]
         steps_cap = max_steps if max_steps is not None else 8 * n + 64
-        st = _init_state(trace, M, queue_size, S, backup_k=backup_k)
+        netted = network is not None
+        st = _init_state(trace, M, queue_size, S, backup_k=backup_k,
+                         network=netted,
+                         n_tiers=n_tiers if netted else 1)
+        if netted:
+            # Per-task (N, F) link costs, gathered once outside the loop:
+            # row k prices task k's origin (a salted counter hash over the
+            # device-tier sites) against every destination site.
+            origin = network_mod.hash_origins(n, origins, net_salt)
+            lat_task = jnp.asarray(lat_np)[trace.task_type, origin]
+            en_task = jnp.asarray(en_np)[trace.task_type, origin]
+            net = (lat_task, en_task, jnp.asarray(tiers_np), n_tiers)
+        else:
+            net = None
         aux = {ob.name: ob.init(trace, sysarr) for ob in observers}
         health = dynamics is not None
         horizon = (jnp.max(trace.deadline).astype(jnp.float32)
@@ -846,7 +956,7 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
                                    backup_k, sites_np, n_sites)
                 aux = notify("faults", aux, st)
             st = _stage_dispatch(st, trace, sysarr, dispatcher, sites_np,
-                                 n_sites, fairness_factor, health)
+                                 n_sites, fairness_factor, health, net)
             aux = notify("dispatch", aux, st)
             st = _stage_map(st, trace, sysarr, select_fn, fairness_factor, S,
                             site_members, sites_np, health, backup_k)
@@ -880,19 +990,22 @@ def make_simulator(select_fn: Callable, sysarr: SystemArrays, *,
                                              "queue_size", "fairness_factor",
                                              "max_steps", "batched",
                                              "dispatcher", "sites",
-                                             "dynamics"))
+                                             "dynamics", "network", "tiers"))
 def _simulate_jit(trace, eet, p_dyn, p_idle, select_fn, observers,
                   queue_size, fairness_factor, max_steps, batched,
-                  dispatcher=None, sites=None, dynamics=None):
+                  dispatcher=None, sites=None, dynamics=None,
+                  network=None, tiers=None):
     """The one cached jit entry point behind ``simulate``/``simulate_batch``.
 
     Keyed on ``(select_fn, observers, dispatcher, sites, dynamics,
-    static config)`` — re-calling with the same (frozen, hashable)
-    policy, observer, dispatcher and dynamics objects hits the jit cache
-    instead of re-tracing, including the vmapped batch path. ``sites``
-    is the static site-partition tuple (``None`` = single site);
-    ``dynamics`` is the static machine-dynamics instance (``None`` = no
-    faults stage).
+    network, tiers, static config)`` — re-calling with the same (frozen,
+    hashable) policy, observer, dispatcher, dynamics and network objects
+    hits the jit cache instead of re-tracing, including the vmapped
+    batch path. ``sites`` is the static site-partition tuple (``None`` =
+    single site); ``dynamics`` is the static machine-dynamics instance
+    (``None`` = no faults stage); ``network``/``tiers`` are the static
+    network model and (F,) site-tier tuple (``None`` = no transfer
+    arithmetic).
     """
     sysarr = SystemArrays(
         eet=eet, p_dyn=p_dyn, p_idle=p_idle,
@@ -903,15 +1016,16 @@ def _simulate_jit(trace, eet, p_dyn, p_idle, select_fn, observers,
         select_fn, sysarr, queue_size=queue_size,
         fairness_factor=fairness_factor, max_steps=max_steps,
         observers=observers, dispatcher=dispatcher, site_of_machine=sites,
-        dynamics=dynamics,
+        dynamics=dynamics, network=network, tier_of_site=tiers,
     )
     return jax.vmap(sim)(trace) if batched else sim(trace)
 
 
 def _simulate(trace, spec, heuristic, observers, max_steps, batched,
-              dispatcher=None, dynamics=None):
+              dispatcher=None, dynamics=None, network=None):
     from repro.core import dispatch as dispatch_mod
     from repro.core import faults as faults_mod
+    from repro.core import network as network_mod
     from repro.core import observe, policy
 
     obs = observe.resolve(observers)
@@ -929,6 +1043,13 @@ def _simulate(trace, spec, heuristic, observers, max_steps, batched,
     dyn = faults_mod.resolve(dynamics)
     if getattr(dyn, "kind", None) == "none":
         dyn = None
+    # And for networks: "none" and the default share the PR 8 program.
+    net = network_mod.resolve(network)
+    if getattr(net, "kind", None) == "none":
+        net = None
+    net_tiers = (None if net is None
+                 else tuple(int(t) for t in spec.tiers)
+                 if hasattr(spec, "tiers") else None)
     return _simulate_jit(
         trace,
         jnp.asarray(spec.eet, jnp.float32),
@@ -943,34 +1064,39 @@ def _simulate(trace, spec, heuristic, observers, max_steps, batched,
         disp,
         sites,
         dyn,
+        net,
+        net_tiers,
     )
 
 
 def simulate(trace: Trace, spec, heuristic: str, *, observers=(),
-             max_steps=None, dispatcher=None, dynamics=None):
+             max_steps=None, dispatcher=None, dynamics=None, network=None):
     """Convenience entry point: one trace, one SystemSpec, one heuristic.
 
     The heuristic name is resolved through the policy registry, observer
     names through the observer registry, the dispatcher name through the
-    dispatcher registry, and the dynamics name through the dynamics
-    registry — all *outside* the jit boundary; the (frozen, hashable)
-    policy/observer/dispatcher/dynamics objects are the static cache key
-    — so re-registering a name with ``overwrite=True`` takes effect
-    instead of silently hitting a stale name-keyed jit cache.
+    dispatcher registry, and the dynamics/network names through their
+    registries — all *outside* the jit boundary; the (frozen, hashable)
+    policy/observer/dispatcher/dynamics/network objects are the static
+    cache key — so re-registering a name with ``overwrite=True`` takes
+    effect instead of silently hitting a stale name-keyed jit cache.
     ``spec.site_of_machine`` (if set) partitions the machines into
     federation sites served through ``dispatcher``; ``dynamics``
     (default ``None`` = ``"none"``) injects machine failures at the
-    ``faults`` stage (see :mod:`repro.core.faults`).
+    ``faults`` stage (see :mod:`repro.core.faults`); ``network``
+    (default ``None`` = ``"none"``) prices inter-site dispatch over
+    ``spec.tier_of_site`` (see :mod:`repro.core.network`).
 
     Returns :class:`Metrics` when ``observers`` is empty, else
     ``(Metrics, aux)`` with ``aux`` keyed by observer name.
     """
     return _simulate(trace, spec, heuristic, observers, max_steps, False,
-                     dispatcher, dynamics)
+                     dispatcher, dynamics, network)
 
 
 def simulate_batch(traces: Trace, spec, heuristic: str, *, observers=(),
-                   max_steps=None, dispatcher=None, dynamics=None):
+                   max_steps=None, dispatcher=None, dynamics=None,
+                   network=None):
     """vmap over a stacked batch of traces (the paper's 30-trace studies).
 
     Shares the cached ``_simulate_jit`` with :func:`simulate`: calling it
@@ -978,4 +1104,4 @@ def simulate_batch(traces: Trace, spec, heuristic: str, *, observers=(),
     rebuilding and re-jitting the vmapped simulator per call.
     """
     return _simulate(traces, spec, heuristic, observers, max_steps, True,
-                     dispatcher, dynamics)
+                     dispatcher, dynamics, network)

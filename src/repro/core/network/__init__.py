@@ -1,0 +1,154 @@
+"""Registry-backed network costs: the edge-cloud hierarchy axis.
+
+FELARE's fleet is flat — every mapper reaches every machine for free.
+Real edge ML deployments are tiered (device / edge site / cloud), and
+each dispatch across a tier boundary pays data-transfer latency and
+energy.  This package makes that cost a first-class, composable axis
+next to everything else:
+
+    Run = Policy x Scenario x Dispatcher x Observers x Dynamics
+          x **Network**
+
+A :class:`NetworkModel` prices each ``origin site -> chosen site`` link
+per task type.  The engine charges the price at the ``dispatch`` stage,
+inside the single jitted event loop: the task's *ready time* at the
+chosen site is pushed out by the link latency (it cannot be mapped
+before it lands) and the link energy is charged to the Eq. 2 dynamic
+account (and tallied per destination tier for the ``network``
+observer).  Built-ins:
+
+  * ``none`` — free instantaneous links; the default, bit-exact with
+    the pre-network engine (the transfer arithmetic is skipped
+    entirely);
+  * ``uniform_latency`` — one flat price for any cross-site hop;
+  * ``tiered`` — a per-tier-pair latency/energy matrix scaled by
+    task-type input sizes (device->cloud pays the WAN, same-site is
+    free).
+
+Task origins are a salted counter hash over the *device-tier* sites,
+so origins are common random numbers across the vmapped sweep grid and
+reproducible in the pure-Python oracle.  Dispatchers see the per-task
+link costs via ``DispatchContext.xfer_lat`` / ``.xfer_energy``; the
+``tier_aware`` built-in dispatcher folds latency into the site EET
+comparison and degenerates to ``min_eet`` exactly when the network is
+free.
+
+All models are frozen hashable dataclasses behind the shared
+:class:`~repro.core.registry.NameRegistry`, interpreted by the pure-
+Python oracle event-for-event, and serialize to JSON by kind + fields.
+See ``docs/network.md`` for tier semantics, the transfer-accounting
+contract and a worked writing-a-network-model example.
+"""
+from __future__ import annotations
+
+from repro.core.network.base import (
+    NetworkModel,
+    hash_origins,
+    hash_origins_host,
+    origin_sites,
+)
+from repro.core.network.builtins import (
+    NoNetwork,
+    Tiered,
+    UniformLatency,
+)
+from repro.core.network.registry import (
+    get,
+    is_registered,
+    list_networks,
+    register,
+    unregister,
+)
+
+__all__ = [
+    "NetworkModel",
+    "NoNetwork",
+    "Tiered",
+    "UniformLatency",
+    "describe",
+    "from_json_dict",
+    "get",
+    "hash_origins",
+    "hash_origins_host",
+    "is_registered",
+    "list_networks",
+    "origin_sites",
+    "register",
+    "resolve",
+    "to_json_dict",
+    "unregister",
+]
+
+#: JSON ``kind`` -> built-in model class, for spec round-tripping.
+_KINDS = {
+    "none": NoNetwork,
+    "uniform_latency": UniformLatency,
+    "tiered": Tiered,
+}
+
+
+def resolve(model) -> NetworkModel:
+    """Normalize a name-or-instance to a NetworkModel instance.
+
+    ``None`` resolves to :class:`NoNetwork` (the engine further
+    normalizes ``kind == "none"`` to "no transfer arithmetic at all",
+    keeping the default path bit-exact); strings resolve through the
+    registry (KeyError on unknown names lists what is registered).
+    """
+    if model is None:
+        return NoNetwork()
+    if isinstance(model, str):
+        return get(model)
+    if not callable(getattr(model, "cost_tables", None)):
+        raise TypeError(
+            f"network must be a registered name or implement the "
+            f"NetworkModel protocol, got {model!r}"
+        )
+    return model
+
+
+def describe(name_or_model) -> str:
+    """One-line human description (for ``--list-networks``)."""
+    m = resolve(name_or_model)
+    doc = (m.__class__.__doc__ or "").strip().splitlines()
+    return doc[0].rstrip(".") if doc else m.__class__.__name__
+
+
+def to_json_dict(model) -> dict:
+    """``{"kind": ..., <param>: ...}`` for a built-in-style model."""
+    import dataclasses
+
+    m = resolve(model)
+    out = {"kind": m.kind}
+    for f in dataclasses.fields(m):
+        v = getattr(m, f.name)
+        if isinstance(v, tuple):
+            v = [list(x) if isinstance(x, tuple) else x for x in v]
+        out[f.name] = v
+    return out
+
+
+def from_json_dict(d: dict) -> NetworkModel:
+    """Rebuild a built-in model from its :func:`to_json_dict` form."""
+    kind = d.get("kind")
+    cls = _KINDS.get(kind)
+    if cls is None:
+        raise ValueError(
+            f"unknown network kind {kind!r}; choose from {sorted(_KINDS)}"
+        )
+    params = {k: v for k, v in d.items() if k != "kind"}
+    for k, v in params.items():
+        if isinstance(v, list):
+            params[k] = tuple(
+                tuple(x) if isinstance(x, list) else x for x in v
+            )
+    return cls(**params)
+
+
+for _name, _model in [
+    ("none", NoNetwork()),
+    ("uniform_latency", UniformLatency()),
+    ("tiered", Tiered()),
+]:
+    register(_name, _model)
+del _name, _model

@@ -1,0 +1,102 @@
+"""Network-model protocol: the sixth composable axis of a run.
+
+A :class:`NetworkModel` describes the *edge-cloud hierarchy* the fleet
+lives in: which sites are cheap to reach from a task's origin and what
+each dispatch across a tier boundary costs in transfer latency and
+transfer energy.  The contract mirrors ``faults.MachineDynamics``:
+
+* models are **frozen, hashable dataclasses** — they ride into
+  ``jax.jit`` as static arguments, so two sweeps with the same model
+  share one compiled program;
+* all randomness is **counter-based** (origin sites are a salted
+  multiplicative hash of the task index), so the engine and the
+  pyengine oracle derive identical origins with no RNG state;
+* the model is pure *data*: ``cost_tables`` returns host-side numpy
+  constants and the engine folds them into the traced program.  The
+  pyengine oracle interprets the same dataclass fields with plain
+  Python loops, which is what makes event-for-event parity testable.
+
+Semantics
+---------
+Each task originates at a *device-tier* site (the lowest tier present
+in the fleet).  When the dispatch stage routes the task to site ``s``,
+the link ``origin -> s`` charges:
+
+* **transfer latency** — the task's ready-time at ``s`` becomes
+  ``now + lat[type, origin, s]``; the mapper cannot place it on a
+  machine before that (an in-transit task is invisible to Eq. 1/3
+  scoring until it lands);
+* **transfer energy** — ``en[type, origin, s]`` joules are charged to
+  the Eq. 2 dynamic-energy account (radios draw from the same battery
+  the accelerators do) and recorded per destination tier for the
+  ``network`` observer.
+
+Same-site dispatch is always free: ``lat[t, s, s] == en[t, s, s] == 0``
+is part of the contract and is validated by the built-ins.
+"""
+from __future__ import annotations
+
+from typing import Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class NetworkModel(Protocol):
+    """Static description of inter-site transfer costs.
+
+    Implementations must be hashable (frozen dataclasses) because the
+    model is a static argument of the jitted simulator.  ``kind`` names
+    the model in registries, JSON payloads, and the pyengine oracle.
+    """
+
+    kind: str
+
+    def cost_tables(self, tier_of_site: Sequence[int],
+                    n_types: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Return ``(lat, en)`` cost tables, each ``(n_types, F, F)`` f32.
+
+        ``lat[t, o, s]`` / ``en[t, o, s]`` are the transfer latency /
+        energy for a type-``t`` task dispatched from origin site ``o``
+        to site ``s``.  Diagonals (``o == s``) must be exactly zero.
+        Tables are host-side constants — the engine folds them into the
+        trace, so they may not depend on runtime state.
+        """
+        ...
+
+
+def origin_sites(tier_of_site: Sequence[int]) -> Tuple[int, ...]:
+    """Sites eligible to originate tasks: every site on the lowest tier.
+
+    On a flat (untiered) fleet every site is tier 0, so every site is an
+    origin — the tiered model then degenerates to a flat federation.
+    """
+    tiers = tuple(int(t) for t in tier_of_site)
+    lo = min(tiers)
+    return tuple(i for i, t in enumerate(tiers) if t == lo)
+
+
+def hash_origins(n_tasks: int, eligible: Sequence[int], salt: int = 0):
+    """Deterministic per-task origin sites (device-side, traced).
+
+    The same salted multiplicative hash the ``sticky`` dispatcher uses,
+    mapped onto the *eligible* origin list so cloud/edge sites never
+    originate work.  Counter-based: task ``k`` always hashes to the
+    same origin, with no RNG state threaded through the loop.
+    """
+    import jax.numpy as jnp
+
+    elig = jnp.asarray(tuple(int(s) for s in eligible), dtype=jnp.int32)
+    k = jnp.arange(n_tasks, dtype=jnp.uint32)
+    h = (k * jnp.uint32(2654435761) + jnp.uint32(salt)) % jnp.uint32(
+        elig.shape[0])
+    return elig[h.astype(jnp.int32)]
+
+
+def hash_origins_host(n_tasks: int, eligible: Sequence[int],
+                      salt: int = 0) -> np.ndarray:
+    """Host mirror of :func:`hash_origins` (pyengine oracle)."""
+    elig = np.asarray(tuple(int(s) for s in eligible), dtype=np.int32)
+    k = np.arange(n_tasks, dtype=np.uint64)
+    h = ((k * 2654435761 + salt) & 0xFFFFFFFF) % elig.shape[0]
+    return elig[h.astype(np.int32)]

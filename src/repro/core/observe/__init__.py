@@ -23,7 +23,10 @@ vmapped — event loop with CRN preserved):
     ``capacity=inf``);
   * ``health`` — :class:`Health`, K-bucket machine/site health and
     orphan-pressure series from the faults subsystem
-    (:mod:`repro.core.faults`).
+    (:mod:`repro.core.faults`);
+  * ``network`` — :class:`Network`, K-bucket per-tier load and
+    transfer-energy series from the network subsystem
+    (:mod:`repro.core.network`).
 
 See ``docs/engine.md`` for the event-stage contract and a worked
 "writing an observer" example.
@@ -37,6 +40,7 @@ from repro.core.observe.base import (
 )
 from repro.core.observe.energy import EnergyBudget
 from repro.core.observe.health import Health
+from repro.core.observe.network import Network
 from repro.core.observe.registry import (
     get,
     is_registered,
@@ -52,6 +56,7 @@ __all__ = [
     "EnergyBudget",
     "FairnessTrajectory",
     "Health",
+    "Network",
     "Observer",
     "TaskLog",
     "Timeline",
@@ -74,6 +79,7 @@ _KINDS = {
     "task_log": TaskLog,
     "energy_budget": EnergyBudget,
     "health": Health,
+    "network": Network,
 }
 
 
@@ -108,6 +114,7 @@ for _name, _ob in [
     ("task_log", TaskLog()),
     ("energy_budget", EnergyBudget()),
     ("health", Health()),
+    ("network", Network()),
 ]:
     register(_name, _ob)
 del _name, _ob

@@ -1,0 +1,120 @@
+"""Edge-cloud network telemetry observer (``network``).
+
+Samples the network subsystem's transfer state
+(:mod:`repro.core.network`) into K uniform time buckets over the trace
+horizon, like :class:`~repro.core.observe.health.Health` — per-tier
+queued+running load (did the cloud actually absorb work, or did
+everything stay on-device?), the cumulative transfer energy charged per
+destination tier, and the in-transit task count. With ``network="none"``
+the series are trivially flat (zero transfer energy, nothing ever in
+transit), so the observer composes with any run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.observe.base import Observer, bucket_index, forward_fill
+from repro.core.types import PENDING, SimState, SystemArrays, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class Network(Observer):
+    """K-bucket per-tier load and transfer-energy series.
+
+    Result pytree (leaves lead with the K=``n_buckets`` axis):
+      ``t``           (K,)   right edge of each bucket (seconds)
+      ``tier_load``   (K,T)  queued + running tasks on each tier's
+                             machines at the last event <= t
+      ``xfer_energy`` (K,T)  cumulative transfer energy charged to links
+                             landing on each tier (joules)
+      ``in_transit``  (K,)   dispatched tasks still paying link latency
+      ``horizon``     ()     the sampled time horizon (max deadline)
+
+    The T axis sizes from the engine-bound tier partition
+    (:meth:`with_engine_config`); untiered fleets get T=1 and flat
+    all-device series.
+    """
+
+    n_buckets: int = 64
+    name: str = "network"
+    site_of_machine: tuple | None = None  # engine-bound, not serialized
+    tier_of_site: tuple | None = None     # engine-bound, not serialized
+
+    def with_engine_config(self, *, site_of_machine=None, tier_of_site=None,
+                           **config):
+        ob = self
+        if site_of_machine is not None:
+            ob = dataclasses.replace(
+                ob, site_of_machine=tuple(int(s) for s in site_of_machine)
+            )
+        if tier_of_site is not None:
+            ob = dataclasses.replace(
+                ob, tier_of_site=tuple(int(t) for t in tier_of_site)
+            )
+        return ob
+
+    @property
+    def _n_tiers(self) -> int:
+        if self.tier_of_site is None:
+            return 1
+        return max(self.tier_of_site) + 1
+
+    def _tier_ids(self, n_machines: int) -> jnp.ndarray:
+        """(M,) int32 tier of each machine (site tier through the owner)."""
+        sites = self.site_of_machine or (0,) * n_machines
+        tiers = self.tier_of_site or (0,) * (max(sites) + 1)
+        return jnp.asarray([tiers[s] for s in sites], jnp.int32)
+
+    def init(self, trace: Trace, sysarr: SystemArrays):
+        K, T = self.n_buckets, self._n_tiers
+        f = jnp.float32
+        return {
+            "horizon": jnp.max(trace.deadline).astype(f),
+            "touched": jnp.zeros((K,), bool),
+            "tier_load": jnp.zeros((K, T), jnp.int32),
+            "xfer_energy": jnp.zeros((K, T), f),
+            "in_transit": jnp.zeros((K,), jnp.int32),
+        }
+
+    def on_event(self, stage, aux, st: SimState, trace, sysarr):
+        if stage != "start":  # sample once per event, at end-of-event state
+            return aux
+        b = bucket_index(st.now, aux["horizon"], self.n_buckets)
+        M = st.qlen.shape[0]
+        T = self._n_tiers
+        load = st.qlen + (st.run_task >= 0).astype(jnp.int32)
+        tier_load = jax.ops.segment_sum(load, self._tier_ids(M), T)
+        e_xfer = (st.e_xfer if st.e_xfer is not None
+                  else jnp.zeros((T,), jnp.float32))
+        in_transit = (jnp.zeros((), jnp.int32) if st.ready is None
+                      else ((st.status == PENDING) & (st.ready > st.now))
+                      .sum().astype(jnp.int32))
+        return {
+            **aux,
+            "touched": aux["touched"].at[b].set(True),
+            "tier_load": aux["tier_load"].at[b].set(tier_load),
+            "xfer_energy": aux["xfer_energy"].at[b].set(e_xfer),
+            "in_transit": aux["in_transit"].at[b].set(in_transit),
+        }
+
+    def finalize(self, aux, st: SimState):
+        K, T = self.n_buckets, self._n_tiers
+        series = {k: aux[k] for k in ("tier_load", "xfer_energy",
+                                      "in_transit")}
+        init = {
+            "tier_load": jnp.zeros((T,), jnp.int32),
+            "xfer_energy": jnp.zeros((T,), jnp.float32),
+            "in_transit": jnp.zeros((), jnp.int32),
+        }
+        filled = forward_fill(aux["touched"], series, init)
+        width = aux["horizon"] / K
+        filled["t"] = jnp.arange(1, K + 1, dtype=jnp.float32) * width
+        filled["horizon"] = aux["horizon"]
+        return filled
+
+    def to_json_dict(self) -> dict:
+        return {"kind": "network", "n_buckets": self.n_buckets,
+                "name": self.name}

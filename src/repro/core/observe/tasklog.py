@@ -32,6 +32,9 @@ class TaskLog(Observer):
       ``status``     int32, final status code (see ``types.STATUS_NAMES``)
       ``retries``    int32, orphan re-dispatches the task suffered from
                      machine failures (0 with no dynamics attached)
+      ``ready_time`` f32, when the task landed at its dispatched site
+                     (arrival + transfer latency, re-stamped on orphan
+                     re-dispatch; −1 with no network attached)
 
     ``machine`` reflects the *last* machine the task ran on, so a task
     failed over to a backup or re-dispatched after a machine death logs
@@ -70,8 +73,11 @@ class TaskLog(Observer):
         }
 
     def finalize(self, aux, st: SimState):
+        n = st.status.shape[0]
+        ready = (st.ready if st.ready is not None
+                 else jnp.full((n,), -1.0, jnp.float32))
         return {**aux, "site": st.site, "status": st.status,
-                "retries": st.retries}
+                "retries": st.retries, "ready_time": ready}
 
     def to_json_dict(self) -> dict:
         return {"kind": "task_log", "name": self.name}

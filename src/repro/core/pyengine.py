@@ -29,6 +29,15 @@ rules, and every decision table (EET columns, availability, per-site
 fastest machine) is re-derived with dead machines masked to BIG —
 byte-identical to how the engine masks out-of-site machines.
 
+Network models (:mod:`repro.core.network`) are interpreted the same
+way: task origins come from the same salted counter hash
+(``hash_origins_host``), each dispatch stamps the task's site ready
+time ``f32(now) + f32(lat)`` and charges the link's transfer energy,
+in-transit tasks are invisible to the mapper until they land (landings
+drive events), and an in-transit task whose deadline passes is
+cancelled at the dispatch step — all mirroring the engine's f32
+transfer arithmetic operation-for-operation.
+
 Precision note: trace times are dyadic (the tests round them), so event
 timestamps are exact in both engines. Everything derived from the EET table
 (availability sums, feasibility boundaries, energy keys, the fairness limit)
@@ -89,15 +98,18 @@ def _lookup(table, kind, what):
 def _dispatch_interpreter(dispatcher, n_sites: int):
     """``kind`` + fields -> a plain-loop ``assign_sites`` closure.
 
-    ``assign_sites(new, ttype, suffered, load, eet_min_site, site_alive)``
-    returns ``{task index: site}`` for the indices in ``new`` (walked in
-    ascending order), mutating ``load`` for the load-balancing kinds
-    exactly like the engine's ``sequential_balance`` scan;
-    ``eet_min_site`` is the (S, F) per-site fastest-machine table
-    ``min_eet`` consults. ``site_alive`` is the faults subsystem's
-    heartbeat mask (``None`` with no dynamics attached); the caller has
-    already folded the engine's dead-site load penalty into ``load``, so
-    only ``health_aware`` reads the mask directly (for its home check).
+    ``assign_sites(new, ttype, suffered, load, eet_min_site, site_alive,
+    xfer_lat)`` returns ``{task index: site}`` for the indices in ``new``
+    (walked in ascending order), mutating ``load`` for the
+    load-balancing kinds exactly like the engine's
+    ``sequential_balance`` scan; ``eet_min_site`` is the (S, F) per-site
+    fastest-machine table ``min_eet`` consults. ``site_alive`` is the
+    faults subsystem's heartbeat mask (``None`` with no dynamics
+    attached); the caller has already folded the engine's dead-site load
+    penalty into ``load``, so only ``health_aware`` reads the mask
+    directly (for its home check). ``xfer_lat`` is the network
+    subsystem's (n, F) per-task link-latency row table (``None`` with no
+    network attached); only ``tier_aware`` reads it.
     """
     from repro.core import dispatch as dispatch_mod
 
@@ -108,14 +120,17 @@ def _dispatch_interpreter(dispatcher, n_sites: int):
         return ((k * 2654435761 + salt) & 0xFFFFFFFF) % F
 
     if d.kind == "sticky":
-        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive,
+                   xfer_lat):
             return {k: (ttype[k] % F if d.by_type else _hash(k, d.salt))
                     for k in new}
     elif d.kind == "round_robin":
-        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive,
+                   xfer_lat):
             return {k: k % F for k in new}
     elif d.kind == "least_queued":
-        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive,
+                   xfer_lat):
             out = {}
             for k in new:  # ascending index order, like the engine's scan
                 s = int(np.argmin(load))
@@ -123,10 +138,12 @@ def _dispatch_interpreter(dispatcher, n_sites: int):
                 out[k] = s
             return out
     elif d.kind == "min_eet":
-        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive,
+                   xfer_lat):
             return {k: int(np.argmin(eet_min_site[ttype[k]])) for k in new}
     elif d.kind == "fair_spill":
-        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive,
+                   xfer_lat):
             out = {}
             for k in new:
                 s = (int(np.argmin(load)) if suffered[ttype[k]]
@@ -135,7 +152,8 @@ def _dispatch_interpreter(dispatcher, n_sites: int):
                 out[k] = s
             return out
     elif d.kind == "health_aware":
-        def assign(new, ttype, suffered, load, eet_min_site, site_alive):
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive,
+                   xfer_lat):
             out = {}
             for k in new:
                 home = _hash(k, d.salt)
@@ -144,6 +162,18 @@ def _dispatch_interpreter(dispatcher, n_sites: int):
                 load[s] += 1
                 out[k] = s
             return out
+    elif d.kind == "tier_aware":
+        def assign(new, ttype, suffered, load, eet_min_site, site_alive,
+                   xfer_lat):
+            # engine: score = eet_min_by_site[type] (+ xfer_lat); argmin.
+            # f32 + f32 row addition mirrors the traced add exactly.
+            out = {}
+            for k in new:
+                row = eet_min_site[ttype[k]]
+                if xfer_lat is not None:
+                    row = (row + xfer_lat[k]).astype(np.float32)
+                out[k] = int(np.argmin(row))
+            return out
     else:
         raise NotImplementedError(
             f"oracle has no interpretation for dispatcher {d.kind!r}"
@@ -151,16 +181,19 @@ def _dispatch_interpreter(dispatcher, n_sites: int):
     return assign
 
 
-def simulate(trace, spec, heuristic: str, dispatcher=None, dynamics=None):
+def simulate(trace, spec, heuristic: str, dispatcher=None, dynamics=None,
+             network=None):
     """Run one trace; returns a dict mirroring Metrics.
 
     The dict also carries a ``"task_log"`` entry mirroring the JAX
     engine's ``task_log`` observer (:mod:`repro.core.observe`): per-task
-    map/start/end times, machine, federation site, final status and
-    orphan retry count, stamped at the same event timestamps — the
-    cross-check is event-for-event, not just end-of-trace.
+    map/start/end times, machine, federation site, final status, orphan
+    retry count and (with a network attached) site ready time, stamped
+    at the same event timestamps — the cross-check is event-for-event,
+    not just end-of-trace.
     """
     from repro.core import faults as faults_mod
+    from repro.core import network as network_mod
     from repro.core import policy as policy_mod
     from repro.core.faults.base import hash_uniform_host
 
@@ -186,6 +219,21 @@ def simulate(trace, spec, heuristic: str, dispatcher=None, dynamics=None):
     task_site = np.full(n, -1, int)
     assign_sites = (_dispatch_interpreter(dispatcher, F_sites)
                     if F_sites > 1 else None)
+
+    # --- network costs (None = no transfer arithmetic, like the engine) ----
+    net = network_mod.resolve(network)
+    if getattr(net, "kind", None) == "none":
+        net = None
+    lat_task = en_task = None
+    ready = arr.copy()  # site ready time; == arrival until first dispatch
+    if net is not None:
+        tiers = tuple(getattr(spec, "tiers", (0,) * F_sites))
+        lat_tab, en_tab = net.cost_tables(tiers, S)
+        origin = network_mod.hash_origins_host(
+            n, network_mod.origin_sites(tiers), int(getattr(net, "salt", 0))
+        )
+        lat_task = np.asarray(lat_tab, F)[ttype, origin]  # (n, F) rows
+        en_task = np.asarray(en_tab, F)[ttype, origin]
 
     # --- machine dynamics (None = no faults step, like the engine) ---------
     dyn = faults_mod.resolve(dynamics)
@@ -246,6 +294,9 @@ def simulate(trace, spec, heuristic: str, dispatcher=None, dynamics=None):
         ts += [m.run_end_act for m in machines if m.run >= 0]
         ts += [dl[k] for k in range(n) if status[k] == PENDING]
         ts += [w for w in wake_ts if w > now]  # outage window edges
+        if net is not None:  # in-transit landings drive events too
+            ts += [ready[k] for k in range(n)
+                   if status[k] == PENDING and ready[k] > now]
         return min(ts) if ts else np.inf
 
     def avail_base(m):
@@ -358,30 +409,49 @@ def simulate(trace, spec, heuristic: str, dispatcher=None, dynamics=None):
         return assign
 
     def dispatch_event():
-        """Assign newly-pending tasks to sites (dispatch-once)."""
+        """Assign newly-pending tasks to sites (dispatch-once).
+
+        With a network attached, each assignment also stamps the link's
+        ready time and charges its transfer energy, and any in-transit
+        task whose deadline passed is cancelled here — the engine does
+        all three inside ``_stage_dispatch``.
+        """
+        nonlocal e_dyn
         new = [k for k in range(n)
                if status[k] == PENDING and task_site[k] < 0]
-        if not new:
-            return
         if F_sites == 1:
             for k in new:
                 task_site[k] = 0
+        elif new:
+            suffered = suffered_mask()
+            load = np.asarray(
+                [sum(len(machines[j].queue) for j in site_machines[s])
+                 + sum(1 for j in site_machines[s] if machines[j].run >= 0)
+                 for s in range(F_sites)], int)
+            site_alive = None
+            if dyn is not None:
+                site_alive = np.asarray(
+                    [any(alive[j] for j in site_machines[s])
+                     for s in range(F_sites)])
+                # engine's sequential_balance dead-site penalty
+                load = load + np.where(site_alive, 0, 1_000_000)
+            for k, s in assign_sites(new, ttype, suffered, load,
+                                     eet_min_site, site_alive,
+                                     lat_task).items():
+                task_site[k] = min(max(int(s), 0), F_sites - 1)
+        if net is None:
             return
-        suffered = suffered_mask()
-        load = np.asarray(
-            [sum(len(machines[j].queue) for j in site_machines[s])
-             + sum(1 for j in site_machines[s] if machines[j].run >= 0)
-             for s in range(F_sites)], int)
-        site_alive = None
-        if dyn is not None:
-            site_alive = np.asarray(
-                [any(alive[j] for j in site_machines[s])
-                 for s in range(F_sites)])
-            # engine's sequential_balance dead-site penalty
-            load = load + np.where(site_alive, 0, 1_000_000)
-        for k, s in assign_sites(new, ttype, suffered, load,
-                                 eet_min_site, site_alive).items():
-            task_site[k] = min(max(int(s), 0), F_sites - 1)
+        for k in new:
+            s = task_site[k]
+            # engine: ready = f32(now) + f32(lat); orphans re-pay on
+            # re-dispatch (their task_site was reset to -1).
+            ready[k] = float(F(F(now) + lat_task[k, s]))
+            e_dyn += float(en_task[k, s])
+        for k in range(n):  # stale in-transit purge (energy stays spent)
+            if status[k] == PENDING and ready[k] > now and now >= dl[k]:
+                status[k] = CANCELLED
+                cancelled[ttype[k]] += 1
+                _end(k)
 
     def mapping_event():
         suffered = suffered_mask()
@@ -392,7 +462,8 @@ def simulate(trace, spec, heuristic: str, dispatcher=None, dynamics=None):
         nonlocal status
         msite = site_machines[s]
         pend = [k for k in range(n)
-                if status[k] == PENDING and task_site[k] == s]
+                if status[k] == PENDING and task_site[k] == s
+                and (net is None or ready[k] <= now)]  # in transit: invisible
 
         def site_hopeless(k):
             return F(F(now) + eet_min_site[ttype[k], s]) > dl[k]
@@ -667,5 +738,7 @@ def simulate(trace, spec, heuristic: str, dispatcher=None, dynamics=None):
             site=task_site.copy(),
             status=status.copy(),
             retries=retries.copy(),
+            ready_time=(ready.copy() if net is not None
+                        else np.full(n, -1.0)),
         ),
     )

@@ -50,6 +50,13 @@ class SystemSpec:
       federation. Sites must be numbered contiguously ``0..F-1`` and every
       site must own at least one machine. Stored as a tuple of ints so the
       spec stays hashable and ``==``-comparable.
+    tier_of_site: optional (F,) edge-cloud tier of each site — device=0,
+      edge=1, cloud=2 (higher tiers allowed for deeper hierarchies).
+      ``None`` means every site sits on the device tier, so flat and
+      pre-network specs are the degenerate single-tier hierarchy. Tasks
+      originate on the lowest tier present (see
+      :mod:`repro.core.network`). Stored as a tuple of ints for
+      hashability.
     """
 
     eet: np.ndarray
@@ -58,24 +65,34 @@ class SystemSpec:
     queue_size: int = 2
     fairness_factor: float = 1.0
     site_of_machine: Optional[Tuple[int, ...]] = None
+    tier_of_site: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
-        if self.site_of_machine is None:
-            return
-        sites = tuple(int(s) for s in np.asarray(self.site_of_machine))
-        object.__setattr__(self, "site_of_machine", sites)
-        if len(sites) != self.n_machines:
-            raise ValueError(
-                f"site_of_machine has {len(sites)} entries for "
-                f"{self.n_machines} machines"
-            )
-        present = set(sites)
-        n_sites = max(sites) + 1
-        if min(sites) < 0 or present != set(range(n_sites)):
-            raise ValueError(
-                f"sites must be contiguous 0..F-1 with every site "
-                f"non-empty, got {sites}"
-            )
+        if self.site_of_machine is not None:
+            sites = tuple(int(s) for s in np.asarray(self.site_of_machine))
+            object.__setattr__(self, "site_of_machine", sites)
+            if len(sites) != self.n_machines:
+                raise ValueError(
+                    f"site_of_machine has {len(sites)} entries for "
+                    f"{self.n_machines} machines"
+                )
+            present = set(sites)
+            n_sites = max(sites) + 1
+            if min(sites) < 0 or present != set(range(n_sites)):
+                raise ValueError(
+                    f"sites must be contiguous 0..F-1 with every site "
+                    f"non-empty, got {sites}"
+                )
+        if self.tier_of_site is not None:
+            tiers = tuple(int(t) for t in np.asarray(self.tier_of_site))
+            object.__setattr__(self, "tier_of_site", tiers)
+            if len(tiers) != self.n_sites:
+                raise ValueError(
+                    f"tier_of_site has {len(tiers)} entries for "
+                    f"{self.n_sites} sites"
+                )
+            if min(tiers) < 0:
+                raise ValueError(f"tiers must be >= 0, got {tiers}")
 
     @property
     def n_task_types(self) -> int:
@@ -98,6 +115,18 @@ class SystemSpec:
         if self.site_of_machine is None:
             return (0,) * self.n_machines
         return self.site_of_machine
+
+    @property
+    def tiers(self) -> Tuple[int, ...]:
+        """The (F,) site tiers, materialized (all-device when unset)."""
+        if self.tier_of_site is None:
+            return (0,) * self.n_sites
+        return self.tier_of_site
+
+    @property
+    def n_tiers(self) -> int:
+        """Number of hierarchy levels spanned (``max tier + 1``)."""
+        return max(self.tiers) + 1
 
     def as_jax(self) -> "SystemArrays":
         return SystemArrays(
@@ -174,6 +203,15 @@ class SimState(NamedTuple):
     they are constant carries — present in the state, never read by any
     stage — which keeps the default program bit-exact with the
     pre-faults engine.
+
+    The trailing network fields belong to the network subsystem
+    (:mod:`repro.core.network`): ``ready`` is each task's arrival time
+    at its *dispatched site* (arrival time + link latency; the mapper
+    will not place an in-transit task) and ``e_xfer`` accumulates
+    transfer energy per destination tier for the ``network`` observer.
+    With ``network="none"`` both stay ``None`` — absent pytree leaves,
+    so the traced program is structurally identical to the pre-network
+    engine.
     """
 
     now: jnp.ndarray            # ()
@@ -198,6 +236,8 @@ class SimState(NamedTuple):
     slowdown: Optional[jnp.ndarray] = None  # (M,) f32 straggler factors
     retries: Optional[jnp.ndarray] = None   # (N,) int32 orphan re-dispatches
     backup: Optional[jnp.ndarray] = None    # (N, k) int32 backup machines
+    ready: Optional[jnp.ndarray] = None     # (N,) f32 ready time at site
+    e_xfer: Optional[jnp.ndarray] = None    # (T,) f32 transfer energy by tier
 
 
 class EngineState(NamedTuple):

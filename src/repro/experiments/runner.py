@@ -24,12 +24,12 @@ from repro.experiments.results import SweepResult
 from repro.experiments.spec import SweepSpec
 
 # Trace-time observability: one (heuristic, scenario label, dispatcher
-# label, dynamics label) entry is appended each time a per-heuristic
-# simulator body is *traced* (not dispatched). Tests read this to pin the
-# single-jit contract — every (policy, dispatcher, dynamics, scenario)
-# tuple of a sweep must trace exactly once inside one XLA program.
-# Bounded to the most recent entries so long-lived processes don't
-# accumulate.
+# label, dynamics label, network label) entry is appended each time a
+# per-heuristic simulator body is *traced* (not dispatched). Tests read
+# this to pin the single-jit contract — every (policy, dispatcher,
+# dynamics, network, scenario) tuple of a sweep must trace exactly once
+# inside one XLA program. Bounded to the most recent entries so
+# long-lived processes don't accumulate.
 _TRACE_LOG: list = []
 _TRACE_LOG_MAX = 256
 
@@ -51,7 +51,7 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
                    *, use_pallas_phase1: bool = False,
                    max_steps=None, trace_label: str = "",
                    observers=(), dispatcher=None, dynamics=None,
-                   shard: bool = False):
+                   network=None, shard: bool = False):
     """Simulate a flat batch of traces under every heuristic, in one jit.
 
     Args:
@@ -78,6 +78,11 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
         :class:`repro.core.faults.MachineDynamics` instance
         (``None``/``"none"`` = no failures, bit-exact with pre-faults
         sweeps). Closed over statically like the policies.
+      network: the edge-cloud transfer-cost model — a registered
+        :mod:`repro.core.network` name or
+        :class:`repro.core.network.NetworkModel` instance
+        (``None``/``"none"`` = free instantaneous links, bit-exact with
+        pre-network sweeps). Closed over statically like the policies.
       shard: split the trace batch across every visible device with
         ``jax.shard_map`` (``repro.distributed.sharding.sweep_mesh``) —
         each device simulates its slice of the batch; the batch is
@@ -102,6 +107,11 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
     dyn = faults_mod.resolve(dynamics)
     dyn_label = (dynamics if isinstance(dynamics, str)
                  else getattr(dyn, "kind", type(dyn).__name__))
+    from repro.core import network as network_mod
+
+    net = network_mod.resolve(network)
+    net_label = (network if isinstance(network, str)
+                 else getattr(net, "kind", type(net).__name__))
     sysarr = system.as_jax()
     sims = [
         engine.make_simulator(
@@ -109,7 +119,8 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
             fairness_factor=float(system.fairness_factor),
             max_steps=max_steps, observers=obs,
             dispatcher=disp, site_of_machine=system.sites,
-            dynamics=dyn,
+            dynamics=dyn, network=net,
+            tier_of_site=getattr(system, "tiers", None),
         )
         for fn in _select_fns(heuristic_names, use_pallas_phase1)
     ]
@@ -118,7 +129,8 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
         per_h = []
         for name, sim in zip(heuristic_names, sims):
             _TRACE_LOG.append(
-                (name, trace_label, disp_label, dyn_label))  # trace-time
+                (name, trace_label, disp_label, dyn_label,
+                 net_label))  # trace-time
             per_h.append(jax.vmap(sim)(tr))
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_h)
 
@@ -181,7 +193,7 @@ def run_sweep(spec: SweepSpec, *, shard: bool = False) -> SweepResult:
         flat, system, spec.heuristics,
         use_pallas_phase1=spec.use_pallas_phase1, max_steps=spec.max_steps,
         trace_label=label, observers=observers, dispatcher=spec.dispatcher,
-        dynamics=spec.dynamics, shard=shard,
+        dynamics=spec.dynamics, network=spec.network, shard=shard,
     )
     metrics, aux = out if observers else (out, {})
     H = len(spec.heuristics)

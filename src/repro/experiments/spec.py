@@ -112,6 +112,12 @@ class SweepSpec:
         :class:`repro.core.faults.MachineDynamics` instance. The default
         ``"none"`` skips the engine's faults stage entirely and is
         bit-exact with pre-faults sweeps.
+      network: the edge-cloud transfer-cost model — a registered network
+        name (built-ins: ``"none"``, ``"uniform_latency"``, ``"tiered"``;
+        see :func:`repro.core.network.list_networks`) or a
+        :class:`repro.core.network.NetworkModel` instance. The default
+        ``"none"`` skips the engine's transfer arithmetic entirely and
+        is bit-exact with pre-network sweeps.
     """
 
     system: Union[str, SystemSpec, None] = None
@@ -129,6 +135,7 @@ class SweepSpec:
     observers: tuple = ()  # names or observe.Observer instances
     dispatcher: Union[str, "object"] = "sticky"  # name or dispatch.Dispatcher
     dynamics: Union[str, "object"] = "none"  # name or faults.MachineDynamics
+    network: Union[str, "object"] = "none"  # name or network.NetworkModel
 
     def __post_init__(self):
         object.__setattr__(self, "rates",
@@ -197,6 +204,22 @@ class SweepSpec:
                 f"dynamics must be a registered name or a "
                 f"faults.MachineDynamics, got {self.dynamics!r}"
             )
+        from repro.core import network
+
+        if isinstance(self.network, str):
+            name = self.network.strip().lower()
+            if not network.is_registered(name):
+                raise ValueError(
+                    f"unknown network {self.network!r}; "
+                    f"choose from {network.list_networks()} "
+                    f"(or network.register(...) your own)"
+                )
+            object.__setattr__(self, "network", name)
+        elif not callable(getattr(self.network, "cost_tables", None)):
+            raise ValueError(
+                f"network must be a registered name or a "
+                f"network.NetworkModel, got {self.network!r}"
+            )
         from repro.core import observe
 
         obs = []
@@ -250,6 +273,12 @@ class SweepSpec:
 
         return faults.resolve(self.dynamics)
 
+    def resolve_network(self):
+        """Materialize the :class:`repro.core.network.NetworkModel`."""
+        from repro.core import network
+
+        return network.resolve(self.network)
+
     def resolve_system(self) -> SystemSpec:
         """Materialize the SystemSpec, applying queue/fairness overrides.
 
@@ -300,6 +329,8 @@ class SweepSpec:
             }
             if self.system.site_of_machine is not None:
                 system["site_of_machine"] = list(self.system.site_of_machine)
+            if self.system.tier_of_site is not None:
+                system["tier_of_site"] = list(self.system.tier_of_site)
         else:
             system = self.system
         scenario = (self.scenario if isinstance(self.scenario, str)
@@ -312,6 +343,10 @@ class SweepSpec:
 
         dynamics = (self.dynamics if isinstance(self.dynamics, str)
                     else faults.to_json_dict(self.dynamics))
+        from repro.core import network as network_mod
+
+        network = (self.network if isinstance(self.network, str)
+                   else network_mod.to_json_dict(self.network))
         observers = []
         for ob in self.observers:
             if isinstance(ob, str):
@@ -329,6 +364,7 @@ class SweepSpec:
             "observers": observers,
             "dispatcher": dispatcher,
             "dynamics": dynamics,
+            "network": network,
             "rates": list(self.rates),
             "reps": self.reps,
             "n_tasks": self.n_tasks,
@@ -352,6 +388,7 @@ class SweepSpec:
         system = d.get("system")
         if isinstance(system, dict):
             sites = system.get("site_of_machine")
+            tiers = system.get("tier_of_site")
             system = SystemSpec(
                 eet=np.asarray(system["eet"], np.float32),
                 p_dyn=np.asarray(system["p_dyn"], np.float32),
@@ -359,6 +396,7 @@ class SweepSpec:
                 queue_size=int(system.get("queue_size", 2)),
                 fairness_factor=float(system.get("fairness_factor", 1.0)),
                 site_of_machine=None if sites is None else tuple(sites),
+                tier_of_site=None if tiers is None else tuple(tiers),
             )
         scenario = d.get("scenario", "poisson")
         if isinstance(scenario, dict):
@@ -377,12 +415,18 @@ class SweepSpec:
         dynamics = d.get("dynamics", "none")
         if isinstance(dynamics, dict):
             dynamics = faults.from_json_dict(dynamics)
+        from repro.core import network as network_mod
+
+        network = d.get("network", "none")  # old payloads: free links
+        if isinstance(network, dict):
+            network = network_mod.from_json_dict(network)
         return cls(
             system=system,
             scenario=scenario,
             observers=observers,
             dispatcher=dispatcher,
             dynamics=dynamics,
+            network=network,
             rates=tuple(d["rates"]),
             reps=int(d["reps"]),
             n_tasks=int(d["n_tasks"]),

@@ -25,7 +25,7 @@ import sys
 import time
 
 from repro import scenarios
-from repro.core import dispatch, faults, observe, policy
+from repro.core import dispatch, faults, network, observe, policy
 from repro.experiments.results import SweepResult
 from repro.experiments.runner import run_sweep
 from repro.experiments.spec import (
@@ -82,6 +82,14 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
                          " fault-free sweep.")
     ap.add_argument("--list-dynamics", action="store_true",
                     help="list the registered machine dynamics and exit")
+    ap.add_argument("--network", default="none",
+                    help="edge-cloud transfer-cost model (default: none; "
+                         "see --list-networks). 'none' is bit-exact with a "
+                         "network-free sweep.")
+    ap.add_argument("--list-networks", action="store_true",
+                    help="list the registered network models and exit")
+    ap.add_argument("--list-fleets", action="store_true",
+                    help="list the registered fleet builders and exit")
     ap.add_argument("--observers", default="",
                     help="comma list of registered engine observers to "
                          "attach (e.g. timeline,task_log; see "
@@ -121,6 +129,12 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
     if args.list_dynamics:
         print_dynamics_list()
         raise SystemExit(0)
+    if args.list_networks:
+        print_network_list()
+        raise SystemExit(0)
+    if args.list_fleets:
+        print_fleet_list()
+        raise SystemExit(0)
 
     heuristics = tuple(
         h.strip() for h in args.heuristics.split(",") if h.strip()
@@ -158,6 +172,12 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
             + ", ".join(faults.list_dynamics())
             + " (run with --list-dynamics for details)"
         )
+    if not network.is_registered(args.network):
+        ap.error(
+            f"unknown network {args.network!r}; registered networks: "
+            + ", ".join(network.list_networks())
+            + " (run with --list-networks for details)"
+        )
     observers = tuple(
         o.strip() for o in args.observers.split(",") if o.strip()
     )
@@ -185,6 +205,7 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
             observers=observers,
             dispatcher=args.dispatcher,
             dynamics=args.dynamics,
+            network=args.network,
         )
     except ValueError as e:
         ap.error(str(e))  # clean exit 2 instead of a traceback
@@ -241,6 +262,28 @@ def print_dynamics_list(file=None) -> None:
         print(f"{name:18s} {faults.describe(name)}", file=file)
 
 
+def print_network_list(file=None) -> None:
+    """One line per registered network model: name + description."""
+    file = file if file is not None else sys.stdout
+    for name in network.list_networks():
+        print(f"{name:18s} {network.describe(name)}", file=file)
+
+
+def print_fleet_list(file=None) -> None:
+    """One line per registered fleet builder: name, shape, tier layout."""
+    file = file if file is not None else sys.stdout
+    print(f"{'fleet':14s} {'types':>5s} {'machines':>8s} {'sites':>5s} "
+          f"{'tiers':14s}", file=file)
+    for name in scenarios.list_fleets():
+        spec = scenarios.get_fleet(name).build()
+        S, M = spec.eet.shape
+        tiers = spec.tiers
+        label = ("flat" if max(tiers) == 0
+                 else ",".join(str(t) for t in tiers))
+        print(f"{name:14s} {S:5d} {M:8d} {spec.n_sites:5d} {label:14s}",
+              file=file)
+
+
 def print_summary(result: SweepResult, file=None) -> None:
     """Human-readable per-cell table (one line per heuristic x rate)."""
     file = file if file is not None else sys.stdout
@@ -269,6 +312,8 @@ def main(argv=None) -> SweepResult:
            if n_sites > 1 else "")
     if args.dynamics != "none":
         fed += f" dynamics={args.dynamics}"
+    if args.network != "none":
+        fed += f" network={args.network}"
     shard_note = ""
     if args.shard:
         import jax

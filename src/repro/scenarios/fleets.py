@@ -275,6 +275,59 @@ class MixedSitesFleet:
         )
 
 
+@component("fleet")
+@dataclasses.dataclass(frozen=True)
+class TieredFleet:
+    """Edge-cloud hierarchy: device sites plus one cloud site.
+
+    ``n_device_sites`` replicas of the base fleet sit on the device tier
+    (tier 0) next to a single cloud site (tier 2) holding
+    ``cloud_replicas`` copies of the base machines, each
+    ``cloud_speedup``× faster (EET divided) and mains-powered
+    (``p_idle = 0`` — the cloud's idle draw is not the edge battery's
+    problem; its dynamic draw still counts toward Eq. 2, it is paid by
+    *somebody*). The cloud is high-capacity and fast but — under a
+    non-trivial :mod:`repro.core.network` model — slow and expensive to
+    *reach*, which is exactly the trade-off ``tier_aware`` dispatch
+    prices and load-blind rules ignore. ``cloud_speedup`` defaults to a
+    power of two so device/cloud EETs stay exactly representable in f32
+    (bit-exactness batteries depend on dyadic arithmetic).
+    """
+
+    kind: ClassVar[str] = "tiered"
+    base: str = "paper"
+    n_device_sites: int = 3
+    cloud_replicas: int = 2
+    cloud_speedup: float = 2.0
+
+    def __post_init__(self):
+        if self.n_device_sites < 1:
+            raise ValueError("tiered fleet needs >= 1 device site")
+        if self.cloud_replicas < 1:
+            raise ValueError("tiered fleet needs >= 1 cloud replica")
+        if float(self.cloud_speedup) <= 0.0:
+            raise ValueError("cloud_speedup must be > 0")
+
+    def build(self) -> SystemSpec:
+        spec = get_fleet(self.base).build()
+        D, C, M = self.n_device_sites, self.cloud_replicas, spec.n_machines
+        eet = np.asarray(spec.eet, np.float32)
+        cloud_eet = (np.tile(eet, (1, C))
+                     / np.float32(self.cloud_speedup)).astype(np.float32)
+        sites = [s for s in range(D) for _ in range(M)] + [D] * (C * M)
+        return SystemSpec(
+            eet=np.concatenate([np.tile(eet, (1, D)), cloud_eet], axis=1),
+            p_dyn=np.concatenate([np.tile(np.asarray(spec.p_dyn), D),
+                                  np.tile(np.asarray(spec.p_dyn), C)]),
+            p_idle=np.concatenate([np.tile(np.asarray(spec.p_idle), D),
+                                   np.zeros((C * M,), np.float32)]),
+            queue_size=spec.queue_size,
+            fairness_factor=spec.fairness_factor,
+            site_of_machine=tuple(sites),
+            tier_of_site=(0,) * D + (2,),
+        )
+
+
 # --------------------------------------------------------------------------
 # Fleet registry (shared NameRegistry mechanics, like policies/scenarios)
 # --------------------------------------------------------------------------
@@ -323,6 +376,8 @@ for _name, _fleet in [
     ("paper_x8", FederatedFleet(base="paper", n_sites=8)),
     ("paper_x32", FederatedFleet(base="paper", n_sites=32)),
     ("mixed_sites", MixedSitesFleet()),
+    ("tiered_x4", TieredFleet(n_device_sites=3)),
+    ("tiered_x16", TieredFleet(n_device_sites=15)),
 ]:
     register_fleet(_name, _fleet)
 del _name, _fleet

@@ -96,7 +96,8 @@ def test_one_trace_per_triple_independent_of_site_count():
         ))
         logs[fleet] = list(runner._TRACE_LOG)
         runner._TRACE_LOG.clear()
-    expected = [(h, "poisson", "round_robin", "none") for h in heuristics]
+    expected = [(h, "poisson", "round_robin", "none", "none")
+                for h in heuristics]
     assert logs["paper_x2"] == expected
     assert logs["paper_x32"] == logs["paper_x2"]
 

@@ -255,7 +255,7 @@ def test_one_jit_trace_per_policy_dispatcher_dynamics():
             heuristics=heuristics, seed=1, dispatcher="health_aware",
             dynamics=dyn,
         ))
-    expected = {(h, "poisson", "health_aware", dyn)
+    expected = {(h, "poisson", "health_aware", dyn, "none")
                 for h in heuristics for dyn in ("none", "site_outage")}
     assert set(runner._TRACE_LOG) == expected
     assert len(runner._TRACE_LOG) == len(expected)
@@ -333,7 +333,7 @@ def test_cli_faulty_sweep_writes_artifacts(tmp_path):
     assert (out / "sweep.csv").exists()
     assert (out / "observers.json").exists()
     assert set(runner._TRACE_LOG) == {
-        ("ELARE", "poisson", "health_aware", "site_outage")}
+        ("ELARE", "poisson", "health_aware", "site_outage", "none")}
     runner._TRACE_LOG.clear()
 
 

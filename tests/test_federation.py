@@ -210,7 +210,7 @@ def test_one_jit_trace_per_policy_dispatcher_scenario():
             system="paper_x2", rates=(3.0,), reps=2, n_tasks=50,
             heuristics=heuristics, seed=1, dispatcher=d,
         ))
-    expected = {(h, "poisson", d, "none")
+    expected = {(h, "poisson", d, "none", "none")
                 for h in heuristics for d in ("sticky", "round_robin")}
     assert set(runner._TRACE_LOG) == expected
     assert len(runner._TRACE_LOG) == len(expected)
@@ -232,7 +232,7 @@ def test_cli_two_site_sweep_all_dispatchers(tmp_path):
         payload = json.loads((out / "sweep.json").read_text())
         assert payload["spec"]["dispatcher"] == d
         assert (out / "sweep.csv").exists()
-    expected = {("ELARE", "poisson", d, "none")
+    expected = {("ELARE", "poisson", d, "none", "none")
                 for d in dispatch.list_dispatchers()}
     assert set(runner._TRACE_LOG) == expected
     assert len(runner._TRACE_LOG) == len(expected)

@@ -142,7 +142,7 @@ def test_observers_add_no_retraces():
         observers=("timeline", "task_log", "fairness_trajectory"),
     ))
     assert sorted(runner._TRACE_LOG) == sorted(
-        (h, "poisson", "sticky", "none") for h in heuristics)
+        (h, "poisson", "sticky", "none", "none") for h in heuristics)
     runner._TRACE_LOG.clear()
 
 

@@ -168,7 +168,7 @@ def test_one_jit_trace_per_policy_scenario_pair():
             rates=(3.0,), reps=2, n_tasks=60, heuristics=heuristics,
             scenario=scn, seed=1,
         ))
-    expected = {(h, s, "sticky", "none")
+    expected = {(h, s, "sticky", "none", "none")
                 for h in heuristics for s in ("poisson", "bursty")}
     assert set(runner._TRACE_LOG) == expected
     # exactly once each: 3 policies x 2 scenarios = 6 trace events total
