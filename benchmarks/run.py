@@ -7,7 +7,8 @@ human-readable block per figure.
 
 ``--perf-out DIR`` instead runs the engine perf benchmarks (the hot
 vmapped sweep with observers off/on, the federation compile/warm scaling
-sweep over F, and the tiered edge-cloud network sweep) and appends a
+sweep over F, the tiered edge-cloud network sweep, and the lax-vs-fused
+map-decision sweep over N x M) and appends a
 ``BENCH_<n>.json`` artifact under DIR
 — one numbered file per run, so the directory accumulates the project's
 wall-clock/compile-time trajectory over time. ``--perf-baseline PATH``
@@ -218,7 +219,175 @@ def perf_tiered_sweep(*, reps: int = 4, n_tasks: int = 300,
     }
 
 
-def write_perf_artifact(outdir, baseline=None) -> pathlib.Path:
+def _fused_map_pair(n_tasks, n_machines, *, interpret, seed=0,
+                    heuristic="FELARE", n_types=4, queue_slots=2):
+    """Jitted lax/fused select closures + their random raw inputs.
+
+    Both closures rebuild the SchedContext from the same raw arrays, so
+    timing them head-to-head isolates the map-decision math — Eq. 1/2
+    grids, nomination, phase-2 keys, drops, the FELARE eviction stats —
+    which is exactly what the fused kernel replaces.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import policy
+    from repro.core.policy.context import MachineView, SchedContext
+    from repro.core.types import SystemArrays
+
+    r = np.random.default_rng(seed)
+    n, m, s, q = n_tasks, n_machines, n_types, queue_slots
+    raw = dict(
+        now=jnp.float32(25.0),
+        pending=jnp.asarray(r.integers(0, 2, n).astype(bool)),
+        task_type=jnp.asarray(r.integers(0, s, n).astype(np.int32)),
+        deadline=jnp.asarray(r.uniform(0, 120, n).astype(np.float32)),
+        avail_base=jnp.asarray(r.uniform(0, 60, m).astype(np.float32)),
+        queue=jnp.asarray(
+            np.where(np.arange(q)[None, :] < r.integers(0, q + 1, m)[:, None],
+                     r.integers(0, n, (m, q)), -1).astype(np.int32)),
+        eet=jnp.asarray(r.uniform(0.5, 20, (s, m)).astype(np.float32)),
+        p_dyn=jnp.asarray(r.uniform(1, 10, m).astype(np.float32)),
+        p_idle=jnp.asarray(r.uniform(0.1, 1, m).astype(np.float32)),
+        suffered=jnp.asarray(r.integers(0, 2, s).astype(bool)),
+    )
+    raw["qlen"] = (raw["queue"] >= 0).sum(axis=1).astype(jnp.int32)
+
+    def make(pol):
+        def f(now, pending, task_type, deadline, avail_base, queue, qlen,
+              eet, p_dyn, p_idle, suffered):
+            ctx = SchedContext(
+                now=now, pending=pending, task_type=task_type,
+                deadline=deadline,
+                view=MachineView(avail_base, queue, qlen),
+                sysarr=SystemArrays(eet=eet, p_dyn=p_dyn, p_idle=p_idle),
+                suffered=suffered)
+            act = pol.select(ctx)
+            return act.assign, act.drop, act.queue_drop
+        return jax.jit(f)
+
+    order = ("now", "pending", "task_type", "deadline", "avail_base",
+             "queue", "qlen", "eet", "p_dyn", "p_idle", "suffered")
+    args = tuple(raw[k] for k in order)
+    lax_fn = make(policy.get(heuristic))
+    fused_fn = make(policy.with_pallas_map(heuristic, interpret=interpret))
+    return lax_fn, fused_fn, args
+
+
+def perf_fused_map(*, shapes=((100, 8), (1000, 64), (10000, 512))) -> dict:
+    """Lax-vs-fused warm wall clock of the map decision over (N x M).
+
+    Per shape, jits the full FELARE ``select`` (context rebuild + decision)
+    both ways on identical random inputs, asserts output parity, then
+    times warm calls. On CPU the fused path runs the Pallas kernels in
+    interpret mode — parity is still asserted but the timing comparison
+    would measure the interpreter, so rows carry ``status: "skipped"``
+    and no speedup is claimed (the 1.5x gate only reads ``"ok"`` rows).
+    """
+    import time as _time
+
+    import jax
+    import numpy as np
+
+    from repro.kernels import pallas_backend
+
+    interpret = pallas_backend.default_interpret()
+    mode = "interpret" if interpret else "compiled"
+    rows = []
+    for n, m in shapes:
+        lax_fn, fused_fn, args = _fused_map_pair(n, m, interpret=interpret)
+        out_lax = jax.block_until_ready(lax_fn(*args))
+        out_fused = jax.block_until_ready(fused_fn(*args))
+        parity = all(np.array_equal(np.asarray(a), np.asarray(b))
+                     for a, b in zip(out_lax, out_fused))
+        row = {"n_tasks": n, "n_machines": m, "mode": mode,
+               "parity": bool(parity)}
+        if interpret:
+            row["status"] = "skipped"
+        else:
+            reps = max(3, min(100, int(2e6 / (n * m))))
+            timed = {}
+            for tag, fn in (("lax", lax_fn), ("fused", fused_fn)):
+                jax.block_until_ready(fn(*args))
+                t0 = _time.perf_counter()
+                for _ in range(reps):
+                    out = fn(*args)
+                jax.block_until_ready(out)
+                timed[tag] = (_time.perf_counter() - t0) / reps
+            row.update({
+                "status": "ok", "reps": reps,
+                "lax_warm_s": round(timed["lax"], 6),
+                "fused_warm_s": round(timed["fused"], 6),
+                "speedup": round(timed["lax"] / timed["fused"], 3),
+            })
+        rows.append(row)
+    return {
+        "bench": "fused_map",
+        "config": {"heuristic": "FELARE", "mode": mode},
+        "shapes": rows,
+        "parity_all": all(r["parity"] for r in rows),
+    }
+
+
+def fused_parity_smoke() -> bool:
+    """Quick lax-vs-fused parity check (the CI pre-gate smoke).
+
+    Select-level parity at two shapes plus a dispatcher balance-scan
+    parity row; returns False on any mismatch. Runs in interpret mode on
+    CPU so CI exercises the exact kernel bodies the compiled path runs.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.dispatch.base import DispatchContext, sequential_balance
+    from repro.kernels import map_fused, pallas_backend
+
+    interpret = pallas_backend.default_interpret()
+    ok = True
+    for n, m in ((100, 8), (130, 129)):
+        lax_fn, fused_fn, args = _fused_map_pair(n, m, interpret=interpret,
+                                                 seed=n)
+        out_lax = jax.block_until_ready(lax_fn(*args))
+        out_fused = jax.block_until_ready(fused_fn(*args))
+        good = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(out_lax, out_fused))
+        print(f"  select parity N={n} M={m}: {'ok' if good else 'MISMATCH'}")
+        ok = ok and good
+
+    r = np.random.default_rng(7)
+    n, m, f, s = 90, 12, 3, 4
+    site = np.sort(np.r_[np.arange(f), r.integers(0, f, m - f)])
+    ctx = DispatchContext(
+        now=jnp.float32(10.0),
+        unassigned=jnp.asarray(r.integers(0, 2, n).astype(bool)),
+        task_type=jnp.asarray(r.integers(0, s, n).astype(np.int32)),
+        deadline=jnp.asarray(r.uniform(0, 120, n).astype(np.float32)),
+        qlen=jnp.asarray(r.integers(0, 3, m).astype(np.int32)),
+        running=jnp.asarray(r.integers(0, 2, m).astype(bool)),
+        completed=jnp.asarray(r.integers(0, 20, s).astype(np.int32)),
+        arrived=jnp.asarray(r.integers(20, 40, s).astype(np.int32)),
+        eet=jnp.asarray(r.uniform(0.5, 20, (s, m)).astype(np.float32)),
+        site_of_machine=site,
+        n_sites=f,
+        fairness_factor=1.0,
+        alive=None,
+    )
+    target = jnp.asarray(r.integers(0, 2, n).astype(bool))
+    home = jnp.asarray(r.integers(0, f, n).astype(np.int32))
+    want = np.asarray(sequential_balance(ctx, target, home))
+    got = np.asarray(sequential_balance(
+        ctx, target, home,
+        lambda l0, un, tgt, hm: map_fused.balance_scan(
+            l0, un, tgt, hm, interpret=interpret)))
+    good = np.array_equal(want, got)
+    print(f"  balance parity N={n} F={f}: {'ok' if good else 'MISMATCH'}")
+    return ok and good
+
+
+def write_perf_artifact(outdir, baseline=None,
+                        allow_new_rows=False) -> pathlib.Path:
     """Run the perf benches and write the next ``BENCH_<n>.json`` in outdir.
 
     With ``baseline`` (a prior BENCH_*.json, e.g. the checked-in
@@ -234,10 +403,15 @@ def write_perf_artifact(outdir, baseline=None) -> pathlib.Path:
     payload = perf_vmapped_sweep()
     payload["federation_scaling"] = perf_federation_scaling()
     payload["tiered_sweep"] = perf_tiered_sweep()
+    payload["fused_map"] = perf_fused_map()
     path.write_text(json.dumps(payload, indent=2))
     print(json.dumps(payload, indent=2))
     print(f"wrote {path}")
-    if baseline and not compare_to_baseline(payload, baseline):
+    if not payload["fused_map"]["parity_all"]:
+        print("FAIL: fused map kernel disagrees with the lax path")
+        raise SystemExit(1)
+    if baseline and not compare_to_baseline(payload, baseline,
+                                            allow_new_rows=allow_new_rows):
         raise SystemExit(1)
     return path
 
@@ -246,14 +420,19 @@ def write_perf_artifact(outdir, baseline=None) -> pathlib.Path:
 WARM_TOLERANCE = 1.5
 
 
-def compare_to_baseline(payload: dict, baseline) -> bool:
+def compare_to_baseline(payload: dict, baseline,
+                        allow_new_rows: bool = False) -> bool:
     """Compare warm times of ``payload`` vs a baseline BENCH JSON.
 
     Returns False (the CI-blocking verdict) when any matched
     configuration — observer rows of the vmapped sweep, per-F rows of the
-    federation scaling bench — regresses past ``WARM_TOLERANCE`` x its
-    baseline warm time. A missing baseline file passes (first run on a
-    fresh checkout).
+    federation scaling bench, timed ``fused_map`` rows — regresses past
+    ``WARM_TOLERANCE`` x its baseline warm time, or when a payload row
+    has no baseline counterpart: a silently unmatched row is an ungated
+    benchmark, so new rows fail loudly until either the baseline is
+    refreshed or ``allow_new_rows`` opts them in (the ``--allow-new-rows``
+    flag, for the PR that introduces a bench). A missing baseline file
+    passes (first run on a fresh checkout).
     """
     baseline = pathlib.Path(baseline)
     if not baseline.exists():
@@ -261,10 +440,13 @@ def compare_to_baseline(payload: dict, baseline) -> bool:
         return True
     base = json.loads(baseline.read_text())
     ok = True
+    new_rows = []
 
-    def check(tag, warm, ref_warm):
+    def check(tag, warm, ref):
         nonlocal ok
+        ref_warm = ref.get("warm_s") if ref else None
         if not ref_warm:
+            new_rows.append(tag)
             return
         ratio = warm / ref_warm
         bad = ratio > WARM_TOLERANCE
@@ -277,26 +459,36 @@ def compare_to_baseline(payload: dict, baseline) -> bool:
     print(f"\nwarm-time vs baseline {baseline} "
           f"(blocking at {WARM_TOLERANCE}x):")
     for row in payload["simulate_batch"]:
-        ref = base_by_obs.get(tuple(row["observers"]))
-        if ref:
-            check("observers=" + (",".join(row["observers"]) or "off"),
-                  row["warm_s"], ref.get("warm_s"))
+        check("observers=" + (",".join(row["observers"]) or "off"),
+              row["warm_s"], base_by_obs.get(tuple(row["observers"])))
     fed = payload.get("federation_scaling", {}).get("sites", ())
     base_by_f = {r["n_sites"]: r
                  for r in base.get("federation_scaling", {})
                              .get("sites", ())}
     for row in fed:
-        ref = base_by_f.get(row["n_sites"])
-        if ref:
-            check(f"federation F={row['n_sites']}", row["warm_s"],
-                  ref.get("warm_s"))
+        check(f"federation F={row['n_sites']}", row["warm_s"],
+              base_by_f.get(row["n_sites"]))
     tiered = payload.get("tiered_sweep")
-    base_tiered = base.get("tiered_sweep")
-    if tiered and base_tiered:
+    if tiered:
         check("tiered_x4 network=tiered", tiered["warm_s"],
-              base_tiered.get("warm_s"))
+              base.get("tiered_sweep"))
+    base_by_nm = {(r["n_tasks"], r["n_machines"]): r
+                  for r in base.get("fused_map", {}).get("shapes", ())
+                  if r.get("status") == "ok"}
+    for row in payload.get("fused_map", {}).get("shapes", ()):
+        if row.get("status") != "ok":
+            continue  # interpret-mode parity-only rows carry no timing
+        key = (row["n_tasks"], row["n_machines"])
+        check(f"fused_map N={key[0]} M={key[1]}", row["fused_warm_s"],
+              base_by_nm.get(key))
+    if new_rows and not allow_new_rows:
+        ok = False
+        for tag in new_rows:
+            print(f"  {tag:40s} NO BASELINE ROW")
+        print("FAIL: benchmark rows missing from the baseline — refresh "
+              "the checked-in BENCH json or pass --allow-new-rows")
     if not ok:
-        print(f"FAIL: warm time regressed past {WARM_TOLERANCE}x baseline")
+        print(f"FAIL: perf gate vs {WARM_TOLERANCE}x baseline")
     return ok
 
 
@@ -313,10 +505,25 @@ def main() -> None:
                          "prior BENCH_<n>.json (e.g. the checked-in "
                          "benchmarks/BENCH_1.json) and exit nonzero past "
                          f"{WARM_TOLERANCE}x (the blocking CI gate)")
+    ap.add_argument("--allow-new-rows", action="store_true",
+                    help="with --perf-baseline: tolerate payload rows with "
+                         "no baseline counterpart (for the PR introducing a "
+                         "bench) instead of failing loudly")
+    ap.add_argument("--fused-parity-smoke", action="store_true",
+                    help="run only the fused-vs-lax kernel parity smoke "
+                         "(the CI step ahead of the blocking perf gate) and "
+                         "exit nonzero on mismatch")
     args = ap.parse_args()
 
+    if args.fused_parity_smoke:
+        print("fused-vs-lax parity smoke:")
+        if not fused_parity_smoke():
+            raise SystemExit(1)
+        return
+
     if args.perf_out:
-        write_perf_artifact(args.perf_out, baseline=args.perf_baseline)
+        write_perf_artifact(args.perf_out, baseline=args.perf_baseline,
+                            allow_new_rows=args.allow_new_rows)
         return
 
     from benchmarks import ablations, paper_figures, roofline_report
@@ -324,6 +531,7 @@ def main() -> None:
     benches = dict(paper_figures.ALL)
     benches.update(ablations.ALL)
     benches["roofline_table"] = roofline_report.main
+    benches["roofline_map_stage"] = roofline_report.map_stage
 
     print("name,us_per_call,derived")
     blocks = []

@@ -60,10 +60,13 @@ def _path_str(name: str, path: Tuple[int, ...]) -> str:
 class FlatnessCheck:
     """JX101: primitive-multiset equality of the simulator across F.
 
-    Two fleet groups are compared independently (programs are only
-    expected to match *within* a group): the flat federation pair, and
-    the tiered pair with the network subsystem attached — the transfer
-    arithmetic must be as site-count-flat as the rest of the loop.
+    Three fleet groups are compared independently (programs are only
+    expected to match *within* a group): the flat federation pair, the
+    tiered pair with the network subsystem attached — the transfer
+    arithmetic must be as site-count-flat as the rest of the loop — and
+    the federation pair again on the fused Pallas map/balance path,
+    whose lane-padded kernels must keep the grid shape (and so the
+    program) independent of the machine count.
     """
 
     name: str = "jaxpr-flatness"
@@ -75,8 +78,10 @@ class FlatnessCheck:
     tiered_fleets: Tuple[str, ...] = ("tiered_x4", "tiered_x16")
     tiered_dispatcher: str = "tier_aware"
     tiered_network: str = "tiered"
+    pallas_fleets: Tuple[str, ...] = ("paper_x2", "paper_x32")
 
-    def _compare_group(self, fleets, dispatcher, network) -> List[Finding]:
+    def _compare_group(self, fleets, dispatcher, network,
+                       pallas_map=False) -> List[Finding]:
         import jax
 
         from repro.roofline.jaxpr_walk import count_eqns, primitive_counts
@@ -86,7 +91,8 @@ class FlatnessCheck:
         for fleet in fleets:
             fn, args = simulator_program(
                 fleet=fleet, heuristic=self.heuristic,
-                dispatcher=dispatcher, network=network)
+                dispatcher=dispatcher, network=network,
+                pallas_map=pallas_map)
             jx = jax.make_jaxpr(fn)(*args).jaxpr
             stats = (fleet, count_eqns(jx), primitive_counts(jx))
             if baseline is None:
@@ -118,6 +124,8 @@ class FlatnessCheck:
         out = self._compare_group(self.fleets, self.dispatcher, None)
         out += self._compare_group(
             self.tiered_fleets, self.tiered_dispatcher, self.tiered_network)
+        out += self._compare_group(
+            self.pallas_fleets, self.dispatcher, None, pallas_map=True)
         return out
 
 

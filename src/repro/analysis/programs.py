@@ -28,6 +28,8 @@ DEFAULT_PROGRAMS: Tuple[Tuple[str, dict], ...] = (
         fleet="tiered_x4", heuristic="FELARE",
         dispatcher="tier_aware", network="tiered",
         observers=("network", "task_log"))),
+    ("paper_x2/FELARE+pallas", dict(
+        fleet="paper_x2", heuristic="FELARE", pallas_map=True)),
 )
 
 
@@ -36,8 +38,17 @@ def simulator_program(fleet: str = "paper_x2", heuristic: str = "FELARE",
                       observers: Sequence[str] = (),
                       dynamics: str | None = None,
                       network: str | None = None,
+                      pallas_map: bool = False,
                       n_tasks: int = 24, seed: int = 0, rate: float = 4.0):
-    """Build ``(simulate, (trace,))`` for one engine configuration."""
+    """Build ``(simulate, (trace,))`` for one engine configuration.
+
+    ``pallas_map=True`` routes the map decision and the dispatcher's
+    balance scan through the fused Pallas kernels
+    (:func:`repro.core.policy.with_pallas_map` /
+    :func:`repro.core.dispatch.with_pallas_balance`) — the same toggle as
+    ``SweepSpec.use_pallas_map`` — so the audit covers the kernel path's
+    dtypes/effects/flatness too.
+    """
     import jax
 
     from repro import scenarios
@@ -45,11 +56,16 @@ def simulator_program(fleet: str = "paper_x2", heuristic: str = "FELARE",
     from repro.core import network as network_mod
 
     system = scenarios.get_fleet(fleet).build()
+    pol = policy.get(heuristic)
+    disp = dispatch.resolve(dispatcher)
+    if pallas_map:
+        pol = policy.with_pallas_map(pol)
+        disp = dispatch.with_pallas_balance(disp)
     sim = engine.make_simulator(
-        policy.get(heuristic), system.as_jax(),
+        pol, system.as_jax(),
         queue_size=system.queue_size,
         fairness_factor=float(system.fairness_factor),
-        dispatcher=dispatch.resolve(dispatcher),
+        dispatcher=disp,
         site_of_machine=system.sites,
         observers=observe.resolve(observers),
         dynamics=faults.resolve(dynamics) if dynamics is not None else None,

@@ -74,6 +74,7 @@ __all__ = [
     "sequential_balance",
     "to_json_dict",
     "unregister",
+    "with_pallas_balance",
 ]
 
 #: JSON ``kind`` -> built-in dispatcher class, for spec round-tripping.
@@ -116,14 +117,50 @@ def describe(name_or_dispatcher) -> str:
 
 
 def to_json_dict(dispatcher) -> dict:
-    """``{"kind": ..., <param>: ...}`` for a built-in-style dispatcher."""
+    """``{"kind": ..., <param>: ...}`` for a built-in-style dispatcher.
+
+    Ephemeral callable fields (``balance_impl`` — the fused-kernel hook)
+    are skipped: a serialized spec round-trips to the default lax scan,
+    and the runner re-applies ``with_pallas_balance`` from its own flag.
+    """
     import dataclasses
 
     d = resolve(dispatcher)
     out = {"kind": d.kind}
     for f in dataclasses.fields(d):
-        out[f.name] = getattr(d, f.name)
+        v = getattr(d, f.name)
+        if v is None or callable(v):
+            continue
+        out[f.name] = v
     return out
+
+
+def with_pallas_balance(dispatcher, interpret=None) -> Dispatcher:
+    """Swap a dispatcher's sequential balance scan onto the fused Pallas
+    kernel (``kernels/map_fused.balance_scan``), bit-exact with the lax
+    ``lax.scan`` walk.
+
+    No-op for dispatchers without a ``balance_impl`` hook (``sticky``,
+    ``round_robin``, ``min_eet``, ``tier_aware`` never run the scan).
+    ``interpret=None`` resolves the backend once, at construction
+    (compiled on TPU/GPU, interpreter on CPU, env override
+    ``REPRO_PALLAS_INTERPRET``) — mirroring ``policy.with_pallas_map``.
+    """
+    import dataclasses
+    import functools
+
+    d = resolve(dispatcher)
+    if (not dataclasses.is_dataclass(d)
+            or "balance_impl" not in {f.name for f in dataclasses.fields(d)}):
+        return d
+    if interpret is None:
+        from repro.kernels.pallas_backend import default_interpret
+
+        interpret = default_interpret()
+    from repro.kernels.map_fused import balance_scan
+
+    impl = functools.partial(balance_scan, interpret=bool(interpret))
+    return dataclasses.replace(d, balance_impl=impl)
 
 
 def from_json_dict(d: dict) -> Dispatcher:

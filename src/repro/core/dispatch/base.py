@@ -163,7 +163,8 @@ class Dispatcher(Protocol):
     def dispatch(self, ctx: DispatchContext) -> jnp.ndarray: ...
 
 
-def sequential_balance(ctx: DispatchContext, target_mask, home) -> jnp.ndarray:
+def sequential_balance(ctx: DispatchContext, target_mask, home,
+                       impl=None) -> jnp.ndarray:
     """Shared least-loaded assignment scan (``least_queued``/``fair_spill``).
 
     Walks tasks in index (arrival) order carrying per-site loads: each
@@ -177,6 +178,12 @@ def sequential_balance(ctx: DispatchContext, target_mask, home) -> jnp.ndarray:
     dead sites enter the scan with a +1_000_000 load penalty, so the
     least-loaded choice never lands on a site with zero healthy machines
     while any site is still up (integer penalty — still oracle-exact).
+
+    ``impl`` optionally replaces the ``lax.scan`` walk with a fused
+    implementation sharing the same contract
+    (``impl(load0, unassigned, target_mask, home) -> (N,) int32 sites``)
+    — the Pallas ``kernels/map_fused.balance_scan`` kernel plugs in here
+    via :func:`repro.core.dispatch.with_pallas_balance`, bit-exact.
     """
     F = ctx.n_sites
     lanes = jnp.arange(F, dtype=jnp.int32)
@@ -184,6 +191,9 @@ def sequential_balance(ctx: DispatchContext, target_mask, home) -> jnp.ndarray:
     sa = ctx.site_alive
     if sa is not None:
         load0 = load0 + jnp.where(sa, 0, 1_000_000)
+
+    if impl is not None:
+        return impl(load0, ctx.unassigned, target_mask, home)
 
     def step(load, xs):
         new_k, tgt_k, home_k = xs

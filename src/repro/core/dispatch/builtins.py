@@ -13,6 +13,7 @@ differ in how the one-shot choice is made.
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
@@ -72,14 +73,19 @@ class LeastQueued:
     Simultaneous admissions are balanced sequentially in arrival order
     (each dispatched task counts toward its site's load before the next
     task chooses), so a burst spreads across sites instead of
-    dog-piling the momentarily-emptiest one."""
+    dog-piling the momentarily-emptiest one.
+
+    ``balance_impl`` optionally swaps the balance scan onto a fused
+    implementation (the Pallas kernel, via ``with_pallas_balance``);
+    ephemeral (not serialized), the lax scan is the default."""
 
     kind = "least_queued"
+    balance_impl: Optional[Callable] = None
 
     def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
         all_spill = jnp.ones((ctx.n_tasks,), bool)
         home = jnp.zeros((ctx.n_tasks,), jnp.int32)
-        return sequential_balance(ctx, all_spill, home)
+        return sequential_balance(ctx, all_spill, home, self.balance_impl)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,11 +117,12 @@ class FairSpill:
 
     kind = "fair_spill"
     salt: int = 0
+    balance_impl: Optional[Callable] = None
 
     def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
         home = _hash_sites(ctx.n_tasks, ctx.n_sites, self.salt)
         spill = ctx.suffered[ctx.task_type]
-        return sequential_balance(ctx, spill, home)
+        return sequential_balance(ctx, spill, home, self.balance_impl)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,6 +165,7 @@ class HealthAware:
 
     kind = "health_aware"
     salt: int = 0
+    balance_impl: Optional[Callable] = None
 
     def dispatch(self, ctx: DispatchContext) -> jnp.ndarray:
         home = _hash_sites(ctx.n_tasks, ctx.n_sites, self.salt)
@@ -165,4 +173,4 @@ class HealthAware:
         if sa is None:
             return home
         reroute = ~sa[home]
-        return sequential_balance(ctx, reroute, home)
+        return sequential_balance(ctx, reroute, home, self.balance_impl)

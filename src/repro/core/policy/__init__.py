@@ -11,7 +11,10 @@ All eight paper heuristics are one-to-three-line compositions (see the
 table in ``docs/heuristics.md``), registered by name in a mutable,
 case-insensitive registry consumed by the engine, the pyengine oracle, the
 experiments subsystem and the CLI. The Pallas ``phase1_map`` kernel plugs
-in as a first-class nominator implementation via ``with_pallas_phase1``.
+in as a first-class nominator implementation via ``with_pallas_phase1``;
+``with_pallas_map`` goes further and fuses the *whole* per-event map
+decision (Phase-I + Phase-II + drop + fairness eviction stats) into one
+``kernels/map_fused`` pass, bit-exact with the lax path.
 """
 from __future__ import annotations
 
@@ -46,6 +49,7 @@ from repro.core.policy.context import (
     queued_eet,
 )
 from repro.core.policy.fair import FairnessPolicy, with_fairness
+from repro.core.policy.fused import FusedMapPolicy, supports_fused_map
 from repro.core.policy.registry import (
     get,
     is_registered,
@@ -61,6 +65,7 @@ __all__ = [
     "DropStaleAndHopeless",
     "FairnessPolicy",
     "Fcfs",
+    "FusedMapPolicy",
     "MachineView",
     "MaxUrgency",
     "MinCompletion",
@@ -85,8 +90,10 @@ __all__ = [
     "phase2",
     "queued_eet",
     "register",
+    "supports_fused_map",
     "unregister",
     "with_fairness",
+    "with_pallas_map",
     "with_pallas_phase1",
 ]
 
@@ -109,17 +116,59 @@ def describe(name_or_policy) -> PolicyDesc:
     return fn()
 
 
-def with_pallas_phase1(pol: Policy) -> Policy:
+def with_pallas_phase1(pol: Policy, interpret=None) -> Policy:
     """Swap a policy's Phase-I onto the fused Pallas ``phase1_map`` kernel.
 
     No-op for policies whose nominator has no fused implementation hook
     (matching the legacy behaviour where only ELARE/FELARE had one).
+    The backend (compiled vs interpreter) is resolved here, once, at
+    construction — never inside the jitted select (JD003).
     """
     if not getattr(pol, "supports_phase1_impl", False):
         return pol
+    import functools
+
+    from repro.kernels.pallas_backend import default_interpret
     from repro.kernels.phase1_map.ops import phase1_map
 
-    return pol.with_phase1_impl(phase1_map)
+    if interpret is None:
+        interpret = default_interpret()
+    return pol.with_phase1_impl(
+        functools.partial(phase1_map, interpret=bool(interpret))
+    )
+
+
+def with_pallas_map(pol: Policy, interpret=None) -> Policy:
+    """Run a policy's whole map decision as one fused Pallas kernel pass.
+
+    Wraps composed policies (``TwoPhasePolicy``, fairness- and
+    backup-wrapped variants) in :class:`FusedMapPolicy`; the lax path
+    stays the default everywhere else. No-op for policies outside the
+    kernel's kind space (custom nominators/keys/drops) or opaque
+    callables, mirroring :func:`with_pallas_phase1`.
+
+    ``interpret=None`` resolves the backend once, here at construction
+    (:func:`repro.kernels.pallas_backend.default_interpret`): compiled on
+    TPU/GPU, interpreter on CPU, env override ``REPRO_PALLAS_INTERPRET``.
+    """
+    import dataclasses as _dc
+
+    from repro.core.faults.backup import BackupPolicy
+
+    if isinstance(pol, str):
+        pol = get(pol)
+    if isinstance(pol, BackupPolicy):
+        # Mapping is pure delegation there; the engine reads backup_k off
+        # the outer wrapper, so rewrap the inner policy and keep k.
+        return _dc.replace(pol, base=with_pallas_map(pol.base, interpret))
+    fn = getattr(pol, "describe", None)
+    if fn is None or not supports_fused_map(fn()):
+        return pol
+    if interpret is None:
+        from repro.kernels.pallas_backend import default_interpret
+
+        interpret = default_interpret()
+    return FusedMapPolicy(pol, bool(interpret))
 
 
 # --------------------------------------------------------------------------

@@ -45,15 +45,26 @@ def _plan_eviction(ctx: SchedContext) -> jnp.ndarray:
     machine). Victims are non-suffered queued tasks, taken tail-first from
     the target's fastest machine while the target still does not fit.
     """
-    M, Q = ctx.view.queue.shape
     s, e, d = ctx.start_grid, ctx.exec_grid, ctx.deadline[:, None]
-
     feas_now = equations.feasible(s, e, d) & ctx.pending[:, None]
     task_feas_now = jnp.any(feas_now & ctx.qfree[None, :], axis=1)
+    return _plan_eviction_from_stats(ctx, task_feas_now, ctx.min_exec)
+
+
+def _plan_eviction_from_stats(ctx: SchedContext, task_feas_now, min_exec):
+    """Eviction plan from precomputed per-task grid reductions.
+
+    ``task_feas_now`` (N,) bool and ``min_exec`` (N,) f32 are the only two
+    quantities :func:`_plan_eviction` derives from the (N, M) grid — the
+    fused kernel path (``kernels/map_fused.evict_stats``) computes them in
+    one pass and re-enters here, so the target/victim selection below is
+    shared verbatim between the lax and kernel paths.
+    """
+    M, Q = ctx.view.queue.shape
     rescuable = (
         ctx.suffered_tasks
         & ~task_feas_now
-        & (ctx.now + ctx.min_exec <= ctx.deadline)
+        & (ctx.now + min_exec <= ctx.deadline)
     )
     cand_key = jnp.where(rescuable, ctx.deadline, BIG)
     tgt = jnp.argmin(cand_key).astype(jnp.int32)
@@ -84,6 +95,15 @@ def _plan_eviction(ctx: SchedContext) -> jnp.ndarray:
     return jnp.zeros((M, Q), bool).at[mstar].set(evict)
 
 
+def _evicted_view(ctx: SchedContext, qdrop) -> MachineView:
+    """The post-eviction machine view the base policy re-runs against."""
+    return MachineView(
+        avail_base=ctx.view.avail_base,
+        queue=jnp.where(qdrop, jnp.int32(-1), ctx.view.queue),
+        qlen=ctx.view.qlen - qdrop.sum(axis=1).astype(ctx.view.qlen.dtype),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class FairnessPolicy:
     """A two-phase policy wrapped with the Sec. V fairness mechanisms."""
@@ -94,13 +114,7 @@ class FairnessPolicy:
         qdrop = _plan_eviction(ctx)
 
         # Re-run the base policy's Phase-I against post-eviction state.
-        view2 = MachineView(
-            avail_base=ctx.view.avail_base,
-            queue=jnp.where(qdrop, jnp.int32(-1), ctx.view.queue),
-            qlen=ctx.view.qlen
-            - qdrop.sum(axis=1).astype(ctx.view.qlen.dtype),
-        )
-        ctx2 = ctx.with_view(view2)
+        ctx2 = ctx.with_view(_evicted_view(ctx, qdrop))
         nom = self.base.nominator.nominate(ctx2)
         nominee = nom.grid(ctx2)
         key = jnp.broadcast_to(

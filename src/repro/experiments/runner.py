@@ -34,21 +34,27 @@ _TRACE_LOG: list = []
 _TRACE_LOG_MAX = 256
 
 
-def _select_fns(names, use_pallas: bool):
-    """Resolve policy names through the registry, with the Pallas toggle.
+def _select_fns(names, use_pallas: bool, use_pallas_map: bool = False):
+    """Resolve policy names through the registry, with the Pallas toggles.
 
     When ``use_pallas`` is set, every policy whose nominator has a fused
     Phase-I hook (built-ins: ELARE/FELARE) is swapped onto the Pallas
     ``phase1_map`` kernel nominator; other policies are unaffected.
+    ``use_pallas_map`` instead fuses the whole map decision
+    (``policy.with_pallas_map``); applied after the phase1 toggle, it
+    wins wherever both could apply (the fused kernel subsumes phase1).
     """
     pols = [policy.get(name) for name in names]
     if use_pallas:
         pols = [policy.with_pallas_phase1(p) for p in pols]
+    if use_pallas_map:
+        pols = [policy.with_pallas_map(p) for p in pols]
     return pols
 
 
 def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
                    *, use_pallas_phase1: bool = False,
+                   use_pallas_map: bool = False,
                    max_steps=None, trace_label: str = "",
                    observers=(), dispatcher=None, dynamics=None,
                    network=None, shard: bool = False):
@@ -61,6 +67,10 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
         partition (if any) federates the machines into sites.
       heuristic_names: sequence of H heuristic names.
       use_pallas_phase1: route ELARE Phase-I through the Pallas kernel.
+      use_pallas_map: fuse the whole map decision into the Pallas
+        ``map_fused`` kernel for every policy in its kind space, and the
+        dispatcher's balance scan into the fused scan kernel — bit-exact
+        with the lax path (``tests/test_map_fused.py``).
       max_steps: optional per-trace event cap (``None`` = engine default).
       trace_label: annotation recorded next to each heuristic in the
         module's trace log (``run_sweep`` passes the scenario name).
@@ -102,6 +112,8 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
 
     obs = observe.resolve(observers)
     disp = dispatch_mod.resolve(dispatcher)
+    if use_pallas_map:
+        disp = dispatch_mod.with_pallas_balance(disp)
     disp_label = (dispatcher if isinstance(dispatcher, str)
                   else getattr(disp, "kind", type(disp).__name__))
     dyn = faults_mod.resolve(dynamics)
@@ -122,7 +134,8 @@ def simulate_sweep(traces: Trace, system: SystemSpec, heuristic_names,
             dynamics=dyn, network=net,
             tier_of_site=getattr(system, "tiers", None),
         )
-        for fn in _select_fns(heuristic_names, use_pallas_phase1)
+        for fn in _select_fns(heuristic_names, use_pallas_phase1,
+                              use_pallas_map)
     ]
 
     def run_all(tr):
@@ -191,7 +204,8 @@ def run_sweep(spec: SweepSpec, *, shard: bool = False) -> SweepResult:
     observers = spec.resolve_observers()
     out = simulate_sweep(
         flat, system, spec.heuristics,
-        use_pallas_phase1=spec.use_pallas_phase1, max_steps=spec.max_steps,
+        use_pallas_phase1=spec.use_pallas_phase1,
+        use_pallas_map=spec.use_pallas_map, max_steps=spec.max_steps,
         trace_label=label, observers=observers, dispatcher=spec.dispatcher,
         dynamics=spec.dynamics, network=spec.network, shard=shard,
     )

@@ -87,6 +87,13 @@ class SweepSpec:
         (`repro.kernels.phase1_map`) for every policy whose nominator has a
         fused-implementation hook (built-ins: ELARE and FELARE); other
         policies are unaffected.
+      use_pallas_map: route the *whole* map decision (Phase-I + Phase-II
+        + drop + fairness eviction stats) through the fused Pallas kernel
+        (`repro.kernels.map_fused`) for every policy inside the kernel's
+        kind space (all 8 built-ins and their fairness/backup wrappers),
+        and the dispatcher's balance scan through the fused scan kernel;
+        bit-exact with the lax path. Mutually composable with
+        ``use_pallas_phase1`` (the map kernel wins where both apply).
       max_steps: optional hard cap on simulator events per trace (mostly
         for tests); ``None`` uses the engine default of ``8 * N + 64``.
       observers: engine observers to attach — registered names
@@ -130,6 +137,7 @@ class SweepSpec:
     queue_size: Optional[int] = None
     fairness_factor: Optional[float] = None
     use_pallas_phase1: bool = False
+    use_pallas_map: bool = False
     max_steps: Optional[int] = None
     scenario: Union[str, "object"] = "poisson"  # name or scenarios.Scenario
     observers: tuple = ()  # names or observe.Observer instances
@@ -374,6 +382,7 @@ class SweepSpec:
             "queue_size": self.queue_size,
             "fairness_factor": self.fairness_factor,
             "use_pallas_phase1": self.use_pallas_phase1,
+            "use_pallas_map": self.use_pallas_map,
             "max_steps": self.max_steps,
         }
 
@@ -436,6 +445,7 @@ class SweepSpec:
             queue_size=d.get("queue_size"),
             fairness_factor=d.get("fairness_factor"),
             use_pallas_phase1=bool(d.get("use_pallas_phase1", False)),
+            use_pallas_map=bool(d.get("use_pallas_map", False)),
             max_steps=d.get("max_steps"),
         )
 

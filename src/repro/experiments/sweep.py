@@ -106,6 +106,11 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
                     help="Eq. 3 fairness factor f (default: system's own)")
     ap.add_argument("--pallas-phase1", action="store_true",
                     help="route ELARE Phase-I through the Pallas kernel")
+    ap.add_argument("--pallas-map", action="store_true",
+                    help="fuse the whole map decision (Phase-I + Phase-II "
+                         "+ drop + fairness eviction stats) and the "
+                         "dispatch balance scan into the Pallas map_fused "
+                         "kernels; bit-exact with the lax path")
     ap.add_argument("--shard", action="store_true",
                     help="shard the (rate x replicate) trace batch across "
                          "every visible device (shard_map); bit-identical "
@@ -202,6 +207,7 @@ def build_spec(argv=None) -> tuple[SweepSpec, argparse.Namespace]:
             queue_size=args.queue_size,
             fairness_factor=args.fairness_factor,
             use_pallas_phase1=args.pallas_phase1,
+            use_pallas_map=args.pallas_map,
             observers=observers,
             dispatcher=args.dispatcher,
             dynamics=args.dynamics,

@@ -1,0 +1,24 @@
+"""Fused Pallas map-decision kernels: the whole per-event scheduling
+decision as one tiled, VMEM-resident pass over the (N x M) EET grid.
+
+Three kernels (see :mod:`repro.kernels.map_fused.kernel`):
+
+  * ``map_decide`` — Eq. 1 completion / Eq. 2 energy feasibility,
+    Phase-I nomination, drop rules, and the Phase-II per-machine
+    running-argmin accumulation for the suffered/non-suffered nominee
+    split, in one grid pass;
+  * ``evict_stats`` — the per-task grid reductions the Sec. V fairness
+    eviction planner needs (feasible-now-anywhere, fastest EET);
+  * ``balance_scan`` — the dispatcher's sequential least-loaded
+    assignment scan over simultaneous admissions.
+
+Public wrappers (pad, call, unpad) live in
+:mod:`repro.kernels.map_fused.ops`; the policy- and dispatcher-level
+entry points are :func:`repro.core.policy.with_pallas_map` and
+:func:`repro.core.dispatch.with_pallas_balance`. The lax path remains
+the default; kernel-vs-lax bit-exactness is pinned by
+``tests/test_map_fused.py``.
+"""
+from repro.kernels.map_fused.ops import balance_scan, evict_stats, map_decide
+
+__all__ = ["balance_scan", "evict_stats", "map_decide"]

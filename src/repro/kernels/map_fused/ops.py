@@ -1,0 +1,147 @@
+"""Public wrappers for the fused map kernels: pad, call, unpad.
+
+Padding contracts (mirroring how the engine's masked site views present
+out-of-site machines, so padded lanes are *semantically* masked
+machines):
+
+  * machine lanes -> multiple of 128 (the TPU lane width): start=BIG,
+    p_dyn=0, qfree=0, eet columns=BIG;
+  * task rows -> multiple of ``BLOCK_N``: pending=0 (padded tasks can
+    never nominate, drop, or win a tie-break);
+  * EET type rows -> multiple of 8 (f32 sublane): BIG (never gathered —
+    padded task rows read type 0);
+  * site lanes (``balance_scan``) -> multiple of 128: load=``BIG_INT``
+    (never win the least-loaded argmin).
+
+Callers pass the *unpadded* engine arrays; outputs come back unpadded.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.map_fused.kernel import (
+    BIG,
+    BIG_INT,
+    BLOCK_N,
+    DROP_KINDS,
+    KEY_KINDS,
+    NOMINATOR_KINDS,
+    balance_scan_padded,
+    evict_stats_padded,
+    map_decide_padded,
+)
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _pad_up(n: int, mult: int) -> int:
+    return max(mult, -(-n // mult) * mult)
+
+
+def _pad_machine_state(start, p_dyn, qfree, eet):
+    """Pad the lane (machine) and sublane (type) dims per the contract."""
+    S, M = eet.shape
+    Mp = _pad_up(M, _LANE)
+    Sp = _pad_up(S, _SUBLANE)
+    eet_p = jnp.full((Sp, Mp), BIG, jnp.float32).at[:S, :M].set(eet)
+    start_p = jnp.full((Mp,), BIG, jnp.float32).at[:M].set(start)
+    qfree_p = jnp.zeros((Mp,), jnp.int32).at[:M].set(
+        qfree.astype(jnp.int32))
+    pdyn_p = None
+    if p_dyn is not None:
+        pdyn_p = jnp.zeros((Mp,), jnp.float32).at[:M].set(p_dyn)
+    return start_p, pdyn_p, qfree_p, eet_p
+
+
+def _pad_tasks(deadline, *int_arrays):
+    """Pad task arrays to the tile size; integer arrays pad with 0."""
+    N = deadline.shape[0]
+    Np = _pad_up(N, BLOCK_N)
+    dl_p = jnp.zeros((Np,), jnp.float32).at[:N].set(deadline)
+    out = [dl_p]
+    for a in int_arrays:
+        out.append(jnp.zeros((Np,), jnp.int32).at[:N].set(
+            a.astype(jnp.int32)))
+    return out
+
+
+def map_decide(now, start, p_dyn, qfree, eet, deadline, pending, task_type,
+               suffered_task, *, nominator: str, phase2_key: str,
+               drop_rule: str, interpret: bool):
+    """One fused pass: drop mask + per-machine Phase-II running argmins.
+
+    Args mirror a :class:`~repro.core.policy.context.SchedContext`:
+    ``start`` is the (M,) post-queue start time ``max(avail, now)``,
+    ``qfree`` the (M,) free-slot mask, ``eet`` the (S, M) table,
+    ``suffered_task`` the (N,) suffered-pending mask (all-False for
+    non-fairness policies — the hi pool stays empty and the epilogue
+    reduces to plain Phase-II).
+
+    Returns ``(drop (N,) bool, hi_key (M,), hi_task (M,), lo_key (M,),
+    lo_task (M,))``; a machine with ``key < BIG`` has a nominee, whose
+    task index is the paired entry.
+    """
+    if nominator not in NOMINATOR_KINDS:
+        raise ValueError(f"unsupported nominator kind {nominator!r}")
+    if phase2_key not in KEY_KINDS:
+        raise ValueError(f"unsupported phase2 key kind {phase2_key!r}")
+    if drop_rule not in DROP_KINDS:
+        raise ValueError(f"unsupported drop rule kind {drop_rule!r}")
+    N = deadline.shape[0]
+    M = eet.shape[1]
+    start_p, pdyn_p, qfree_p, eet_p = _pad_machine_state(
+        start, p_dyn, qfree, eet)
+    dl_p, pend_p, tt_p, suff_p = _pad_tasks(
+        deadline, pending, task_type, suffered_task)
+    drop, hi_key, hi_task, lo_key, lo_task = map_decide_padded(
+        jnp.asarray(now, jnp.float32), start_p, pdyn_p, qfree_p, eet_p,
+        dl_p, pend_p, tt_p, suff_p, nominator=nominator,
+        phase2_key=phase2_key, drop_rule=drop_rule, n_machines=M,
+        interpret=interpret)
+    return (drop[:N, 0] != 0, hi_key[0, :M], hi_task[0, :M],
+            lo_key[0, :M], lo_task[0, :M])
+
+
+def evict_stats(start, qfree, eet, deadline, pending, task_type, *,
+                interpret: bool):
+    """Per-task eviction-planner stats over the pre-eviction grid.
+
+    Returns ``(task_feas_now (N,) bool, min_exec (N,) f32)`` — feasible
+    right now on some free machine, and the fastest EET of the task's
+    type — exactly the two grid reductions
+    ``core/policy/fair.py:_plan_eviction`` derives from the (N, M) grid.
+    """
+    N = deadline.shape[0]
+    start_p, _, qfree_p, eet_p = _pad_machine_state(
+        start, None, qfree, eet)
+    dl_p, pend_p, tt_p = _pad_tasks(deadline, pending, task_type)
+    feas, min_exec = evict_stats_padded(
+        start_p, qfree_p, eet_p, dl_p, pend_p, tt_p, interpret=interpret)
+    return feas[:N, 0] != 0, min_exec[:N, 0]
+
+
+def balance_scan(load0, unassigned, target, home, *, interpret: bool):
+    """The sequential least-loaded dispatch scan as one kernel call.
+
+    Contract matches the lax scan in
+    ``core/dispatch/base.py:sequential_balance``: ``load0`` (F,) i32
+    initial per-site loads (dead-site penalties already applied),
+    ``unassigned``/``target`` (N,) bool, ``home`` (N,) i32. Returns the
+    (N,) i32 site choice for every task.
+    """
+    N = unassigned.shape[0]
+    F = load0.shape[0]
+    Fp = _pad_up(F, _LANE)
+    Np = _pad_up(N, _LANE)
+    load_p = jnp.full((Fp,), BIG_INT, jnp.int32).at[:F].set(
+        load0.astype(jnp.int32))
+    new_p = jnp.zeros((Np,), jnp.int32).at[:N].set(
+        unassigned.astype(jnp.int32))
+    tgt_p = jnp.zeros((Np,), jnp.int32).at[:N].set(
+        target.astype(jnp.int32))
+    home_p = jnp.zeros((Np,), jnp.int32).at[:N].set(
+        home.astype(jnp.int32))
+    sites = balance_scan_padded(load_p, new_p, tgt_p, home_p, n_tasks=N,
+                                interpret=interpret)
+    return sites[0, :N]

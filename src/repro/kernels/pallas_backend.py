@@ -1,0 +1,47 @@
+"""Shared Pallas backend selection: compiled on TPU/GPU, interpret on CPU.
+
+Every Pallas kernel in this repo (``kernels/phase1_map``,
+``kernels/map_fused``) takes an ``interpret`` flag. Compiled Mosaic
+kernels only exist for accelerator backends; on a CPU-only host the
+same kernel body runs under the Pallas interpreter — slower, but
+bit-exact and testable anywhere. This module owns the one decision
+both kernels share:
+
+  * :func:`default_interpret` — ``True`` on CPU (interpreter),
+    ``False`` on TPU/GPU (compiled), overridable with the environment
+    variable ``REPRO_PALLAS_INTERPRET`` (``"1"`` forces the
+    interpreter, ``"0"`` forces compilation).
+
+The env read happens when the *caller* resolves the flag — policy and
+dispatcher wrappers (``with_pallas_map``/``with_pallas_balance``/
+``with_pallas_phase1``) resolve it at construction time and bake the
+result into a frozen field, so no host effect (``os.environ`` read)
+ever runs inside a jitted ``select``/``dispatch`` body (analyzer rule
+JD003).
+"""
+from __future__ import annotations
+
+import os
+
+#: Environment override: "1" forces interpret mode, "0" forces compiled.
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """Should Pallas kernels run under the interpreter on this host?
+
+    ``REPRO_PALLAS_INTERPRET`` wins when set to ``"0"`` or ``"1"``
+    (anything else raises — a silent typo would silently change which
+    program runs). Otherwise autodetect: compiled kernels on TPU/GPU
+    default backends, the interpreter everywhere else (CPU).
+    """
+    env = os.environ.get(ENV_VAR)
+    if env is not None:
+        if env not in ("0", "1"):
+            raise ValueError(
+                f"{ENV_VAR} must be '0' or '1', got {env!r}"
+            )
+        return env == "1"
+    import jax
+
+    return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")

@@ -3,18 +3,29 @@
 Contract matches repro.core.heuristics.elare_phase1's ``phase1_impl`` hook:
   phase1_map(avail, eet_rows, deadline, p_dyn, pending, qfree)
     -> (best_m (N,), best_ec (N,))
+
+``interpret=None`` (the default) resolves the backend via
+:func:`repro.kernels.pallas_backend.default_interpret`: compiled Mosaic
+on TPU/GPU, the Pallas interpreter on CPU, overridable with
+``REPRO_PALLAS_INTERPRET``. The resolution happens per call here (this
+wrapper is invoked from inside a nominator), so callers on the jitted
+path should resolve the flag themselves once and pass it explicitly —
+``with_pallas_phase1`` does.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.pallas_backend import default_interpret
 from repro.kernels.phase1_map.kernel import BLOCK_N, phase1_map_padded
 
 _LANE = 128
 
 
 def phase1_map(avail, eet_rows, deadline, p_dyn, pending, qfree, *,
-               interpret: bool = True):
+               interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
     N, M = eet_rows.shape
     Np = -(-N // BLOCK_N) * BLOCK_N
     Mp = max(_LANE, -(-M // _LANE) * _LANE)

@@ -44,12 +44,22 @@ def sub_jaxprs(eqn) -> Iterator[Tuple[object, int]]:
     ``while`` bodies count once (a conservative static bound — our stacks
     carry no unbounded model loops); every ``cond`` branch counts once
     (both branches are traced and compiled); ``pjit``/``remat``/
-    ``custom_vjp`` call primitives pass straight through.
+    ``custom_vjp`` call primitives pass straight through; a
+    ``pallas_call`` yields its kernel jaxpr with the grid size (product
+    of grid dims) as the multiplier — the kernel body runs once per grid
+    step, so FLOP/byte models see the whole tiled sweep.
     """
     name = eqn.primitive.name
     p = eqn.params
     if name == "scan":
         yield p["jaxpr"], int(p["length"])
+        return
+    if name == "pallas_call":
+        grid = getattr(p.get("grid_mapping"), "grid", ())
+        steps = 1
+        for g in grid:
+            steps *= int(g)
+        yield p["jaxpr"], steps
         return
     if name == "while":
         yield p["body_jaxpr"], 1
